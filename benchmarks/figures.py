@@ -1,0 +1,206 @@
+"""Per-figure benchmark functions (one per paper table/figure).
+
+Each returns a list of CSV rows ``(name, us_per_call, derived)`` per
+the harness contract; ``benchmarks.run`` drives them all.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+# --------------------------------------------------------------------------
+# Fig. 1a — linear-op latency vs token count (measured, CPU backend)
+# --------------------------------------------------------------------------
+
+def fig1a_linear_latency() -> List[Row]:
+    from repro.configs import get_config
+    from repro.core.profiler import OfflineProfiler
+    cfg = get_config("llama3.1-8b").reduced(layers=2, d_model=512, vocab=1024)
+    prof = OfflineProfiler(cfg)
+    rows: List[Row] = []
+    samples = prof.profile_linear((1, 4, 16, 64, 256))
+    t1 = samples[0][1]
+    for n, t in samples:
+        rows.append((f"fig1a/linear_tokens={int(n)}", t * 1e6 / cfg.num_layers,
+                     f"flat_vs_1tok={t / t1:.2f}x"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Fig. 1b — device vs host attention latency by batch (measured)
+# --------------------------------------------------------------------------
+
+def fig1b_attention_latency() -> List[Row]:
+    from repro.kernels.ref import decode_attention_ref
+    from repro.kernels.ops import host_paged_attention_numpy
+    rows: List[Row] = []
+    h, kv, d, ctx, ps = 16, 16, 128, 1024, 64
+    dev_fn = jax.jit(decode_attention_ref)
+    for batch in (1, 4, 16, 32):
+        q = jnp.ones((batch, h, d), jnp.float32)
+        k = jnp.ones((batch, ctx, kv, d), jnp.bfloat16)
+        lengths = jnp.full((batch,), ctx, jnp.int32)
+        jax.block_until_ready(dev_fn(q, k, k, lengths))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = dev_fn(q, k, k, lengths)
+        jax.block_until_ready(out)
+        t_dev = (time.perf_counter() - t0) / 5
+
+        pages_per = ctx // ps
+        pages = np.ones((2, batch * pages_per, ps, kv, d), np.float32)
+        pt = np.arange(batch * pages_per, dtype=np.int32).reshape(batch, -1)
+        qn = np.ones((batch, h, d), np.float32)
+        ln = np.full((batch,), ctx, np.int32)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            host_paged_attention_numpy(qn, pages, pt, ln, page_size=ps)
+        t_host = (time.perf_counter() - t0) / 3
+        rows.append((f"fig1b/device_attn_b={batch}", t_dev * 1e6, ""))
+        rows.append((f"fig1b/host_attn_b={batch}", t_host * 1e6,
+                     f"host/device={t_host / t_dev:.1f}x"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Fig. 5 — throughput vs baselines (simulator, paper-calibrated platforms)
+# --------------------------------------------------------------------------
+
+def fig5_throughput() -> List[Row]:
+    from repro.configs import get_config
+    from repro.serving import workloads
+    from repro.serving.simulator import compare_schedulers
+    rows: List[Row] = []
+    cases = [("t4", "llama2-7b", "osc", dict(output_mean_override=400)),
+             ("a10", "llama3.1-8b", "azure-conv", {}),
+             ("a10", "llama3.1-8b", "livebench", {}),
+             ("a10", "llama3.1-8b", "dolphin-r1", {})]
+    for platform, arch, wl, kw in cases:
+        cfg = get_config(arch)
+        res = compare_schedulers(
+            cfg, platform,
+            lambda cfg=cfg, wl=wl, kw=kw: workloads.generate(
+                wl, num_requests=120, vocab=cfg.vocab_size, seed=1, **kw),
+            schedulers=("gpu_only", "neo", "apex", "apex+"))
+        base = res["gpu_only"].throughput
+        neo = res["neo"].throughput
+        for sched, r in res.items():
+            rows.append((
+                f"fig5/{platform}/{wl}/{sched}",
+                1e6 / max(r.throughput, 1e-9),
+                f"thr={r.throughput:.1f}tok/s vs_vllm={r.throughput/base:.2f} "
+                f"vs_neo={r.throughput/neo:.2f}"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Fig. 6 — average per-token latency (simulator, open loop)
+# --------------------------------------------------------------------------
+
+def fig6_latency() -> List[Row]:
+    from repro.configs import get_config
+    from repro.serving import workloads
+    from repro.serving.simulator import compare_schedulers
+    rows: List[Row] = []
+    for platform, arch, rate in (("t4", "llama2-7b", 0.25),
+                                 ("a10", "llama3.1-8b", 2.0)):
+        cfg = get_config(arch)
+        res = compare_schedulers(
+            cfg, platform,
+            lambda cfg=cfg, rate=rate: workloads.generate(
+                "osc", num_requests=100, vocab=cfg.vocab_size, seed=2,
+                arrival_rate=rate),
+            schedulers=("gpu_only", "neo", "apex"))
+        for sched, r in res.items():
+            rows.append((f"fig6/{platform}/{sched}",
+                         r.avg_per_token_latency * 1e6,
+                         f"p99={r.p99_per_token_latency*1e3:.0f}ms"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Fig. 7 — relative throughput vs average output length (input 1000)
+# --------------------------------------------------------------------------
+
+def fig7_output_length() -> List[Row]:
+    from repro.configs import get_config
+    from repro.serving import workloads
+    from repro.serving.simulator import compare_schedulers
+    rows: List[Row] = []
+    cfg = get_config("llama3.1-8b")
+    for out_len in (50, 100, 200, 300, 500, 700):
+        res = compare_schedulers(
+            cfg, "a10",
+            lambda out_len=out_len: workloads.fixed_length_trace(
+                num_requests=100, prompt_len=1000, output_len=out_len,
+                vocab=cfg.vocab_size),
+            schedulers=("gpu_only", "neo", "apex"))
+        base = res["gpu_only"].throughput
+        for sched in ("neo", "apex"):
+            r = res[sched]
+            rows.append((f"fig7/out={out_len}/{sched}",
+                         1e6 / max(r.throughput, 1e-9),
+                         f"rel_to_gpu_only={r.throughput/base:.3f}"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Ineq. 6 regime map (§3.2): threshold vs measured N_G/N_C per platform
+# --------------------------------------------------------------------------
+
+def ineq_regime() -> List[Row]:
+    from repro.configs import get_config
+    from repro.core import analytical
+    from repro.core.perf_model import analytic_model
+    rows: List[Row] = []
+    for platform, arch in (("t4", "llama2-7b"), ("a10", "llama3.1-8b"),
+                           ("v5e", "llama3.1-8b")):
+        pm = analytic_model(platform, get_config(arch))
+        for batch in (2, 16, 64):
+            t = pm.timings(batch, 1024)
+            thr = analytical.ineq6_threshold(t)
+            ratio = t.n_g / t.n_c
+            rows.append((
+                f"ineq6/{platform}/{arch}/b={batch}", thr * 1e6,
+                f"N_G/N_C={ratio:.1f} thresh={thr:.1f} "
+                f"pipelining={'yes' if ratio < thr else 'no'}"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Real measured overlap: engine wall time vs host-attention busy time
+# --------------------------------------------------------------------------
+
+def overlap_microbench() -> List[Row]:
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import Engine, EngineConfig
+    from repro.serving.request import make_synthetic_request
+    cfg = get_config("llama3.1-8b").reduced(layers=4, d_model=128, vocab=256)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+    for offload in (False, True):
+        eng = Engine(cfg, params, EngineConfig(
+            device_slots=2, host_slots=6, cache_len=96,
+            enable_offload=offload))
+        reqs = [make_synthetic_request(rng, prompt_len=12, output_len=12,
+                                       vocab=cfg.vocab_size)
+                for _ in range(8)]
+        t0 = time.perf_counter()
+        stats = eng.run(reqs)
+        wall = time.perf_counter() - t0
+        eng.shutdown()
+        total = stats.device_tokens + stats.host_tokens
+        rows.append((
+            f"overlap/engine_offload={offload}", wall / max(total, 1) * 1e6,
+            f"tok/s={total/wall:.1f} host_tok={stats.host_tokens} "
+            f"host_busy={stats.host_busy_time:.2f}s of {wall:.2f}s wall"))
+    return rows

@@ -1,0 +1,110 @@
+"""Roofline analysis from the dry-run artifacts (deliverable (g)).
+
+Per (arch x shape x mesh):
+
+    compute term    = FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HBM bytes / (chips x 819 GB/s)
+    collective term = collective bytes per device / 50 GB/s per link
+
+FLOPs/bytes come from the analytic shape model (launch/analysis.py) —
+XLA's cost_analysis counts scan bodies once, so it is recorded only as
+a cross-check lower bound.  Collective bytes come from the compiled
+per-device HLO with while-loop trip scaling.  The dominant term is the
+bottleneck; ``mfu_bound`` = compute / dominant is the roofline-implied
+ceiling on MFU for that cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_records(results_dir: str = RESULTS_DIR) -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    if "skipped" in rec or "error" in rec or "analytic" not in rec:
+        return None
+    a = rec["analytic"]
+    chips = a["chips"]
+    flops_dev = a["flops_global"] / chips
+    bytes_dev = a["hbm_bytes_global"] / chips
+    coll_dev = rec["collectives"]["total_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])
+    mfu_bound = t_compute / max(dominant[1], 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "variant": rec.get("variant", "baseline"), "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant[0], "mfu_bound": mfu_bound,
+        "model_flops_ratio": a["model_flops_global"] / max(a["flops_global"],
+                                                           1e-30),
+        "mem_per_device_gb": rec["memory"]["total_per_device"] / 1e9,
+        "fits_v5e": rec["memory"]["total_per_device"] <= 16e9,
+        "cost_analysis_flops_dev": rec["cost_analysis"]["flops"],
+        "compile_s": rec["compile_s"],
+    }
+
+
+def table(records: Optional[List[dict]] = None, mesh: str = "16x16",
+          variant: Optional[str] = None) -> List[dict]:
+    records = records if records is not None else load_records()
+    rows = []
+    for rec in records:
+        if rec.get("mesh") != mesh:
+            continue
+        if variant and rec.get("variant") != variant:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return sorted(rows, key=lambda r: (r["arch"], r["shape"], r["variant"]))
+
+
+def render(rows: List[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'var':8s} {'compute':>9s} "
+           f"{'memory':>9s} {'collect':>9s} {'dom':>10s} {'MFUmax':>7s} "
+           f"{'6ND/F':>6s} {'GB/dev':>7s} {'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['variant'][:8]:8s} "
+            f"{r['t_compute_s']*1e3:8.2f}m {r['t_memory_s']*1e3:8.2f}m "
+            f"{r['t_collective_s']*1e3:8.2f}m {r['dominant']:>10s} "
+            f"{r['mfu_bound']*100:6.1f}% {r['model_flops_ratio']:6.2f} "
+            f"{r['mem_per_device_gb']:7.1f} {'y' if r['fits_v5e'] else 'N':>5s}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = table()
+    print(render(rows))
+    skips = [r for r in load_records()
+             if "skipped" in r and r.get("mesh") == "16x16"]
+    if skips:
+        print("\nskipped cells:")
+        for r in skips:
+            print(f"  {r['arch']:22s} {r['shape']:12s} {r['skipped']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""The paper's mechanism, visualized: Asynchronous Overlap cohort
+windows for a hybrid model (one attention layer per 8-layer period —
+the host window spans the 7 mamba layers between attention layers).
+
+    PYTHONPATH=src python examples/offload_demo.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.overlap_engine import Cohort, OverlapController
+
+cfg = get_config("jamba-1.5-large-398b").reduced(layers=16)
+ctl = OverlapController(cfg)
+print(f"{cfg.name}: {cfg.num_layers} layers, attention at "
+      f"{cfg.attn_layer_indices}")
+print(f"one host token takes {ctl.iterations_per_token} engine iterations\n")
+cohort = Cohort(slot_rids=[0], positions=np.zeros(1, np.int64),
+                x_carry=jnp.zeros((1, cfg.d_model)),
+                attn_in=jnp.zeros((1, cfg.num_heads, cfg.resolved_head_dim)))
+for it in range(ctl.iterations_per_token):
+    io = ctl.host_io(cohort)
+    emit = ctl.emit_layer(cohort)
+    print(f"iter {it}: consume host attn for layer "
+          f"{int(io.consume_layer):3d} | commit layers "
+          f"[{int(io.window_start)}, {int(io.window_end)}) | "
+          f"emit QKV at layer {emit}"
+          + ("  <- token completes" if ctl.completes_token(cohort) else ""))
+    ctl.advance(cohort)

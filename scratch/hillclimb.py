@@ -1,0 +1,52 @@
+"""Perf hillclimb: hypothesis -> change -> re-lower -> measure.
+Each run saved to results/perf/<cell>__<label>.json."""
+import json, os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+sys.path.insert(0, "src")
+from repro.launch.dryrun import dryrun_cell
+
+RUNS = [
+    # Cell A: llama3-405b train_4k — worst memory residency (840 GB/dev)
+    ("A0", "llama3-405b", "train_4k", "baseline", {}),
+    ("A1", "llama3-405b", "train_4k", "baseline", {"loss_chunk": 512}),
+    ("A2", "llama3-405b", "train_4k", "baseline", {"seq_parallel": True}),
+    ("A3", "llama3-405b", "train_4k", "baseline",
+     {"loss_chunk": 512, "seq_parallel": True}),
+    # Cell B: kimi-k2 decode_32k — most collective-bound
+    ("B0", "kimi-k2-1t-a32b", "decode_32k", "baseline", {}),
+    ("B1", "kimi-k2-1t-a32b", "decode_32k", "baseline", {"expert_shard": "ep"}),
+    # Cell C: internlm2-20b decode_32k overlap — the paper's technique
+    ("C0", "internlm2-20b", "decode_32k", "overlap", {}),
+    ("C1", "internlm2-20b", "decode_32k", "overlap", {"host_fraction": 0.5}),
+    ("C2", "internlm2-20b", "decode_32k", "overlap", {"host_fraction": 0.75}),
+    ("C3", "internlm2-20b", "decode_32k", "overlap",
+     {"host_fraction": 0.5, "weight_stationary": True}),
+    ("B2", "kimi-k2-1t-a32b", "decode_32k", "baseline",
+     {"expert_shard": "ep"}),
+    ("D0", "internlm2-20b", "decode_32k", "baseline", {}),
+    ("D1", "internlm2-20b", "decode_32k", "baseline",
+     {"weight_stationary": True}),
+    ("A4", "llama3-405b", "train_4k", "baseline",
+     {"loss_chunk": 512, "seq_parallel": True, "accum_steps": 8}),
+    ("A5", "llama3-405b", "train_4k", "baseline",
+     {"loss_chunk": 512, "seq_parallel": True, "accum_steps": 16}),
+]
+
+which = sys.argv[1:] or [r[0] for r in RUNS]
+for label, arch, shape, variant, options in RUNS:
+    if label not in which:
+        continue
+    print(f"=== {label}: {arch}/{shape}/{variant} {options}", flush=True)
+    try:
+        rec = dryrun_cell(arch, shape, variant=variant, options=options)
+        rec["label"] = label
+    except Exception as e:
+        import traceback
+        rec = {"label": label, "error": str(e), "tb": traceback.format_exc()}
+        print("ERROR:", e)
+    with open(f"results/perf/{label}__{arch}__{shape}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    if "memory" in rec:
+        print(f"  mem/dev {rec['memory']['total_per_device']/1e9:.1f} GB | "
+              f"colls {rec['collectives']['total_bytes']/1e6:.1f} MB | "
+              f"compile {rec['compile_s']}s", flush=True)

@@ -1,0 +1,270 @@
+"""Asynchronous Overlap runtime (paper §3.3 + §4.2).
+
+Two pieces:
+
+  * ``OverlapController`` — the deferred-synchronization state machine.
+    A *cohort* of host-offloaded requests advances one attention layer
+    per engine iteration: it consumes the host-computed attention for
+    layer k (produced during the previous iteration), commits every
+    device-computable layer in [k, next_attn(k)), and emits fresh
+    Q/K/V at next_attn(k).  Layers between attention layers (Mamba/FFN
+    in hybrids) commit on-device in the same window — the host stalls
+    only attention.  A token completes every (num_attn_layers + 1)
+    iterations.
+  * ``HostExecutor`` — the host attention thread (the paper's
+    Pybind11/GIL-release runtime, rendered as a Python worker whose
+    numpy/BLAS and jax-cpu kernels release the GIL natively).  It owns
+    the host paged KV pool, appends each emitted K/V, computes paged
+    attention, and double-buffers results for the next iteration.
+
+``scratch/validate_overlap.py``-style equivalence (host-offloaded rows
+produce bit-identical tokens to device rows) is enforced in
+tests/test_overlap.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import host_paged_attention_numpy
+from repro.models.config import ModelConfig
+from repro.models.kv_cache import PagedKVPool
+from repro.models.transformer import HostIO
+
+
+@dataclasses.dataclass
+class Cohort:
+    """A set of host-offloaded requests progressing in lockstep.
+
+    Rows are *stable host slots*: slot i occupies unified-batch row
+    device_slots + i, and its recurrent states live at that row in the
+    device state — so membership may only change at token boundaries
+    (attn_ptr == -1), and empty slots carry rid -1 with row_valid False.
+    """
+
+    slot_rids: List[int]             # (Bc,) request id per slot, -1 = empty
+    positions: np.ndarray            # (Bc,) position of the token in flight
+    x_carry: jnp.ndarray             # (Bc, d) residual carry
+    attn_in: jnp.ndarray             # (Bc, H, D) host result for consume layer
+    attn_ptr: int = -1               # index into attn_layers; -1 = token start
+
+    @property
+    def valid_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_rids) if r >= 0]
+
+    @property
+    def request_ids(self) -> List[int]:
+        return [r for r in self.slot_rids if r >= 0]
+
+    @property
+    def size(self) -> int:
+        return len(self.request_ids)
+
+    def row_valid(self) -> np.ndarray:
+        return np.asarray([r >= 0 for r in self.slot_rids], bool)
+
+
+class OverlapController:
+    """Computes per-iteration HostIO windows and advances cohorts."""
+
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+        self.attn_layers: Tuple[int, ...] = cfg.attn_layer_indices
+        if not self.attn_layers:
+            raise ValueError(
+                f"{cfg.name}: no attention layers — APEX offload inapplicable")
+        self.num_layers = cfg.num_layers
+
+    @property
+    def iterations_per_token(self) -> int:
+        return len(self.attn_layers) + 1
+
+    def host_io(self, cohort: Cohort) -> HostIO:
+        a = self.attn_layers
+        if cohort.attn_ptr < 0:
+            consume, ws, we = -1, 0, a[0]
+            emit = a[0]
+        else:
+            consume = a[cohort.attn_ptr]
+            ws = consume
+            nxt = (a[cohort.attn_ptr + 1]
+                   if cohort.attn_ptr + 1 < len(a) else self.num_layers)
+            we = nxt
+            emit = nxt if cohort.attn_ptr + 1 < len(a) else -1
+        return HostIO(
+            x_carry=cohort.x_carry,
+            positions=jnp.asarray(cohort.positions, jnp.int32),
+            attn_in=cohort.attn_in,
+            consume_layer=jnp.int32(consume), emit_layer=jnp.int32(emit),
+            window_start=jnp.int32(ws), window_end=jnp.int32(we),
+            row_valid=jnp.asarray(cohort.row_valid()))
+
+    def emit_layer(self, cohort: Cohort) -> int:
+        """Absolute layer whose QKV this iteration emits (-1 = none)."""
+        a = self.attn_layers
+        if cohort.attn_ptr < 0:
+            return a[0]
+        if cohort.attn_ptr + 1 < len(a):
+            return a[cohort.attn_ptr + 1]
+        return -1
+
+    def completes_token(self, cohort: Cohort) -> bool:
+        """True if this iteration commits the final layer window."""
+        return cohort.attn_ptr == len(self.attn_layers) - 1
+
+    def advance(self, cohort: Cohort) -> None:
+        cohort.attn_ptr = (-1 if self.completes_token(cohort)
+                           else cohort.attn_ptr + 1)
+
+    def layer_progress(self, cohort: Cohort) -> int:
+        """Layers completed for the in-flight token (scheduler rule 4)."""
+        if cohort.attn_ptr < 0:
+            return 0
+        a = self.attn_layers
+        return (a[cohort.attn_ptr + 1]
+                if cohort.attn_ptr + 1 < len(a) else self.num_layers)
+
+
+@dataclasses.dataclass
+class _Job:
+    job_id: int
+    layer: int                       # absolute layer index of the QKV
+    request_ids: List[int]
+    q: np.ndarray                    # (Bc, H, D)
+    k: np.ndarray                    # (Bc, KV, D)
+    v: np.ndarray
+    positions: np.ndarray            # (Bc,) token positions
+
+
+class HostExecutor:
+    """Background host-attention worker owning the paged KV pool.
+
+    ``submit`` is non-blocking: the engine dispatches the next device
+    step while the worker computes — the asynchronous overlap.
+    ``result`` blocks only if the host is genuinely the straggler, in
+    which case the engine's re-check semantics (paper §3.4 end) apply.
+    """
+
+    def __init__(self, cfg: ModelConfig, pool: PagedKVPool,
+                 *, synchronous: bool = False) -> None:
+        self.cfg = cfg
+        self.pool = pool
+        self.page_size = pool.page_size
+        self.synchronous = synchronous
+        self._results: Dict[int, np.ndarray] = {}
+        self._lock = threading.Lock()
+        self._done = threading.Condition(self._lock)
+        self._queue: "queue.Queue[Optional[_Job]]" = queue.Queue()
+        self._busy_time = 0.0
+        self._worker: Optional[threading.Thread] = None
+        if not synchronous:
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    # --- layer index mapping -------------------------------------------------
+    def _pool_layer(self, abs_layer: int) -> int:
+        """Host pool indexes attention layers densely (0..n_attn-1)."""
+        return self.cfg.attn_layer_indices.index(abs_layer)
+
+    # --- API -------------------------------------------------------------------
+    def submit(self, job_id: int, layer: int, request_ids: Sequence[int],
+               q, k, v, positions) -> None:
+        job = _Job(job_id, layer, list(request_ids),
+                   np.asarray(q, np.float32), np.asarray(k, np.float32),
+                   np.asarray(v, np.float32), np.asarray(positions))
+        if self.synchronous:
+            self._execute(job)
+        else:
+            self._queue.put(job)
+
+    def result(self, job_id: int, timeout: Optional[float] = None
+               ) -> np.ndarray:
+        with self._done:
+            while job_id not in self._results:
+                if not self._done.wait(timeout):
+                    raise TimeoutError(f"host job {job_id} not ready")
+            return self._results.pop(job_id)
+
+    def poll(self, job_id: int) -> Optional[np.ndarray]:
+        """Non-blocking readiness check (the paper's GPU re-check)."""
+        with self._lock:
+            return self._results.pop(job_id, None)
+
+    def migrate_prompt(self, request_id: int, per_layer_kv) -> None:
+        """Move a prefilled request's KV to the host pool.
+
+        per_layer_kv: list over attention layers of (k, v) arrays of
+        shape (T, KV, D).
+        """
+        t = per_layer_kv[0][0].shape[0]
+        self.pool.allocate(request_id, t)
+        n_layers = len(per_layer_kv)
+        for li, (k, v) in enumerate(per_layer_kv):
+            self.pool.write_prompt(request_id, li, np.asarray(k, np.float32),
+                                   np.asarray(v, np.float32),
+                                   advance=(li == n_layers - 1))
+
+    def free(self, request_id: int) -> None:
+        self.pool.free(request_id)
+
+    def shutdown(self) -> None:
+        if self._worker is not None:
+            self._queue.put(None)
+            self._worker.join(timeout=5)
+
+    @property
+    def busy_time(self) -> float:
+        return self._busy_time
+
+    # --- worker -------------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            self._execute(job)
+
+    def _execute(self, job: _Job) -> None:
+        import time
+        t0 = time.perf_counter()
+        li = self._pool_layer(job.layer)
+        bc = len(job.request_ids)
+        # append the fresh token's K/V for this layer (length advances
+        # only when the token's final layer is written — the shared
+        # counter must reflect *completed* positions)
+        for i, rid in enumerate(job.request_ids):
+            pos = int(job.positions[i])
+            chain = self.pool.page_tables[(rid, li)]
+            page_idx = pos // self.page_size
+            if page_idx >= len(chain):
+                self.pool.extend(rid, pos + 1 - self.pool.lengths[rid])
+                chain = self.pool.page_tables[(rid, li)]
+            page = chain[page_idx]
+            slot = pos % self.page_size
+            self.pool.pages[0, page, slot] = job.k[i]
+            self.pool.pages[1, page, slot] = job.v[i]
+
+        # paged attention over [0, pos] inclusive
+        max_pages = max(len(self.pool.page_tables[(rid, li)])
+                        for rid in job.request_ids)
+        pt = np.zeros((bc, max_pages), np.int32)
+        for i, rid in enumerate(job.request_ids):
+            chain = self.pool.page_tables[(rid, li)]
+            pt[i, :len(chain)] = chain
+        lengths = job.positions.astype(np.int32) + 1
+        out = host_paged_attention_numpy(job.q, self.pool.pages, pt, lengths,
+                                         page_size=self.page_size)
+        with self._done:
+            self._results[job.job_id] = out
+            self._busy_time += time.perf_counter() - t0
+            self._done.notify_all()
+
+    def advance_token(self, request_ids: Sequence[int]) -> None:
+        """Bump pool lengths after a cohort completes a token."""
+        for rid in request_ids:
+            self.pool.lengths[rid] += 1

@@ -1,0 +1,150 @@
+"""Offline profiler (paper §3.1): measures the ops the scheduler
+predicts — device linear time vs tokens (Fig. 1a), device vs host
+attention vs batch (Fig. 1b), host attention rate, transfer cost —
+and emits a ``TablePerfModel``.
+
+On this container "device" is the jax CPU backend and "host" the
+threaded numpy tier, so absolute numbers are shape-relative; on a real
+TPU host the same harness profiles the genuine tiers.  All benchmark
+figures that need real measurements use this module.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perf_model import ModelCosts, TablePerfModel
+from repro.kernels.ops import host_paged_attention_numpy
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp, qkv_project, rope_frequencies
+
+
+def _time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+class OfflineProfiler:
+    """Profiles one model config on the current backends."""
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0) -> None:
+        self.cfg = cfg
+        self.costs = ModelCosts.from_config(cfg)
+        key = jax.random.PRNGKey(seed)
+        # one layer's worth of linear weights is enough — scale by depth
+        from repro.models.transformer import entry_init
+        from repro.models.config import BlockKind
+        self.layer_params = entry_init(key, cfg, BlockKind.ATTN, 0)
+        self.inv_freq = rope_frequencies(cfg.resolved_head_dim, cfg.rope_theta)
+
+    # --- ops under test -----------------------------------------------------
+    def _linear_ops(self, x, positions):
+        cfg = self.cfg
+        q, k, v = qkv_project(self.layer_params["attn"], x, cfg.num_heads,
+                              cfg.num_kv_heads, cfg.resolved_head_dim,
+                              positions, self.inv_freq)
+        f = mlp(self.layer_params["ffn"], x) if "ffn" in self.layer_params else x
+        return q, k, v, f
+
+    def profile_linear(self, token_counts: Sequence[int]
+                       ) -> List[Tuple[float, float]]:
+        """Fig. 1a: one layer's linear ops latency vs token count,
+        scaled to the full stack."""
+        cfg = self.cfg
+        fn = jax.jit(self._linear_ops)
+        out = []
+        for n in token_counts:
+            x = jnp.ones((n, 1, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+            pos = jnp.zeros((n, 1), jnp.int32)
+            t = _time_fn(fn, x, pos)
+            out.append((float(n), t * cfg.num_layers))
+        return out
+
+    def profile_gatt(self, kv_positions: Sequence[int], context: int = 1024
+                     ) -> List[Tuple[float, float]]:
+        """Device decode attention latency vs total KV positions
+        (batch x context), scaled to all attention layers."""
+        from repro.kernels.ref import decode_attention_ref
+        cfg = self.cfg
+        fn = jax.jit(decode_attention_ref)
+        out = []
+        for total in kv_positions:
+            batch = max(1, total // context)
+            q = jnp.ones((batch, cfg.num_heads, cfg.resolved_head_dim),
+                         jnp.float32)
+            k = jnp.ones((batch, context, cfg.num_kv_heads,
+                          cfg.resolved_head_dim), jnp.bfloat16)
+            v = k
+            lengths = jnp.full((batch,), context, jnp.int32)
+            t = _time_fn(fn, q, k, v, lengths)
+            out.append((float(batch * context),
+                        t * self.costs.num_attn_layers))
+        return out
+
+    def profile_catt(self, kv_positions: Sequence[int], context: int = 1024,
+                     page_size: int = 64) -> List[Tuple[float, float]]:
+        """Host paged attention latency vs KV positions (per layer),
+        scaled to all attention layers."""
+        cfg = self.cfg
+        out = []
+        for total in kv_positions:
+            batch = max(1, total // context)
+            pages_per = -(-context // page_size)
+            npages = batch * pages_per
+            pages = np.ones((2, npages, page_size, cfg.num_kv_heads,
+                             cfg.resolved_head_dim), np.float32)
+            pt = np.arange(npages, dtype=np.int32).reshape(batch, pages_per)
+            lengths = np.full((batch,), context, np.int32)
+            q = np.ones((batch, cfg.num_heads, cfg.resolved_head_dim),
+                        np.float32)
+            t0 = time.perf_counter()
+            iters = 3
+            for _ in range(iters):
+                host_paged_attention_numpy(q, pages, pt, lengths,
+                                           page_size=page_size)
+            t = (time.perf_counter() - t0) / iters
+            out.append((float(batch * context),
+                        t * self.costs.num_attn_layers))
+        return out
+
+    def profile_transfer(self, sizes: Sequence[int]
+                         ) -> List[Tuple[float, float]]:
+        """device_put/get round-trip cost vs bytes (the PCIe stand-in)."""
+        out = []
+        for n in sizes:
+            a = np.ones((n // 4,), np.float32)
+            t0 = time.perf_counter()
+            iters = 5
+            for _ in range(iters):
+                buf = jax.device_put(a)
+                jax.block_until_ready(buf)
+                _ = np.asarray(buf)
+            out.append((float(n), (time.perf_counter() - t0) / iters))
+        return out
+
+    # --- entry point -----------------------------------------------------------
+    def run(self, *, token_counts=(1, 8, 32, 128, 256),
+            kv_positions=(1024, 8192, 32768, 131072),
+            transfer_sizes=(1 << 16, 1 << 20, 1 << 24)) -> TablePerfModel:
+        tables: Dict[str, List[Tuple[float, float]]] = {
+            "linear": self.profile_linear(token_counts),
+            "gatt": self.profile_gatt(kv_positions),
+            "catt": self.profile_catt(kv_positions),
+            "transfer": self.profile_transfer(transfer_sizes),
+        }
+        # prefill table: reuse the linear table (prefill is linear-dominated
+        # at the profiled scales; attention quadratic term added analytically)
+        tables["prefill"] = tables["linear"]
+        return TablePerfModel(tables,
+                              kv_bytes_per_pos=self.costs.kv_bytes_per_pos,
+                              num_attn_layers=self.costs.num_attn_layers)

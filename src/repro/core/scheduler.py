@@ -1,0 +1,145 @@
+"""APEX scheduling algorithm (paper Algorithm 1).
+
+Four rules, verbatim from §3.4:
+
+  1. **GPU-first** — the host tier is involved only when device memory
+     cannot hold the KV cache of all admitted requests.
+  2. **Decode-only optimization** — with no prefill present, evaluate
+     Inequality (5)/(6); pick Asymmetric Pipelining iff it holds, else
+     Asynchronous Overlap.
+  3. **Mixed workload handling** — with prefill present, use the
+     widened window N_Ctotal = N_C (T_glinear_pref + T_glinear +
+     T_gatt_pref).
+  4. **Partial-progress prioritization** — offloaded requests that
+     already completed i layers are preferred into the CPU sub-batch
+     (they cost only (L - i) * T_glinear more).
+
+The scheduler is deliberately pure: it consumes queue snapshots +
+profiled ``Timings`` and returns a ``Decision``; the serving engine
+owns all state mutation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, List, Optional, Sequence
+
+from repro.core import analytical
+from repro.core.analytical import Timings
+
+
+class StrategyKind(str, enum.Enum):
+    GPU_ONLY = "gpu_only"
+    ASYM_PIPELINE = "asym_pipeline"
+    ASYNC_OVERLAP = "async_overlap"
+
+
+@dataclasses.dataclass
+class Decision:
+    strategy: StrategyKind
+    prefill: List[Any]
+    decode_gpu: List[Any]
+    decode_cpu: List[Any]
+    # Asymmetric Pipelining partition (paper Fig. 2): sub-batch 1 =
+    # prefill + device decodes (+ host decodes that fit), sub-batch 2 =
+    # host-only decodes.
+    sub_batch_1: Optional[List[Any]] = None
+    sub_batch_2: Optional[List[Any]] = None
+    reason: str = ""
+
+
+def _progress(req: Any) -> int:
+    """Layers already completed by an offloaded request (rule 4)."""
+    return getattr(req, "layer_progress", 0)
+
+
+@dataclasses.dataclass
+class ApexScheduler:
+    """Algorithm 1 over profiled timings.
+
+    ``perf_model`` must expose ``timings(decode_batch, mean_context,
+    prefill_tokens)`` (see repro.core.perf_model).
+    ``host_min_ratio`` is the §4.2 admission threshold: host cohorts
+    smaller than ratio*device_batch don't amortize thread overheads.
+    """
+
+    perf_model: Any
+    host_min_ratio: float = 0.0
+    max_pipeline_sub_batch: int = 256
+
+    def schedule(self, prefill: Sequence[Any], decode_gpu: Sequence[Any],
+                 decode_cpu: Sequence[Any], *, mean_context: float,
+                 prefill_tokens: int = 0) -> Decision:
+        prefill = list(prefill)
+        decode_gpu = list(decode_gpu)
+        decode_cpu = list(decode_cpu)
+
+        # Rule 1 fallout: nothing designated for the host => GPU-only.
+        if not decode_cpu:
+            return Decision(StrategyKind.GPU_ONLY, prefill, decode_gpu, [],
+                            reason="no host-offloaded requests")
+
+        batch = max(len(decode_gpu), 1)
+        t = self.perf_model.timings(batch, mean_context,
+                                    prefill_tokens=prefill_tokens)
+
+        if not prefill:
+            # Rule 2 — decode-only: Inequality (5).
+            if analytical.pipelining_beneficial_decode_only(t):
+                return self._pipeline_decision(prefill, decode_gpu,
+                                               decode_cpu, t,
+                                               reason="Ineq(5) holds")
+            return Decision(StrategyKind.ASYNC_OVERLAP, prefill, decode_gpu,
+                            decode_cpu,
+                            reason=f"Ineq(6): N_G/N_C={t.n_g / t.n_c:.1f} >= "
+                                   f"{analytical.ineq6_threshold(t):.1f}")
+
+        # Rule 3 — mixed: widened host window.
+        if analytical.pipelining_beneficial_mixed(t):
+            return self._pipeline_decision(prefill, decode_gpu, decode_cpu, t,
+                                           reason="mixed Ineq holds")
+        return Decision(StrategyKind.ASYNC_OVERLAP, prefill, decode_gpu,
+                        decode_cpu, reason="mixed Ineq fails")
+
+    def _pipeline_decision(self, prefill, decode_gpu, decode_cpu,
+                           t: Timings, reason: str) -> Decision:
+        # Rule 4 — partially processed offloaded requests go first into
+        # the CPU-only sub-batch.
+        cpu_sorted = sorted(decode_cpu, key=_progress, reverse=True)
+        sb2 = cpu_sorted[: self.max_pipeline_sub_batch]
+        overflow = cpu_sorted[self.max_pipeline_sub_batch:]
+        sb1 = prefill + decode_gpu + overflow
+        return Decision(StrategyKind.ASYM_PIPELINE, prefill, decode_gpu,
+                        decode_cpu, sub_batch_1=sb1, sub_batch_2=sb2,
+                        reason=reason)
+
+
+@dataclasses.dataclass
+class AdmissionController:
+    """Rule 1 (GPU-first) at request admission.
+
+    New requests claim device KV slots while they fit; once the device
+    budget is exhausted, requests are designated host-offloaded
+    (provided the host pool can hold them — else they wait).
+    """
+
+    device_kv_budget_tokens: int
+    host_kv_budget_tokens: int
+    device_used: int = 0
+    host_used: int = 0
+
+    def place(self, need_tokens: int) -> Optional[str]:
+        """Returns "device" | "host" | None (must wait)."""
+        if self.device_used + need_tokens <= self.device_kv_budget_tokens:
+            self.device_used += need_tokens
+            return "device"
+        if self.host_used + need_tokens <= self.host_kv_budget_tokens:
+            self.host_used += need_tokens
+            return "host"
+        return None
+
+    def release(self, tier: str, tokens: int) -> None:
+        if tier == "device":
+            self.device_used = max(0, self.device_used - tokens)
+        elif tier == "host":
+            self.host_used = max(0, self.host_used - tokens)

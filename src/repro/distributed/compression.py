@@ -1,0 +1,54 @@
+"""Gradient compression: per-tensor int8 quantization with error
+feedback (1-bit-Adam-family technique, adapted to int8).
+
+On a multi-pod mesh the cross-pod ("pod" axis) all-reduce is the
+slowest collective; quantizing gradients to int8 cuts its bytes 4x
+(vs fp32 accumulators) while the error-feedback residual keeps the
+optimizer unbiased over time.  Implemented as
+quantize -> dequantize in the train step: under SPMD the compressed
+representation is what crosses the wire when the reduction is done in
+the quantized domain; here we model the arithmetic exactly and let the
+perf effect be measured in the roofline's collective term (§Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress_with_feedback(grads: Any, error_feedback: Optional[Any]
+                                      ) -> Tuple[Any, Any]:
+    """Apply int8 round-trip with error feedback.
+
+    new_grad = dequant(quant(grad + residual)); residual' = input - new_grad.
+    """
+    if error_feedback is None:
+        error_feedback = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, ef):
+        corrected = g.astype(jnp.float32) + ef
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return deq, corrected - deq
+
+    gl, treedef = jax.tree_util.tree_flatten(grads)
+    efl = treedef.flatten_up_to(error_feedback)
+    results = [one(g, ef) for g, ef in zip(gl, efl)]
+    new_grads = treedef.unflatten([r[0] for r in results])
+    new_ef = treedef.unflatten([r[1] for r in results])
+    return new_grads, new_ef

@@ -1,0 +1,154 @@
+"""Fault tolerance & elasticity for 1000+-node deployments.
+
+Pure-logic (testable without hardware) components the launchers wire
+together:
+
+  * ``HeartbeatMonitor`` — marks workers dead after ``timeout`` without
+    a beat, and flags *stragglers* whose step time exceeds
+    ``straggler_factor`` x the fleet median (mitigation: the launcher
+    re-dispatches the slow host's input shard to a hot spare — the
+    decision logic lives here, the transport in launch/).
+  * ``ElasticPlanner`` — given the live-host set, picks the largest
+    usable mesh (data-axis shrink in whole multiples; the model axis is
+    never shrunk because TP state can't be re-sharded without a
+    checkpoint round-trip) and emits a ``ReshardPlan``.
+  * ``RestartPolicy`` — crash-loop backoff with a budget, the
+    supervisor contract for the train driver: on worker loss, restore
+    from the newest committed checkpoint (training/checkpoint.py is
+    atomic) and continue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class WorkerInfo:
+    worker_id: int
+    last_beat: float = 0.0
+    last_step_time: Optional[float] = None
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, worker_ids: Sequence[int], *, timeout: float = 60.0,
+                 straggler_factor: float = 2.0) -> None:
+        self.timeout = timeout
+        self.straggler_factor = straggler_factor
+        self.workers: Dict[int, WorkerInfo] = {
+            w: WorkerInfo(w) for w in worker_ids}
+
+    def beat(self, worker_id: int, now: float,
+             step_time: Optional[float] = None) -> None:
+        w = self.workers[worker_id]
+        w.last_beat = now
+        w.alive = True
+        if step_time is not None:
+            w.last_step_time = step_time
+
+    def sweep(self, now: float) -> List[int]:
+        """Mark and return workers newly considered dead."""
+        newly_dead = []
+        for w in self.workers.values():
+            if w.alive and now - w.last_beat > self.timeout:
+                w.alive = False
+                newly_dead.append(w.worker_id)
+        return newly_dead
+
+    def alive_workers(self) -> List[int]:
+        return [w.worker_id for w in self.workers.values() if w.alive]
+
+    def stragglers(self) -> List[int]:
+        times = sorted(w.last_step_time for w in self.workers.values()
+                       if w.alive and w.last_step_time is not None)
+        if len(times) < 3:
+            return []
+        median = times[len(times) // 2]
+        return [w.worker_id for w in self.workers.values()
+                if w.alive and w.last_step_time is not None
+                and w.last_step_time > self.straggler_factor * median]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshardPlan:
+    old_mesh: Tuple[int, ...]
+    new_mesh: Tuple[int, ...]
+    dropped_workers: Tuple[int, ...]
+    needs_checkpoint_roundtrip: bool
+
+    @property
+    def changed(self) -> bool:
+        return self.old_mesh != self.new_mesh
+
+
+class ElasticPlanner:
+    """Shrink/grow the (pod, data, model) mesh to the live host set.
+
+    Hosts map to whole data-axis rows (model-axis groups must stay
+    complete: TP shards of one layer live across the model axis and a
+    partial group cannot compute).  Growth beyond the original mesh is
+    capped at the checkpointed topology until a full re-shard.
+    """
+
+    def __init__(self, mesh_shape: Tuple[int, ...],
+                 axis_names: Tuple[str, ...],
+                 hosts_per_data_row: int = 1) -> None:
+        if "data" not in axis_names:
+            raise ValueError("mesh must have a data axis")
+        self.mesh_shape = tuple(mesh_shape)
+        self.axis_names = tuple(axis_names)
+        self.hosts_per_data_row = hosts_per_data_row
+        self._data_idx = axis_names.index("data")
+
+    def plan(self, total_hosts: int, dead_hosts: Sequence[int]
+             ) -> ReshardPlan:
+        alive = total_hosts - len(dead_hosts)
+        rows_total = self.mesh_shape[self._data_idx]
+        hosts_per_row = max(1, total_hosts // rows_total)
+        alive_rows = alive // hosts_per_row
+        new_rows = min(rows_total, self._largest_divisor_leq(
+            rows_total, alive_rows))
+        new_shape = list(self.mesh_shape)
+        new_shape[self._data_idx] = max(new_rows, 1)
+        plan = ReshardPlan(
+            old_mesh=self.mesh_shape, new_mesh=tuple(new_shape),
+            dropped_workers=tuple(dead_hosts),
+            # data-axis shrink re-shards only batch + optimizer FSDP
+            # shards — recoverable from the checkpoint without moving
+            # TP shards; model-axis changes would need a full round-trip
+            needs_checkpoint_roundtrip=new_rows != rows_total,
+        )
+        return plan
+
+    @staticmethod
+    def _largest_divisor_leq(n: int, k: int) -> int:
+        """Largest divisor of n that is <= k (whole data-axis rows keep
+        the global batch divisible)."""
+        k = max(min(n, k), 1)
+        for d in range(k, 0, -1):
+            if n % d == 0:
+                return d
+        return 1
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 10
+    backoff_base: float = 5.0
+    backoff_cap: float = 300.0
+    restarts: int = 0
+
+    def next_delay(self) -> Optional[float]:
+        """Seconds to wait before the next restart; None = give up."""
+        if self.restarts >= self.max_restarts:
+            return None
+        delay = min(self.backoff_cap,
+                    self.backoff_base * math.pow(2.0, self.restarts))
+        self.restarts += 1
+        return delay
+
+    def record_success(self) -> None:
+        """A healthy interval resets the crash-loop counter."""
+        self.restarts = 0

@@ -1,0 +1,267 @@
+"""Logical-axis sharding rules (MaxText-style) for DP / FSDP / TP / SP / EP.
+
+Model code annotates tensors with *logical* axis names
+(``constrain(x, "batch", None, "heads", None)``).  The launch layer
+activates a mesh + rule set; the rules map logical names onto mesh
+axes.  Outside an active context every annotation is a no-op, so model
+code runs unchanged on a single CPU device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, MeshAxes]
+
+# Default production rules for the (pod, data, model) mesh.
+# "fsdp" is the parameter ZeRO-3 dim; "batch" the activation DP dim.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",            # sequence-parallel residual stream (opt-in)
+    "kv_seq": None,               # sharded for long-context decode (opt-in)
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "expert_capacity": None,
+    "vocab": "model",
+    "stack": None,                # leading layer-stack dim of scanned params
+    "fsdp": ("pod", "data"),
+    "mamba_inner": "model",
+    "state": None,
+    "replicated": None,
+}
+
+# Single-pod rules only differ in which axes exist; names stay the same.
+SINGLE_POD_RULES: Rules = dict(DEFAULT_RULES, batch=("data",), fsdp=("data",))
+
+# Serving rules: expert weights TP-sharded on the FFN dim (expert-TP)
+# instead of EP, so the dropless decode gather needs no collectives;
+# KV cache sequence dim sharded for long-context flash-decoding.
+SERVE_RULES: Rules = dict(DEFAULT_RULES, experts=None)
+SERVE_SINGLE_POD_RULES: Rules = dict(SINGLE_POD_RULES, experts=None)
+
+
+class _Context(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Optional[Mesh] = None
+        self.rules: Rules = {}
+
+
+_CTX = _Context()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Optional[Rules] = None):
+    """Activate a mesh + logical rules for model-code annotations."""
+    if rules is None:
+        rules = rules_for_mesh(mesh)
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def rules_for_mesh(mesh: Mesh, mode: str = "train") -> Rules:
+    """Pick the rule set matching the mesh's axis names and mode
+    ("train" = EP experts; "serve" = expert-TP for dropless decode)."""
+    names = set(mesh.axis_names)
+    if mode == "serve":
+        base = SERVE_RULES if "pod" in names else SERVE_SINGLE_POD_RULES
+    else:
+        base = DEFAULT_RULES if "pod" in names else SINGLE_POD_RULES
+    out: Rules = {}
+    for logical, axes in base.items():
+        out[logical] = _filter_axes(axes, names)
+    return out
+
+
+def _filter_axes(axes: MeshAxes, available: set) -> MeshAxes:
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in available else None
+    kept = tuple(a for a in axes if a in available)
+    return kept if kept else None
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def resolve(*logical: Optional[str]) -> PartitionSpec:
+    """Map logical axis names to a PartitionSpec under the active rules."""
+    rules = _CTX.rules
+    parts = []
+    used: set = set()
+    for name in logical:
+        if name is None:
+            parts.append(None)
+            continue
+        axes = rules.get(name)
+        # A mesh axis may appear at most once in a PartitionSpec.
+        if axes is None:
+            parts.append(None)
+        elif isinstance(axes, str):
+            parts.append(axes if axes not in used else None)
+            used.add(axes)
+        else:
+            fresh = tuple(a for a in axes if a not in used)
+            used.update(fresh)
+            parts.append(fresh if fresh else None)
+    return PartitionSpec(*parts)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint through logical names; no-op w/o a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = fit_spec(mesh, resolve(*logical), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named(mesh: Mesh, *logical: Optional[str], rules: Optional[Rules] = None
+          ) -> NamedSharding:
+    """Build a NamedSharding from logical names without an active context."""
+    rules = rules if rules is not None else rules_for_mesh(mesh)
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(rules)
+    try:
+        return NamedSharding(mesh, resolve(*logical))
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: leaf-name → logical axes, by convention.
+# Stacked (scanned) params get a leading "stack" dim prepended.
+# ---------------------------------------------------------------------------
+
+# (logical axes per dim, from the LAST dims backwards). Matching is on the
+# leaf key name; `ndim` beyond the listed dims is padded with "stack"/None.
+_PARAM_LOGICAL: Dict[str, Tuple[Optional[str], ...]] = {
+    # attention
+    "wq": ("fsdp", "heads"),
+    "wk": ("fsdp", "kv_heads"),
+    "wv": ("fsdp", "kv_heads"),
+    "wo": ("heads", "fsdp"),
+    # dense FFN
+    "w_gate": ("fsdp", "ffn"),
+    "w_up": ("fsdp", "ffn"),
+    "w_down": ("ffn", "fsdp"),
+    # MoE (leading experts dim listed explicitly).  Under the default
+    # rules "experts" wins the "model" axis and "ffn" resolves to None
+    # (EP); under SERVE_RULES "experts" is unsharded and "ffn" takes
+    # "model" (expert-TP) so the dropless decode gather is local.
+    "we_gate": ("experts", "fsdp", "ffn"),
+    "we_up": ("experts", "fsdp", "ffn"),
+    "we_down": ("experts", "ffn", "fsdp"),
+    "ws_gate": ("fsdp", "ffn"),
+    "ws_up": ("fsdp", "ffn"),
+    "ws_down": ("ffn", "fsdp"),
+    "router": ("fsdp", None),
+    # embeddings
+    "embed": ("vocab", "fsdp"),
+    "unembed": ("fsdp", "vocab"),
+    # norms / scalars
+    "scale": (None,),
+    "bias": (None,),
+    # mamba
+    "in_proj": ("fsdp", "mamba_inner"),
+    "conv_w": ("mamba_inner", None),
+    "conv_b": ("mamba_inner",),
+    "x_proj": ("mamba_inner", None),
+    "dt_proj": (None, "mamba_inner"),
+    "dt_bias": ("mamba_inner",),
+    "a_log": ("mamba_inner", None),
+    "d_skip": ("mamba_inner",),
+    "out_proj": ("mamba_inner", "fsdp"),
+    # xLSTM
+    "w_gates": ("fsdp", "mamba_inner"),
+    "w_qkv": ("fsdp", "mamba_inner"),
+    "w_io": ("fsdp", "mamba_inner"),
+    "up_proj": ("fsdp", "mamba_inner"),
+    "down_proj": ("mamba_inner", "fsdp"),
+}
+
+
+def logical_for_leaf(path: Tuple, leaf: jax.Array) -> Tuple[Optional[str], ...]:
+    """Logical axes for one param leaf, inferred from its key name + rank.
+
+    Optimizer-state trees reuse the param leaf names, so AdamW moments
+    inherit the param sharding (ZeRO) for free.  Adafactor's factored
+    moments drop dims from the *right* ('vr' drops the last, 'vc' the
+    second-to-last) — detected from the field name in the path.
+    """
+    name = None
+    field_names = []
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if key is None:
+            key = getattr(entry, "name", None)
+        if isinstance(key, str):
+            field_names.append(key)
+            if name is None and key in _PARAM_LOGICAL:
+                name = key
+    logical = list(_PARAM_LOGICAL.get(name, ()))
+    if "vr" in field_names and logical:
+        logical = logical[:-1]                       # rows: last dim dropped
+    elif "vc" in field_names and len(logical) >= 2:
+        logical = logical[:-2] + logical[-1:]        # cols: dim -2 dropped
+    ndim = leaf.ndim
+    if len(logical) > ndim:
+        logical = logical[len(logical) - ndim:]
+    # leading dims (layer-stack) are unsharded
+    return ("stack",) * (ndim - len(logical)) + tuple(logical)
+
+
+def param_specs(params) -> "jax.tree_util.PyTreeDef":
+    """PartitionSpec tree for a parameter tree under the active rules."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: resolve(*logical_for_leaf(path, leaf)), params
+    )
+
+
+def fit_spec(mesh: Mesh, spec: PartitionSpec, shape) -> PartitionSpec:
+    """Drop mesh axes that do not divide the corresponding dim (small
+    vocabularies, few KV heads, xLSTM gate widths...)."""
+    parts = []
+    for i, axes in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            parts.append(None)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        kept = []
+        size = 1
+        for a in axes_t:
+            if shape[i] % (size * mesh.shape[a]) == 0:
+                kept.append(a)
+                size *= mesh.shape[a]
+        parts.append(tuple(kept) if len(kept) > 1
+                     else (kept[0] if kept else None))
+    return PartitionSpec(*parts)
+
+
+def param_shardings(mesh: Mesh, params, rules: Optional[Rules] = None):
+    """NamedSharding tree for a parameter (or abstract-shape) tree."""
+    rules = rules if rules is not None else rules_for_mesh(mesh)
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(rules)
+    try:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(
+                mesh, fit_spec(mesh, resolve(*logical_for_leaf(path, leaf)),
+                               leaf.shape)), params,
+        )
+    finally:
+        _CTX.mesh, _CTX.rules = prev

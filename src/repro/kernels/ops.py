@@ -1,0 +1,60 @@
+"""Jit'd public wrappers that select the right backend per platform.
+
+On TPU the Pallas kernels run compiled; on CPU (this container, and
+any host-side execution) they run via ``interpret=True`` for
+correctness work, while production XLA paths (the jnp formulations in
+``repro.models``) serve the dry-run.  ``use_pallas()`` centralizes the
+choice so models and tests stay backend-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import host_paged_attention as _host
+from repro.kernels import prefill_attention as _pre
+from repro.kernels import ref as _ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas() -> bool:
+    """Kernels compile only on TPU; elsewhere interpret-mode is opt-in
+    (REPRO_INTERPRET_KERNELS=1) because it is orders of magnitude
+    slower than the XLA path."""
+    if on_tpu():
+        return True
+    return os.environ.get("REPRO_INTERPRET_KERNELS", "0") == "1"
+
+
+def decode_attention(q, k, v, lengths, *, block_s: int = 512):
+    """(B,H,D) x (B,S,KV,D) -> (B,H,D); flash-decoding on TPU."""
+    if use_pallas():
+        return _dec.decode_attention(q, k, v, lengths, block_s=block_s,
+                                     interpret=not on_tpu())
+    return _ref.decode_attention_ref(q, k, v, lengths)
+
+
+def prefill_attention(q, k, v, prefix_len=None, *, causal: bool = True,
+                      block_q: int = 256, block_k: int = 512):
+    """(B,T,H,D) causal flash attention; Pallas on TPU."""
+    if use_pallas():
+        return _pre.prefill_attention(q, k, v, prefix_len, causal=causal,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=not on_tpu())
+    return _ref.prefill_attention_ref(q, k, v, prefix_len, causal=causal)
+
+
+def host_paged_attention(q, pages, page_table, lengths, *, page_size: int):
+    """Host-tier paged attention (always CPU backend)."""
+    return _host.host_paged_attention(q, pages, page_table, lengths,
+                                      page_size=page_size)
+
+
+host_paged_attention_numpy = _host.host_paged_attention_numpy

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested
+against (tests/test_kernels.py sweeps shapes and dtypes and asserts
+allclose).  They are deliberately written in the most obvious way —
+materialize the full score matrix, mask, softmax in fp64-adjacent
+fp32 — with no performance tricks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, H, D); k, v: (B, S, KV, D); lengths: (B,) -> (B, H, D)."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    idx = jnp.arange(s)[None, None, None, :]
+    scores = jnp.where(idx < lengths[:, None, None, None], scores, -1e30)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def prefill_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          prefix_len: Optional[jnp.ndarray] = None, *,
+                          causal: bool = True) -> jnp.ndarray:
+    """q: (B, T, H, D); k, v: (B, T, KV, D) -> (B, T, H, D)."""
+    b, t, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, t, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->btkgs", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    if causal:
+        qi = jnp.arange(t)[None, :, None]
+        ki = jnp.arange(t)[None, None, :]
+        mask = ki <= qi                                   # (1, T, S)
+        if prefix_len is not None:
+            mask = mask | (ki < prefix_len[:, None, None])
+        scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def host_paged_attention_ref(q: np.ndarray, pages: np.ndarray,
+                             page_table: np.ndarray, lengths: np.ndarray,
+                             *, page_size: int) -> np.ndarray:
+    """Gather pages into a dense cache, run decode_attention_ref."""
+    b, h, d = q.shape
+    kv = pages.shape[3]
+    mp = page_table.shape[1]
+    k = pages[0][page_table].reshape(b, mp * page_size, kv, d)
+    v = pages[1][page_table].reshape(b, mp * page_size, kv, d)
+    out = decode_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               jnp.asarray(lengths))
+    return np.asarray(out)

@@ -1,0 +1,240 @@
+"""Compiled-artifact analysis for the roofline.
+
+Two independent sources, cross-checked in EXPERIMENTS.md:
+
+  * ``collective_bytes_from_hlo`` — walks the per-device HLO,
+    attributes every all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute its output-shape bytes, and scales
+    ops inside ``while`` bodies by the loop trip count (XLA renders a
+    ``lax.scan`` body once; without scaling, a 126-layer stack would
+    report 1/126th of its real collective traffic).  Trip counts come
+    from the loop condition's ``compare(..., constant(N))``.
+  * ``analytic_costs`` — shape-derived FLOPs/bytes for each step kind.
+    This is the primary roofline source because XLA's
+    ``cost_analysis()`` has the same scan-counted-once limitation for
+    FLOPs; the raw cost_analysis numbers are recorded alongside as a
+    lower-bound cross-check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.config import BlockKind, FFNKind, ModelConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        size = _DTYPE_BYTES.get(dtype)
+        if size is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * size
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    unscaled_bytes: float
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of op lines.
+
+    Headers look like ``%name (p: (s32[], f32[8])) -> (s32[], f32[8]) {``
+    (params may nest parens, so match on name + '->' + trailing '{')."""
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # op lines contain " = "; headers may contain "=" only inside
+        # /*index=N*/ comments of tuple types
+        if stripped.endswith("{") and "->" in stripped and " = " not in \
+                stripped.split("->")[0]:
+            header = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if header:
+                current = header.group(1)
+                comps[current] = []
+                continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None and stripped:
+            comps[current].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Trip count from a while condition: compare(iv, constant(N)) LT."""
+    consts: Dict[str, int] = {}
+    for line in cond_lines:
+        m = re.match(r"%?([\w.\-]+)\s*=\s*s(?:32|64)\[\]\s+constant\((\d+)\)",
+                     line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        if "compare(" not in line:
+            continue
+        args = re.search(r"compare\(([^)]*)\)", line)
+        if not args:
+            continue
+        names = [a.strip().lstrip("%") for a in args.group(1).split(",")]
+        for n in names:
+            if n in consts:
+                return max(consts[n], 1)
+    # fallback: any constant in the condition, else 1
+    return max(consts.values(), default=1)
+
+
+def collective_bytes_from_hlo(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+
+    # find while ops: body/condition computation references
+    def analyze(comp: str, mult: float, seen: Tuple[str, ...]
+                ) -> Tuple[Dict[str, float], Dict[str, int], float]:
+        by_kind: Dict[str, float] = defaultdict(float)
+        counts: Dict[str, int] = defaultdict(int)
+        unscaled = 0.0
+        if comp not in comps or comp in seen:
+            return by_kind, counts, unscaled
+        for line in comps[comp]:
+            m = re.match(r"%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+([a-z\-]+)", line)
+            if m:
+                opcode = m.group(2)
+                # async collectives appear as <op>-start/<op>-done;
+                # count the -start (the -done carries the same bytes)
+                base = opcode[:-6] if opcode.endswith("-start") else opcode
+                if base in _COLLECTIVES and not opcode.endswith("-done"):
+                    nbytes = _shape_bytes(m.group(1))
+                    by_kind[base] += nbytes * mult
+                    counts[base] += 1
+                    unscaled += nbytes
+            if " while(" in line:
+                body = re.search(r"body=%?([\w.\-]+)", line)
+                cond = re.search(r"condition=%?([\w.\-]+)", line)
+                if body:
+                    trips = _trip_count(comps.get(cond.group(1), [])) \
+                        if cond else 1
+                    b2, c2, u2 = analyze(body.group(1), mult * trips,
+                                         seen + (comp,))
+                    for k, v in b2.items():
+                        by_kind[k] += v
+                    for k, v in c2.items():
+                        counts[k] += v
+                    unscaled += u2
+            # calls into sub-computations (fusions never hold collectives,
+            # but conditionals/calls may)
+            cm = re.search(r"(?:call|conditional)\(.*?to_apply=%?([\w.\-]+)",
+                           line)
+            if cm:
+                b2, c2, u2 = analyze(cm.group(1), mult, seen + (comp,))
+                for k, v in b2.items():
+                    by_kind[k] += v
+                for k, v in c2.items():
+                    counts[k] += v
+                unscaled += u2
+        return by_kind, counts, unscaled
+
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"ENTRY\s+%?([\w.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        return CollectiveStats({}, {}, 0.0)
+    by_kind, counts, unscaled = analyze(entry, 1.0, ())
+    return CollectiveStats(dict(by_kind), dict(counts), unscaled)
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs / bytes per step (global; divide by chips for per-device)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepCosts:
+    flops: float              # useful FLOPs (MODEL_FLOPS convention)
+    hbm_bytes: float          # params + KV + states traffic
+    model_flops: float        # 6ND / 2ND reference
+    notes: str = ""
+
+
+def analytic_costs(cfg: ModelConfig, kind: str, *, seq_len: int,
+                   global_batch: int, remat: bool = True,
+                   host_fraction: float = 0.0) -> StepCosts:
+    """First-principles cost of one step (whole mesh, not per-device)."""
+    n_active = cfg.active_param_count()
+    head = cfg.resolved_head_dim
+    kv_bytes_tok = 2 * cfg.num_attn_layers * cfg.num_kv_heads * head * 2
+    b, t = global_batch, seq_len
+
+    if kind == "train":
+        tokens = b * t
+        # fwd+bwd linear = 6ND; remat re-runs the fwd inside bwd (+2ND)
+        linear = (8.0 if remat else 6.0) * n_active * tokens
+        # causal attention fwd: QK^T + PV = 2 matmuls x 2 FLOPs x 0.5
+        # causal = 2*B*T^2*H*D per layer; bwd 2x fwd (+1x under remat)
+        attn_fwd = 2.0 * b * (t ** 2) * cfg.num_heads * head \
+            * cfg.num_attn_layers
+        attn = attn_fwd * (4.0 if remat else 3.0)
+        flops = linear + attn
+        # params read (fwd+bwd+wgrad ~3x) + grads written + opt states rw
+        param_bytes = cfg.param_count() * 2
+        hbm = 3 * param_bytes + 2 * param_bytes + 4 * param_bytes \
+            + tokens * cfg.d_model * 2 * cfg.num_layers * 2
+        return StepCosts(flops=flops, hbm_bytes=hbm,
+                         model_flops=6.0 * n_active * tokens,
+                         notes="linear 8ND w/ remat + causal attn")
+
+    if kind == "prefill":
+        tokens = b * t
+        linear = 2.0 * n_active * tokens
+        attn = 2.0 * b * (t ** 2) * cfg.num_heads * head * cfg.num_attn_layers
+        param_bytes = cfg.param_count() * 2
+        hbm = param_bytes + tokens * kv_bytes_tok \
+            + tokens * cfg.d_model * 2 * cfg.num_layers * 2
+        return StepCosts(flops=linear + attn, hbm_bytes=hbm,
+                         model_flops=2.0 * n_active * tokens,
+                         notes="prefill: linear + causal attn")
+
+    if kind == "decode":
+        device_rows = int(b * (1.0 - host_fraction))
+        linear = 2.0 * n_active * b            # unified batch (APEX!)
+        # decode attention: QK^T + PV over the full cache = 2 matmuls
+        # x 2 FLOPs = 4*rows*S*H*D per layer (no causal halving: every
+        # cached position is attended)
+        attn = 4.0 * device_rows * t * cfg.num_heads * head \
+            * cfg.num_attn_layers
+        param_bytes = cfg.active_param_count() * 2
+        kv_read = device_rows * t * kv_bytes_tok
+        hbm = param_bytes + kv_read + device_rows * kv_bytes_tok
+        return StepCosts(flops=linear + attn, hbm_bytes=hbm,
+                         model_flops=2.0 * n_active * b,
+                         notes=f"decode: {device_rows}/{b} rows on-device")
+
+    raise ValueError(kind)

@@ -1,0 +1,237 @@
+"""Assigned input-shape grid + abstract input specs for the dry-run.
+
+Every (architecture x shape) cell resolves here to:
+  * which step function to lower (train_step / prefill / decode_step,
+    the latter in gpu_only and APEX async_overlap flavors),
+  * ShapeDtypeStruct stand-ins for every input (no allocation),
+  * NamedSharding trees for the inputs under the production rules.
+
+Skip rules (recorded, per the brief): encoder-only archs have no
+decode shapes; ``long_500k`` needs sub-quadratic decode (SSM/hybrid
+only); APEX offload variant needs a KV cache and a splittable batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding
+from repro.models import abstract_params
+from repro.models.config import BlockKind, ModelConfig
+from repro.models.kv_cache import StackState
+from repro.models.transformer import HostIO
+from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# APEX offload fraction for the async_overlap decode variant
+HOST_FRACTION = 0.25
+
+
+def applicability(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the cell runs; else the skip reason (recorded in tables)."""
+    if cfg.is_encoder_only and shape.kind == "decode":
+        return "encoder-only: no autoregressive decode"
+    if shape.name == "long_500k" and not cfg.supports_long_context_decode:
+        return "full quadratic attention: no sub-quadratic long-context path"
+    return None
+
+
+def overlap_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """Whether the APEX async_overlap variant exists for this cell."""
+    base = applicability(cfg, shape)
+    if base:
+        return base
+    if shape.kind != "decode":
+        return "offload targets decode"
+    if not cfg.has_kv_cache:
+        return "no KV cache to offload (recurrent decode)"
+    if int(shape.global_batch * HOST_FRACTION) < 1:
+        return "batch too small to split a host cohort"
+    return None
+
+
+def _maybe(axes, dim: int, mesh: Mesh):
+    """Axes only if they divide the dim; else replicate."""
+    if axes is None:
+        return None
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = 1
+    for a in axes_t:
+        size *= mesh.shape[a]
+    return axes if dim % size == 0 and size > 1 else None
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """(abstract batch dict, sharding dict)."""
+    b, t = shape.global_batch, shape.seq_len
+    batch_ax = _batch_axes(mesh)
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "audio":
+        abstract = {"embeds": jax.ShapeDtypeStruct((b, t, cfg.d_model), dt),
+                    "labels": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        shard = {"embeds": NamedSharding(mesh, P(batch_ax, None, None)),
+                 "labels": NamedSharding(mesh, P(batch_ax, None))}
+    elif cfg.frontend == "vision":
+        p = cfg.frontend_tokens
+        abstract = {
+            "patches": jax.ShapeDtypeStruct((b, p, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((b, t - p), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        shard = {"patches": NamedSharding(mesh, P(batch_ax, None, None)),
+                 "tokens": NamedSharding(mesh, P(batch_ax, None)),
+                 "labels": NamedSharding(mesh, P(batch_ax, None))}
+    else:
+        abstract = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        shard = {k: NamedSharding(mesh, P(batch_ax, None)) for k in abstract}
+    return abstract, shard
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    b, t = shape.global_batch, shape.seq_len
+    batch_ax = _batch_axes(mesh)
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "audio":
+        abstract = {"embeds": jax.ShapeDtypeStruct((b, t, cfg.d_model), dt)}
+        shard = {"embeds": NamedSharding(mesh, P(batch_ax, None, None))}
+    elif cfg.frontend == "vision":
+        p = cfg.frontend_tokens
+        abstract = {"patches": jax.ShapeDtypeStruct((b, p, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, t - p), jnp.int32)}
+        shard = {"patches": NamedSharding(mesh, P(batch_ax, None, None)),
+                 "tokens": NamedSharding(mesh, P(batch_ax, None))}
+    else:
+        abstract = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        shard = {"tokens": NamedSharding(mesh, P(batch_ax, None))}
+    return abstract, shard
+
+
+def abstract_state(cfg: ModelConfig, *, device_batch: int, host_batch: int,
+                   cache_len: int) -> StackState:
+    return jax.eval_shape(
+        lambda: transformer.state_init(
+            cfg, device_batch=device_batch, host_batch=host_batch,
+            cache_len=cache_len))
+
+
+def state_specs(cfg: ModelConfig, state: StackState, mesh: Mesh,
+                *, long_context: bool, for_prefill: bool = False) -> StackState:
+    """NamedSharding tree for the decode/prefill state.
+
+    KV caches: batch over (pod, data); kv_heads over model when they
+    divide.  Otherwise *decode* takes the model axis on the kv-seq dim
+    (flash-decoding split), while *prefill* takes it on head_dim — the
+    chunked-attention dynamic_slice walks the seq dim, and slicing a
+    seq-sharded cache forces involuntary SPMD rematerialization.
+    long_context (batch=1) shards kv-seq over everything.
+    """
+    batch_ax = _batch_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def spec_for(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", None) or getattr(entry, "name", None)
+            if isinstance(key, str):
+                name = key
+                break
+        nd = len(leaf.shape)
+        if name in ("k", "v") and nd == 5:       # (G, B, S, KV, D)
+            _, b, s, kv, hd = leaf.shape
+            if long_context:
+                seq_ax = _maybe(("data", "model") if "pod" not in
+                                mesh.axis_names else ("pod", "data", "model"),
+                                s, mesh)
+                return NamedSharding(mesh, P(None, None, seq_ax, None, None))
+            bax = _maybe(batch_ax, b, mesh)
+            if model and kv % mesh.shape[model] == 0:
+                return NamedSharding(mesh, P(None, bax, None, model, None))
+            if for_prefill:
+                d_ax = _maybe(model, hd, mesh)
+                return NamedSharding(mesh, P(None, bax, None, None, d_ax))
+            seq_ax = _maybe(model, s, mesh)
+            return NamedSharding(mesh, P(None, bax, seq_ax, None, None))
+        if name == "conv" and nd == 4:            # (G, B, K-1, I)
+            _, b, _, inner = leaf.shape
+            bax = _maybe(batch_ax, b, mesh)
+            iax = _maybe(model, inner, mesh)
+            return NamedSharding(mesh, P(None, bax, None, iax))
+        if name == "ssm" and nd == 4:             # (G, B, I, N)
+            _, b, inner, _ = leaf.shape
+            bax = _maybe(batch_ax, b, mesh)
+            iax = _maybe(model, inner, mesh)
+            return NamedSharding(mesh, P(None, bax, iax, None))
+        if name == "lengths":
+            bax = _maybe(batch_ax, leaf.shape[0], mesh)
+            return NamedSharding(mesh, P(bax))
+        # xLSTM states & anything else: batch-shard when possible
+        if nd >= 2:
+            bax = _maybe(batch_ax, leaf.shape[1], mesh)
+            return NamedSharding(mesh, P(*([None, bax] + [None] * (nd - 2))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def host_io_specs(cfg: ModelConfig, host_batch: int, mesh: Mesh):
+    """(abstract HostIO, sharding HostIO)."""
+    d = cfg.d_model
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    batch_ax = _batch_axes(mesh)
+    bax = _maybe(batch_ax, host_batch, mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    hax = _maybe(model, h, mesh)
+    dt = jnp.dtype(cfg.compute_dtype)
+    abstract = HostIO(
+        x_carry=jax.ShapeDtypeStruct((host_batch, d), dt),
+        positions=jax.ShapeDtypeStruct((host_batch,), jnp.int32),
+        attn_in=jax.ShapeDtypeStruct((host_batch, h, hd), jnp.float32),
+        consume_layer=jax.ShapeDtypeStruct((), jnp.int32),
+        emit_layer=jax.ShapeDtypeStruct((), jnp.int32),
+        window_start=jax.ShapeDtypeStruct((), jnp.int32),
+        window_end=jax.ShapeDtypeStruct((), jnp.int32),
+        row_valid=jax.ShapeDtypeStruct((host_batch,), jnp.bool_))
+    shard = HostIO(
+        x_carry=NamedSharding(mesh, P(bax, None)),
+        positions=NamedSharding(mesh, P(bax)),
+        attn_in=NamedSharding(mesh, P(bax, hax, None)),
+        consume_layer=NamedSharding(mesh, P()),
+        emit_layer=NamedSharding(mesh, P()),
+        window_start=NamedSharding(mesh, P()),
+        window_end=NamedSharding(mesh, P()),
+        row_valid=NamedSharding(mesh, P(bax)))
+    return abstract, shard
+
+
+def decode_token_specs(cfg: ModelConfig, device_batch: int, mesh: Mesh):
+    bax = _maybe(_batch_axes(mesh), device_batch, mesh)
+    return (jax.ShapeDtypeStruct((device_batch,), jnp.int32),
+            NamedSharding(mesh, P(bax)))

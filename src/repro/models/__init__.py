@@ -1,0 +1,12 @@
+from repro.models.config import (BlockKind, FFNKind, MambaConfig, MoEConfig,
+                                 ModelConfig)
+from repro.models.model import (ModelParams, abstract_params, decode_step,
+                                forward_train, init_decode_state, init_params,
+                                prefill)
+from repro.models.transformer import HostIO, QKVOut
+
+__all__ = [
+    "BlockKind", "FFNKind", "MambaConfig", "MoEConfig", "ModelConfig",
+    "ModelParams", "abstract_params", "decode_step", "forward_train",
+    "init_decode_state", "init_params", "prefill", "HostIO", "QKVOut",
+]

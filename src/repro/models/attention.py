@@ -1,0 +1,113 @@
+"""Memory-efficient (flash-style) attention in pure jnp.
+
+``chunked_gqa_attention`` computes exact softmax attention with online
+(max, sum) renormalization over KV chunks, keeping live memory at
+O(T·chunk) instead of O(T·S).  This is the XLA path used by long
+prefill shapes; the Pallas kernel in ``repro.kernels.prefill_attention``
+implements the same schedule with explicit VMEM tiling for TPU, and is
+tested against this oracle.
+
+Supports causal masking, prefix-LM masking (PaliGemma) and a KV
+validity length (decode over a partially filled cache).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_attend(q, k, v, mask, scale):
+    """One (q-chunk, kv-chunk) tile.  q: (B,cq,K,G,D); k/v: (B,ck,K,D).
+
+    Returns unnormalized partials (acc, m, l) for online softmax.
+    """
+    s = jnp.einsum("bqkgd,bskd->bqkgs", q, k) * scale            # fp32
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                       # (B,cq,K,G)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bqkgs,bskd->bqkgd", p, v)
+    return acc, m, l
+
+
+def chunked_gqa_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    q_positions: jnp.ndarray, kv_positions: jnp.ndarray,
+    causal: bool = True,
+    prefix_len: Optional[jnp.ndarray] = None,
+    kv_valid_len: Optional[jnp.ndarray] = None,
+    q_chunk: int = 512, kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Exact GQA attention, chunked over both q and kv.
+
+    q: (B, T, H, D);  k, v: (B, S, KV, D);  positions: (B, T) / (B, S).
+    prefix_len: (B,) — keys at positions < prefix_len are visible to all
+    queries (prefix-LM).  kv_valid_len: (B,) — keys at indices >= this
+    are masked out entirely (cache tail).
+    Returns (B, T, H, D) in q.dtype.
+    """
+    b, t, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    # pad to multiples
+    tp = -(-t // q_chunk) * q_chunk
+    sp = -(-s // kv_chunk) * kv_chunk
+    qf = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, ((0, 0), (0, tp - t)), constant_values=-1)
+    kpos = jnp.pad(kv_positions, ((0, 0), (0, sp - s)), constant_values=2**30)
+    kidx = jnp.arange(sp)
+
+    nq, nk = tp // q_chunk, sp // kv_chunk
+    qf = qf.reshape(b, nq, q_chunk, kvh, g, d)
+    qpos = qpos.reshape(b, nq, q_chunk)
+    kf = kf.reshape(b, nk, kv_chunk, kvh, d)
+    vf = vf.reshape(b, nk, kv_chunk, kvh, d)
+    kpos = kpos.reshape(b, nk, kv_chunk)
+    kidx = kidx.reshape(nk, kv_chunk)
+
+    def q_block(qi, qp):
+        """qi: (B,cq,K,G,D); qp: (B,cq). Scan over kv chunks."""
+
+        def kv_step(carry, xs):
+            acc, m, l = carry
+            ki, vi, kp, kxi = xs
+            mask = jnp.ones((b, q_chunk, kv_chunk), bool)
+            if causal:
+                cm = kp[:, None, :] <= qp[:, :, None]
+                if prefix_len is not None:
+                    cm = cm | (kp[:, None, :] < prefix_len[:, None, None])
+                mask &= cm
+            if kv_valid_len is not None:
+                mask &= kxi[None, None, :] < kv_valid_len[:, None, None]
+            a2, m2, l2 = _chunk_attend(qi, ki, vi, mask, scale)
+            m_new = jnp.maximum(m, m2)
+            c1 = jnp.exp(m - m_new)
+            c2 = jnp.exp(m2 - m_new)
+            acc = acc * c1[..., None] + a2 * c2[..., None]
+            l = l * c1 + l2 * c2
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, q_chunk, kvh, g, d), jnp.float32)
+        m0 = jnp.full((b, q_chunk, kvh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kvh, g), jnp.float32)
+        xs = (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0),
+              jnp.moveaxis(kpos, 1, 0), kidx)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), xs)
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(
+        lambda xs: q_block(*xs),
+        (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(qpos, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, tp, h, d)[:, :t]
+    return out.astype(q.dtype)

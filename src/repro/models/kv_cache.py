@@ -1,0 +1,198 @@
+"""Decode-state containers and the paged KV pool.
+
+Two layouts exist, used at different altitudes of the system:
+
+  * **Contiguous slot cache** (``AttnKV``) — fixed (G, B, S, KV, D)
+    arrays threaded through the jitted decode step.  This is what the
+    dry-run lowers and what the roofline reads; it is also the device-
+    side cache of the serving engine (one slot per active request).
+  * **Paged pool** (``PagedKVPool``) — vLLM-style page table over a
+    host-memory pool, used by the host attention backend for
+    CPU-offloaded requests (the paper's CPU tier).  Implemented in
+    numpy because it lives on the host by construction.
+
+``StackState`` bundles the per-pattern-entry states for the scanned
+block stack; every leaf carries a leading ``G`` (scan groups) axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AttnKV(NamedTuple):
+    """Contiguous KV slots for one attention entry, stacked over groups.
+
+    k, v: (G, B, S, KV, D); grows by writing at index ``lengths``.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StackState:
+    """Decode state of the whole block stack.
+
+    ``per_entry`` is a tuple over pattern entries; each element is a
+    state pytree whose leaves are stacked over the G scan groups (or
+    ``None`` for stateless entries).  ``lengths`` is (B,) int32 — the
+    number of tokens already cached per sequence.
+    """
+
+    per_entry: Tuple[Any, ...]
+    lengths: jnp.ndarray
+
+
+def write_kv(kv: AttnKV, g: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray,
+             lengths: jnp.ndarray) -> AttnKV:
+    """Write one new token's K/V for group ``g`` at per-row positions.
+
+    k_new, v_new: (B, 1, KV, D); lengths: (B,).
+    """
+    b = k_new.shape[0]
+    rows = jnp.arange(b)
+    k = kv.k.at[g, rows, lengths].set(k_new[:, 0].astype(kv.k.dtype))
+    v = kv.v.at[g, rows, lengths].set(v_new[:, 0].astype(kv.v.dtype))
+    return AttnKV(k=k, v=v)
+
+
+def write_kv_span(kv: AttnKV, g: jnp.ndarray, k_new: jnp.ndarray,
+                  v_new: jnp.ndarray, start: jnp.ndarray) -> AttnKV:
+    """Write a T-token span (prefill).  k_new: (B, T, KV, D); start: (B,)."""
+    b, t = k_new.shape[:2]
+    rows = jnp.arange(b)[:, None]
+    cols = start[:, None] + jnp.arange(t)[None, :]
+    k = kv.k.at[g, rows, cols].set(k_new.astype(kv.k.dtype))
+    v = kv.v.at[g, rows, cols].set(v_new.astype(kv.v.dtype))
+    return AttnKV(k=k, v=v)
+
+
+# ---------------------------------------------------------------------------
+# Host-side paged KV pool (the paper's CPU tier)
+# ---------------------------------------------------------------------------
+
+
+class PagedKVPool:
+    """Paged KV storage in host memory, one pool shared by all layers.
+
+    Layout: ``pages[2, num_pages, page_size, kv_heads, head_dim]``
+    (index 0 = K, 1 = V).  Each (request, layer) owns a chain of pages
+    recorded in ``page_tables``.  Allocation is a simple free list —
+    deterministic and O(1) — matching vLLM's block allocator.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, num_layers: int,
+                 kv_heads: int, head_dim: int, dtype=np.float32) -> None:
+        self.page_size = page_size
+        self.num_layers = num_layers
+        self.pages = np.zeros((2, num_pages, page_size, kv_heads, head_dim),
+                              dtype=dtype)
+        self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
+        # (request_id, layer) -> list of page indices
+        self.page_tables: Dict[Tuple[int, int], List[int]] = {}
+        # request_id -> token count (same across layers)
+        self.lengths: Dict[int, int] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free_pages)
+
+    def pages_needed(self, extra_tokens: int, current: int) -> int:
+        have = -(-current // self.page_size) * self.page_size if current else 0
+        need_tokens = max(0, current + extra_tokens - have)
+        return -(-need_tokens // self.page_size)
+
+    def can_admit(self, tokens: int) -> bool:
+        per_layer = -(-tokens // self.page_size)
+        return self.num_free >= per_layer * self.num_layers
+
+    def allocate(self, request_id: int, tokens: int) -> None:
+        """Reserve page chains for a new request with `tokens` capacity."""
+        if not self.can_admit(tokens):
+            raise MemoryError("paged pool exhausted")
+        per_layer = -(-tokens // self.page_size)
+        for layer in range(self.num_layers):
+            self.page_tables[(request_id, layer)] = [
+                self.free_pages.pop() for _ in range(per_layer)]
+        self.lengths[request_id] = 0
+
+    def extend(self, request_id: int, extra_tokens: int) -> None:
+        cur = self.lengths[request_id]
+        need = self.pages_needed(extra_tokens, cur)
+        if need * self.num_layers > self.num_free:
+            raise MemoryError("paged pool exhausted on extend")
+        if need:
+            for layer in range(self.num_layers):
+                self.page_tables[(request_id, layer)].extend(
+                    self.free_pages.pop() for _ in range(need))
+
+    def append(self, request_id: int, layer: int, k: np.ndarray,
+               v: np.ndarray, advance: bool) -> None:
+        """Append one token's K/V for (request, layer).
+
+        ``advance`` bumps the shared length counter (pass True exactly
+        once per token, on the last layer written).
+        """
+        pos = self.lengths[request_id]
+        chain = self.page_tables[(request_id, layer)]
+        page_idx = pos // self.page_size
+        if page_idx >= len(chain):
+            self.extend(request_id, 1)
+            chain = self.page_tables[(request_id, layer)]
+        page = chain[page_idx]
+        slot = pos % self.page_size
+        self.pages[0, page, slot] = k
+        self.pages[1, page, slot] = v
+        if advance:
+            self.lengths[request_id] = pos + 1
+
+    def write_prompt(self, request_id: int, layer: int, k: np.ndarray,
+                     v: np.ndarray, advance: bool) -> None:
+        """Bulk-write a prompt's K/V (T, kv_heads, head_dim) for one layer."""
+        t = k.shape[0]
+        start = self.lengths[request_id]
+        need = self.pages_needed(t, start)
+        chain = self.page_tables[(request_id, layer)]
+        if (start + t + self.page_size - 1) // self.page_size > len(chain):
+            self.extend(request_id, t)
+            chain = self.page_tables[(request_id, layer)]
+        for off in range(t):
+            pos = start + off
+            page = chain[pos // self.page_size]
+            slot = pos % self.page_size
+            self.pages[0, page, slot] = k[off]
+            self.pages[1, page, slot] = v[off]
+        if advance:
+            self.lengths[request_id] = start + t
+
+    def gather(self, request_id: int, layer: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize (K, V) of shape (len, kv_heads, head_dim)."""
+        n = self.lengths[request_id]
+        chain = self.page_tables[(request_id, layer)]
+        full = n // self.page_size
+        parts_k, parts_v = [], []
+        for i in range(full):
+            parts_k.append(self.pages[0, chain[i]])
+            parts_v.append(self.pages[1, chain[i]])
+        rem = n % self.page_size
+        if rem:
+            parts_k.append(self.pages[0, chain[full], :rem])
+            parts_v.append(self.pages[1, chain[full], :rem])
+        if not parts_k:
+            kv_heads, head_dim = self.pages.shape[-2:]
+            empty = np.zeros((0, kv_heads, head_dim), self.pages.dtype)
+            return empty, empty.copy()
+        return np.concatenate(parts_k, 0), np.concatenate(parts_v, 0)
+
+    def free(self, request_id: int) -> None:
+        for layer in range(self.num_layers):
+            chain = self.page_tables.pop((request_id, layer), [])
+            self.free_pages.extend(chain)
+        self.lengths.pop(request_id, None)

@@ -1,0 +1,190 @@
+"""Core neural-network layers in pure JAX (no flax).
+
+Parameters are plain nested dicts of ``jnp.ndarray`` so they stay
+trivially shardable with ``NamedSharding`` and stackable for
+``lax.scan`` over layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, in_dim: int, out_dim: int,
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -3, 3, (in_dim, out_dim), jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, dim: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMS normalization in fp32 with cast back to input dtype."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies for RoPE; shape (head_dim // 2,), fp32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs of channels. x: (..., T, H, D); positions: (..., T)."""
+    dtype = x.dtype
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., T, D/2)
+    cos = jnp.cos(angles)[..., None, :]   # (..., T, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rotated.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-query attention (jnp reference path — Pallas kernels live in
+# repro.kernels and are selected by the model when enabled)
+# ---------------------------------------------------------------------------
+
+def attention_init(key: jax.Array, d_model: int, num_heads: int,
+                   num_kv_heads: int, head_dim: int, dtype=jnp.bfloat16) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype),
+    }
+
+
+def qkv_project(params: Params, x: jnp.ndarray, num_heads: int,
+                num_kv_heads: int, head_dim: int,
+                positions: jnp.ndarray, inv_freq: jnp.ndarray,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shared pre-attention linear ops (the paper's "pr" stage)."""
+    b, t, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, t, num_heads, head_dim)
+    k = (x @ params["wk"]).reshape(b, t, num_kv_heads, head_dim)
+    v = (x @ params["wv"]).reshape(b, t, num_kv_heads, head_dim)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    return q, k, v
+
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool,
+                  q_positions: Optional[jnp.ndarray] = None,
+                  kv_positions: Optional[jnp.ndarray] = None,
+                  kv_valid_len: Optional[jnp.ndarray] = None,
+                  prefix_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Grouped-query scaled-dot-product attention (pure jnp oracle).
+
+    q: (B, T, H, D);  k, v: (B, S, KV, D).  Returns (B, T, H, D).
+    ``kv_valid_len`` masks out cache slots >= valid length (decode);
+    ``prefix_len`` makes keys below that position visible to every
+    query (prefix-LM, e.g. PaliGemma's image+prompt prefix).
+    """
+    b, t, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, t, kvh, group, d)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("btkgd,bskd->btkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+
+    mask = None
+    if causal:
+        if q_positions is None:
+            q_positions = jnp.arange(t)[None, :].repeat(b, 0)
+        if kv_positions is None:
+            kv_positions = jnp.arange(s)[None, :].repeat(b, 0)
+        mask = kv_positions[:, None, :] <= q_positions[:, :, None]  # (B, T, S)
+        if prefix_len is not None:
+            mask = mask | (kv_positions[:, None, :] < prefix_len[:, None, None])
+    if kv_valid_len is not None:
+        valid = jnp.arange(s)[None, :] < kv_valid_len[:, None]       # (B, S)
+        valid = valid[:, None, :].repeat(t, 1)
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None, None, :], logits, -1e30)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def attention_output(params: Params, attn: jnp.ndarray) -> jnp.ndarray:
+    """Post-attention output projection (part of the paper's "po" stage)."""
+    b, t, h, d = attn.shape
+    return attn.reshape(b, t, h * d) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(kg, d_model, d_ff, dtype),
+        "w_up": dense_init(ku, d_model, d_ff, dtype),
+        "w_down": dense_init(kd, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    up = x @ params["w_up"]
+    return (gate * up) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key: jax.Array, vocab: int, d_model: int,
+                   tie: bool, dtype=jnp.bfloat16) -> Params:
+    ke, ko = jax.random.split(key)
+    params = {"embed": embed_init(ke, vocab, d_model, dtype)}
+    if not tie:
+        params["unembed"] = dense_init(ko, d_model, vocab, dtype)
+    return params
+
+
+def embed(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "unembed" in params:
+        return x @ params["unembed"]
+    return x @ params["embed"].T

@@ -1,0 +1,141 @@
+"""Public model API: init / train forward / prefill / decode.
+
+Inputs per frontend (the modality frontends are stubs per the brief —
+``input_specs`` in the launch layer provides precomputed embeddings):
+
+  * ``none``   — ``tokens`` (B, T) int32
+  * ``audio``  — ``embeds`` (B, T, d_model) precomputed frame embeddings
+  * ``vision`` — ``patches`` (B, P, d_model) + ``tokens`` (B, T); the
+                 patch prefix gets bidirectional (prefix-LM) attention.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.kv_cache import StackState
+from repro.models.layers import embed, embedding_init, rmsnorm, rmsnorm_init, unembed
+from repro.models.transformer import HostIO, QKVOut
+
+
+class ModelParams(NamedTuple):
+    embedding: Dict[str, jnp.ndarray]
+    blocks: Tuple[Any, ...]
+    final_norm: Dict[str, jnp.ndarray]
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> ModelParams:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return ModelParams(
+        embedding=embedding_init(k1, cfg.vocab_size, cfg.d_model,
+                                 cfg.tie_embeddings, dt),
+        blocks=transformer.stack_init(k2, cfg),
+        final_norm=rmsnorm_init(cfg.d_model, dt),
+    )
+
+
+def abstract_params(cfg: ModelConfig) -> ModelParams:
+    """Shape/dtype skeleton of the params (no allocation) for dry-runs."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _embed_inputs(params: ModelParams, cfg: ModelConfig,
+                  inputs: Dict[str, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Returns (x (B, T, d), prefix_len | None)."""
+    if cfg.frontend == "audio":
+        return inputs["embeds"].astype(jnp.dtype(cfg.compute_dtype)), None
+    if cfg.frontend == "vision":
+        patches = inputs["patches"].astype(jnp.dtype(cfg.compute_dtype))
+        text = embed(params.embedding, inputs["tokens"])
+        x = jnp.concatenate([patches, text], axis=1)
+        prefix = jnp.full((x.shape[0],), patches.shape[1], jnp.int32)
+        return x, prefix
+    return embed(params.embedding, inputs["tokens"]), None
+
+
+def forward_hidden(params: ModelParams, cfg: ModelConfig,
+                   inputs: Dict[str, jnp.ndarray], *,
+                   rng: Optional[jax.Array] = None,
+                   remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward up to the final norm (no unembed): (hidden (B,T,d), aux)."""
+    x, prefix = _embed_inputs(params, cfg, inputs)
+    b, t = x.shape[:2]
+    positions = jnp.arange(t, dtype=jnp.int32)[None, :].repeat(b, 0)
+    x, _, aux = transformer.stack_forward(
+        params.blocks, cfg, x, positions, None,
+        prefix_len=prefix, rng=rng, remat=remat)
+    return rmsnorm(params.final_norm, x, cfg.norm_eps), aux
+
+
+def forward_train(params: ModelParams, cfg: ModelConfig,
+                  inputs: Dict[str, jnp.ndarray], *,
+                  rng: Optional[jax.Array] = None,
+                  remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward for training.  Returns (logits (B,T,V), aux_loss)."""
+    x, aux = forward_hidden(params, cfg, inputs, rng=rng, remat=remat)
+    logits = unembed(params.embedding, x)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def prefill(params: ModelParams, cfg: ModelConfig,
+            inputs: Dict[str, jnp.ndarray], state: StackState,
+            ) -> Tuple[jnp.ndarray, StackState]:
+    """Process a prompt, filling the decode state.
+
+    Returns (last-token logits (B, V), new_state).
+    """
+    x, prefix = _embed_inputs(params, cfg, inputs)
+    b, t = x.shape[:2]
+    positions = (state.lengths[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :])
+    x, new_state, _ = transformer.stack_forward(
+        params.blocks, cfg, x, positions, state, prefix_len=prefix)
+    x_last = rmsnorm(params.final_norm, x[:, -1], cfg.norm_eps)
+    logits = unembed(params.embedding, x_last)
+    return logits, new_state
+
+
+def decode_step(params: ModelParams, cfg: ModelConfig,
+                tokens: jnp.ndarray, state: StackState,
+                host: Optional[HostIO] = None,
+                ) -> Tuple[jnp.ndarray, StackState, Optional[QKVOut],
+                           Optional[jnp.ndarray]]:
+    """One decode iteration.
+
+    tokens: (Bg,) int32 fresh tokens for the device rows.  Host rows
+    (APEX-offloaded) ride along via ``host.x_carry``.
+
+    Returns (logits (B_total, V), new_state, qkv_out, x_final).
+    ``logits[Bg:]`` are meaningful only on iterations where a host
+    cohort completes its final layer (the engine tracks this);
+    ``x_final[Bg:]`` is the updated host-row residual carry.
+    """
+    x_gpu = embed(params.embedding, tokens)
+    if host is not None:
+        x = jnp.concatenate([x_gpu, host.x_carry.astype(x_gpu.dtype)], axis=0)
+        positions = jnp.concatenate(
+            [state.lengths, host.positions.astype(state.lengths.dtype)], axis=0)
+    else:
+        x = x_gpu
+        positions = state.lengths
+    x, new_state, qkv_out = transformer.decode_step(
+        params.blocks, cfg, x, positions, state, host)
+    x_normed = rmsnorm(params.final_norm, x, cfg.norm_eps)
+    logits = unembed(params.embedding, x_normed)
+    logits = constrain(logits, "batch", "vocab")
+    return logits, new_state, qkv_out, x
+
+
+def init_decode_state(cfg: ModelConfig, *, device_batch: int,
+                      host_batch: int = 0, cache_len: int,
+                      kv_dtype=jnp.bfloat16) -> StackState:
+    return transformer.state_init(
+        cfg, device_batch=device_batch, host_batch=host_batch,
+        cache_len=cache_len, kv_dtype=kv_dtype)

@@ -1,0 +1,178 @@
+"""Mixture-of-experts FFN: token-choice top-k routing with capacity.
+
+GShard-style dispatch: tokens are placed into per-expert capacity
+buffers with a cumulative-sum position assignment, experts run as one
+batched einsum over the ``experts`` dim (EP-shardable), and outputs are
+combined weighted by router probabilities.  Tokens overflowing an
+expert's capacity are dropped (contribute zero), matching standard
+capacity-factor semantics.  Shared experts (DeepSeek-MoE style) run as
+a dense SwiGLU over every token.
+
+FLOP accounting is honest: expert compute is ``E × C × d × f`` with
+``E × C ≈ top_k × tokens × capacity_factor`` — not a dense all-experts
+product — so dry-run rooflines reflect the *active* parameter count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import MoEConfig
+from repro.models.layers import Params, dense_init, mlp, mlp_init
+
+
+def moe_init(key: jax.Array, d_model: int, cfg: MoEConfig,
+             dtype=jnp.bfloat16) -> Params:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, f = cfg.num_experts, cfg.expert_ffn_dim
+    std = 1.0 / math.sqrt(d_model)
+    params: Params = {
+        "router": dense_init(kr, d_model, e, jnp.float32),
+        "we_gate": (jax.random.truncated_normal(kg, -3, 3, (e, d_model, f), jnp.float32) * std).astype(dtype),
+        "we_up": (jax.random.truncated_normal(ku, -3, 3, (e, d_model, f), jnp.float32) * std).astype(dtype),
+        "we_down": (jax.random.truncated_normal(kd, -3, 3, (e, f, d_model), jnp.float32)
+                    * (1.0 / math.sqrt(f))).astype(dtype),
+    }
+    if cfg.num_shared_experts > 0:
+        shared_hidden = cfg.num_shared_experts * cfg.shared_ffn_dim
+        shared = mlp_init(ks, d_model, shared_hidden, dtype)
+        params["ws_gate"] = shared["w_gate"]
+        params["ws_up"] = shared["w_up"]
+        params["ws_down"] = shared["w_down"]
+    return params
+
+
+def expert_capacity(num_tokens: int, cfg: MoEConfig,
+                    capacity_factor: float = 1.25) -> int:
+    cap = math.ceil(cfg.top_k * num_tokens / cfg.num_experts * capacity_factor)
+    return max(cap, 1)
+
+
+# Below this many tokens the gather-based dropless path is used: at
+# decode scale, capacity dropping would corrupt tokens AND make outputs
+# depend on batch composition (breaking APEX's ride-along rows), while
+# gathering the selected experts' weights costs exactly the *active*
+# FLOPs/bytes — the honest roofline cost of MoE decode.
+DROPLESS_TOKEN_THRESHOLD = 256
+
+
+def moe_ffn(params: Params, x: jnp.ndarray, cfg: MoEConfig,
+            *, capacity_factor: float = 1.25,
+            router_key: Optional[jax.Array] = None,
+            dropless: Optional[bool] = None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the MoE FFN.  x: (B, T, d).  Returns (out, aux_loss)."""
+    b, t, d = x.shape
+    n = b * t
+    if dropless is None:
+        dropless = n <= DROPLESS_TOKEN_THRESHOLD
+    if dropless:
+        return _moe_ffn_gather(params, x, cfg)
+    tokens = x.reshape(n, d)
+    cap = expert_capacity(n, cfg, capacity_factor)
+
+    # --- routing (fp32 for numerical stability) ---------------------------
+    logits = tokens.astype(jnp.float32) @ params["router"]
+    if router_key is not None and cfg.router_jitter > 0:
+        logits = logits + cfg.router_jitter * jax.random.normal(router_key, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (n, E)
+    top_probs, top_ids = jax.lax.top_k(probs, cfg.top_k)       # (n, k)
+    # DeepSeek normalizes the selected probs to sum to one.
+    top_probs = top_probs / jnp.sum(top_probs, axis=-1, keepdims=True)
+
+    # --- capacity assignment (sort-based, O(n*k) memory) --------------------
+    # GShard's one-hot cumsum would materialize an (n*k, E) int32
+    # tensor — 12 TB at kimi-k2 train_4k scale.  A stable sort groups
+    # assignments by expert; position-in-expert = index - first index
+    # of the expert's run.
+    flat_ids = top_ids.reshape(-1)                             # (n*k,)
+    nk = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    first_in_run = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    pos_sorted = jnp.arange(nk, dtype=jnp.int32) - first_in_run
+    flat_pos = jnp.zeros((nk,), jnp.int32).at[order].set(pos_sorted)
+    keep = flat_pos < cap                                      # (n*k,)
+
+    # --- dispatch: scatter tokens into (E, C, d) buffers --------------------
+    tok_rep = jnp.repeat(tokens, cfg.top_k, axis=0)            # (n*k, d)
+    safe_pos = jnp.where(keep, flat_pos, 0)
+    scatter_ids = jnp.stack([flat_ids, safe_pos], axis=-1)     # (n*k, 2)
+    contrib = jnp.where(keep[:, None], tok_rep, 0)
+    buf = jnp.zeros((cfg.num_experts, cap, d), x.dtype)
+    buf = buf.at[scatter_ids[:, 0], scatter_ids[:, 1]].add(contrib)
+    buf = constrain(buf, "experts", None, None)
+
+    # --- expert compute (batched SwiGLU over the experts dim) --------------
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["we_gate"]
+                                  ).astype(jnp.float32)).astype(x.dtype)
+    up = jnp.einsum("ecd,edf->ecf", buf, params["we_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", gate * up, params["we_down"])
+    out_buf = constrain(out_buf, "experts", None, None)
+
+    # --- combine ------------------------------------------------------------
+    gathered = out_buf[scatter_ids[:, 0], scatter_ids[:, 1]]   # (n*k, d)
+    weights = (top_probs.reshape(-1) * keep).astype(jnp.float32)
+    combined = jnp.sum(
+        (gathered.astype(jnp.float32) * weights[:, None]).reshape(n, cfg.top_k, d),
+        axis=1,
+    ).astype(x.dtype)
+
+    # --- shared experts -----------------------------------------------------
+    if "ws_gate" in params:
+        shared = mlp({"w_gate": params["ws_gate"], "w_up": params["ws_up"],
+                      "w_down": params["ws_down"]}, tokens)
+        combined = combined + shared
+
+    # --- load-balance auxiliary loss (Switch-style) -------------------------
+    # fraction of tokens routed to each expert x mean router prob per expert
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(top_ids, cfg.num_experts, dtype=jnp.float32), axis=(0, 1))
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_coef * cfg.num_experts * jnp.sum(assign_frac * prob_frac)
+
+    return combined.reshape(b, t, d), aux
+
+
+def _moe_ffn_gather(params: Params, x: jnp.ndarray, cfg: MoEConfig
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dropless decode path: gather each token's top-k expert weights.
+
+    Exact (no capacity dropping, batch-composition independent).  Cost
+    is n·k weight-slice reads — the true memory-bound cost of MoE
+    decode.  Expert weights should be TP-sharded on the FFN dim in
+    serve mode (see distributed/sharding.py) so the gather over the
+    expert dim stays collective-free.
+    """
+    b, t, d = x.shape
+    n = b * t
+    tokens = x.reshape(n, d)
+    logits = tokens.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_probs, top_ids = jax.lax.top_k(probs, cfg.top_k)        # (n, k)
+    top_probs = top_probs / jnp.sum(top_probs, axis=-1, keepdims=True)
+
+    wg = params["we_gate"][top_ids]                              # (n,k,d,f)
+    wu = params["we_up"][top_ids]
+    wd = params["we_down"][top_ids]                              # (n,k,f,d)
+    gate = jax.nn.silu(jnp.einsum("nd,nkdf->nkf", tokens, wg)
+                       .astype(jnp.float32)).astype(x.dtype)
+    up = jnp.einsum("nd,nkdf->nkf", tokens, wu)
+    out_k = jnp.einsum("nkf,nkfd->nkd", gate * up, wd)           # (n,k,d)
+    combined = jnp.sum(out_k.astype(jnp.float32)
+                       * top_probs[..., None], axis=1).astype(x.dtype)
+
+    if "ws_gate" in params:
+        shared = mlp({"w_gate": params["ws_gate"], "w_up": params["ws_up"],
+                      "w_down": params["ws_down"]}, tokens)
+        combined = combined + shared
+
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(top_ids, cfg.num_experts, dtype=jnp.float32), axis=(0, 1))
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_coef * cfg.num_experts * jnp.sum(assign_frac * prob_frac)
+    return combined.reshape(b, t, d), aux

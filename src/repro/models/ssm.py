@@ -1,0 +1,298 @@
+"""Recurrent sequence-mixing blocks: Mamba-1 selective scan and xLSTM.
+
+All three blocks (Mamba, sLSTM, mLSTM) share one contract:
+
+  * ``<kind>_init(key, d_model, cfg, dtype)``      -> params
+  * ``<kind>_init_state(cfg, d_model, batch)``     -> decode state (pytree)
+  * ``<kind>_forward(params, x, state)``           -> (y, new_state)
+
+``x`` is (B, T, inner-input); full-sequence forward runs a
+``lax.scan`` over time (O(1) live memory in T, trip-count-invariant
+HLO), and decode is the same cell applied to T=1.  Decode state is
+O(1) in sequence length — this is what makes these families eligible
+for the ``long_500k`` shape (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MambaConfig
+from repro.models.layers import Params, dense_init
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # (B, conv_dim-1, inner) — rolling conv window
+    ssm: jnp.ndarray    # (B, inner, N) — SSM hidden state (fp32)
+
+
+def mamba_init(key: jax.Array, d_model: int, cfg: MambaConfig,
+               dtype=jnp.bfloat16) -> Params:
+    inner = cfg.expand * d_model
+    dtr = cfg.resolved_dt_rank(d_model)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # S4/Mamba A initialization: A_n = -(n+1) per state index.
+    a_init = jnp.tile(jnp.arange(1, cfg.state_dim + 1, dtype=jnp.float32)[None, :],
+                      (inner, 1))
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default).
+    u = jax.random.uniform(k5, (inner,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(k1, d_model, 2 * inner, dtype),
+        "conv_w": (jax.random.normal(k2, (inner, cfg.conv_dim), jnp.float32)
+                   / math.sqrt(cfg.conv_dim)).astype(dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        "x_proj": dense_init(k3, inner, dtr + 2 * cfg.state_dim, dtype),
+        "dt_proj": dense_init(k4, dtr, inner, dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(jax.random.fold_in(key, 7), inner, d_model, dtype),
+    }
+
+
+def mamba_init_state(cfg: MambaConfig, d_model: int, batch: int) -> MambaState:
+    inner = cfg.expand * d_model
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.conv_dim - 1, inner), jnp.bfloat16),
+        ssm=jnp.zeros((batch, inner, cfg.state_dim), jnp.float32),
+    )
+
+
+def _mamba_scan_step(a_neg, h, dt, bx, cx, x, d_skip):
+    """One selective-scan update.  Shapes: h (B,I,N); dt,x (B,I); bx,cx (B,N)."""
+    da = jnp.exp(dt[..., None] * a_neg[None])                  # (B, I, N)
+    h = da * h + (dt * x)[..., None] * bx[:, None, :]
+    y = jnp.sum(h * cx[:, None, :], axis=-1) + d_skip * x       # (B, I)
+    return h, y
+
+
+def mamba_forward(params: Params, cfg: MambaConfig, x: jnp.ndarray,
+                  state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """x: (B, T, d_model).  Returns (y (B,T,d_model), new_state)."""
+    b, t, d = x.shape
+    inner = cfg.expand * d
+    dtr = cfg.resolved_dt_rank(d)
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                          # (B, T, I) each
+
+    # causal depthwise conv over time, seeded with the rolling state
+    window = jnp.concatenate([state.conv.astype(xin.dtype), xin], axis=1)
+    new_conv = window[:, -(cfg.conv_dim - 1):] if cfg.conv_dim > 1 else state.conv
+    conv_w = params["conv_w"].astype(jnp.float32)
+    stacked = jnp.stack(
+        [window[:, i:i + t] for i in range(cfg.conv_dim)], axis=-1)  # (B,T,I,K)
+    xc = jnp.einsum("btik,ik->bti", stacked.astype(jnp.float32), conv_w)
+    xc = jax.nn.silu(xc + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    dbc = xc @ params["x_proj"]                                  # (B,T,dtr+2N)
+    dt_r, bmat, cmat = jnp.split(dbc, [dtr, dtr + cfg.state_dim], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["a_log"])                            # (I, N)
+    d_skip = params["d_skip"]
+
+    xc32 = xc.astype(jnp.float32)
+    bm32 = bmat.astype(jnp.float32)
+    cm32 = cmat.astype(jnp.float32)
+
+    def step(h, inputs):
+        dt_t, bx_t, cx_t, x_t = inputs
+        h, y = _mamba_scan_step(a_neg, h, dt_t, bx_t, cx_t, x_t, d_skip)
+        return h, y
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bm32, 1, 0),
+          jnp.moveaxis(cm32, 1, 0), jnp.moveaxis(xc32, 1, 0))
+    h_final, ys = jax.lax.scan(step, state.ssm, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                   # (B, T, I)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ params["out_proj"]
+    return out, MambaState(conv=new_conv.astype(state.conv.dtype), ssm=h_final)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — sLSTM (scalar memory, recurrent) and mLSTM (matrix memory)
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, H, hd) cell
+    n: jnp.ndarray   # (B, H, hd) normalizer
+    h: jnp.ndarray   # (B, H, hd) hidden (recurrent input)
+    m: jnp.ndarray   # (B, H, hd) stabilizer
+
+
+class MLSTMState(NamedTuple):
+    cmat: jnp.ndarray  # (B, H, hd, hd) matrix memory
+    n: jnp.ndarray     # (B, H, hd) normalizer
+    m: jnp.ndarray     # (B, H) stabilizer
+
+
+def slstm_init(key: jax.Array, d_model: int, num_heads: int,
+               dtype=jnp.bfloat16) -> Params:
+    hd = d_model // num_heads
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gates": dense_init(k1, d_model, 4 * d_model, dtype),
+        "r_gates": (jax.random.normal(k2, (num_heads, hd, 4 * hd), jnp.float32)
+                    / math.sqrt(hd)).astype(dtype),
+        "b_gates": jnp.zeros((4 * d_model,), jnp.float32),
+        "down_proj": dense_init(k3, d_model, d_model, dtype),
+    }
+
+
+def slstm_init_state(d_model: int, num_heads: int, batch: int) -> SLSTMState:
+    hd = d_model // num_heads
+    shape = (batch, num_heads, hd)
+    z = jnp.zeros(shape, jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full(shape, -1e30, jnp.float32))
+
+
+def _slstm_cell(gates_x, params, state: SLSTMState, num_heads: int):
+    """One sLSTM step.  gates_x: (B, 4*d) input contribution (fp32)."""
+    b = gates_x.shape[0]
+    hd = state.c.shape[-1]
+    rec = jnp.einsum("bhd,hde->bhe", state.h, params["r_gates"].astype(jnp.float32))
+    gx = gates_x.reshape(b, num_heads, 4 * hd) + rec \
+        + params["b_gates"].reshape(num_heads, 4 * hd)
+    i_t, f_t, z_t, o_t = jnp.split(gx, 4, axis=-1)               # (B,H,hd) each
+    m_new = jnp.maximum(f_t + state.m, i_t)
+    i_g = jnp.exp(i_t - m_new)
+    f_g = jnp.exp(f_t + state.m - m_new)
+    c_new = f_g * state.c + i_g * jnp.tanh(z_t)
+    n_new = f_g * state.n + i_g
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(jnp.abs(n_new), 1e-6)
+    return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_forward(params: Params, x: jnp.ndarray, state: SLSTMState,
+                  num_heads: int) -> Tuple[jnp.ndarray, SLSTMState]:
+    """x: (B, T, d).  Sequential over T (inherently recurrent)."""
+    b, t, d = x.shape
+    gates_all = (x @ params["w_gates"]).astype(jnp.float32)      # (B, T, 4d)
+
+    def step(s, g_t):
+        s2 = _slstm_cell(g_t, params, s, num_heads)
+        return s2, s2.h
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(gates_all, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, t, d).astype(x.dtype)
+    return y @ params["down_proj"], final
+
+
+def mlstm_init(key: jax.Array, d_model: int, num_heads: int,
+               dtype=jnp.bfloat16, proj_factor: int = 2) -> Params:
+    inner = proj_factor * d_model
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(k1, d_model, 2 * inner, dtype),
+        "conv_w": (jax.random.normal(k2, (inner, 4), jnp.float32) / 2.0).astype(dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        "w_qkv": dense_init(k3, inner, 3 * inner, dtype),
+        "w_gates": dense_init(k4, inner, 2 * num_heads, jnp.float32),
+        "down_proj": dense_init(k5, inner, d_model, dtype),
+    }
+
+
+def mlstm_init_state(d_model: int, num_heads: int, batch: int,
+                     proj_factor: int = 2) -> MLSTMState:
+    inner = proj_factor * d_model
+    hd = inner // num_heads
+    return MLSTMState(
+        cmat=jnp.zeros((batch, num_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, num_heads, hd), jnp.float32),
+        m=jnp.full((batch, num_heads), -1e30, jnp.float32),
+    )
+
+
+class _MLSTMInputs(NamedTuple):
+    q: jnp.ndarray   # (B, H, hd)
+    k: jnp.ndarray
+    v: jnp.ndarray
+    i: jnp.ndarray   # (B, H)
+    f: jnp.ndarray
+
+
+def _mlstm_cell(inp: _MLSTMInputs, state: MLSTMState
+                ) -> Tuple[MLSTMState, jnp.ndarray]:
+    hd = inp.q.shape[-1]
+    m_new = jnp.maximum(inp.f + state.m, inp.i)
+    i_g = jnp.exp(inp.i - m_new)                                 # (B, H)
+    f_g = jnp.exp(inp.f + state.m - m_new)
+    kv = inp.v[..., :, None] * inp.k[..., None, :]               # (B,H,hd,hd)
+    c_new = f_g[..., None, None] * state.cmat + i_g[..., None, None] * kv
+    n_new = f_g[..., None] * state.n + i_g[..., None] * inp.k
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, inp.q)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, inp.q)), 1.0)[..., None]
+    h = num / den                                                # (B, H, hd)
+    return MLSTMState(cmat=c_new, n=n_new, m=m_new), h
+
+
+def _mlstm_conv(params: Params, xin: jnp.ndarray, conv_state: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Causal depthwise conv(4) with rolling state.  xin: (B, T, I)."""
+    kdim = params["conv_w"].shape[-1]
+    window = jnp.concatenate([conv_state.astype(xin.dtype), xin], axis=1)
+    t = xin.shape[1]
+    stacked = jnp.stack([window[:, i:i + t] for i in range(kdim)], axis=-1)
+    out = jnp.einsum("btik,ik->bti", stacked.astype(jnp.float32),
+                     params["conv_w"].astype(jnp.float32))
+    out = jax.nn.silu(out + params["conv_b"].astype(jnp.float32))
+    return out.astype(xin.dtype), window[:, -(kdim - 1):]
+
+
+class MLSTMBlockState(NamedTuple):
+    cell: MLSTMState
+    conv: jnp.ndarray   # (B, 3, inner)
+
+
+def mlstm_block_init_state(d_model: int, num_heads: int, batch: int,
+                           proj_factor: int = 2) -> MLSTMBlockState:
+    inner = proj_factor * d_model
+    return MLSTMBlockState(
+        cell=mlstm_init_state(d_model, num_heads, batch, proj_factor),
+        conv=jnp.zeros((batch, 3, inner), jnp.bfloat16),
+    )
+
+
+def mlstm_forward(params: Params, x: jnp.ndarray, state: MLSTMBlockState,
+                  num_heads: int) -> Tuple[jnp.ndarray, MLSTMBlockState]:
+    """Full mLSTM block body (post-norm residual handled by caller)."""
+    b, t, d = x.shape
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                           # (B,T,I)
+    inner = xin.shape[-1]
+    hd = inner // num_heads
+
+    xc, new_conv = _mlstm_conv(params, xin, state.conv)
+    qkv = xc @ params["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, num_heads, hd).astype(jnp.float32)
+    k = (k.reshape(b, t, num_heads, hd) / math.sqrt(hd)).astype(jnp.float32)
+    v = v.reshape(b, t, num_heads, hd).astype(jnp.float32)
+    gates = (xc.astype(jnp.float32) @ params["w_gates"])         # (B,T,2H)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    # log-sigmoid forget gate (xLSTM exponential gating, stabilized)
+    f_pre = jax.nn.log_sigmoid(f_pre)
+
+    def step(s, inp):
+        s2, h = _mlstm_cell(_MLSTMInputs(*inp), s)
+        return s2, h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre))
+    cell_final, hs = jax.lax.scan(step, state.cell, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, t, inner).astype(x.dtype)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = h @ params["down_proj"]
+    return out, MLSTMBlockState(cell=cell_final,
+                                conv=new_conv.astype(state.conv.dtype))

@@ -1,0 +1,447 @@
+"""Block stack: init, full-sequence forward, and the APEX unified decode.
+
+The stack is lowered as ``lax.scan`` over *pattern groups* (one group =
+one repetition of ``cfg.block_pattern``), so the compiled HLO is
+depth-invariant.  Parameters and decode states carry a leading ``G``
+(= num_groups) axis.
+
+The decode step implements the paper's **Asynchronous Overlap**
+semantics natively in the dataflow (DESIGN.md §4):
+
+  * all rows — device-resident ("GPU") and host-offloaded ("CPU") —
+    share every linear op in one unified batch (no batch splitting);
+  * device rows run attention on-device against the slot KV cache;
+  * host rows *consume* the host-computed attention for their current
+    layer (an input computed during the previous engine iteration) and
+    *emit* fresh Q/K/V for their next attention layer (an output the
+    engine ships to the host backend);
+  * host rows commit residual/state updates only inside their active
+    layer window [window_start, window_end); elsewhere they ride along
+    (free under the paper's flat-T_glinear observation, Fig. 1a).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import ssm
+from repro.models.attention import chunked_gqa_attention
+from repro.models.config import BlockKind, FFNKind, ModelConfig
+from repro.models.kv_cache import AttnKV, StackState
+from repro.models.layers import (Params, attention_init, attention_output,
+                                 gqa_attention, mlp, mlp_init, qkv_project,
+                                 rmsnorm, rmsnorm_init, rope_frequencies)
+from repro.models.moe import moe_ffn, moe_init
+
+# Chunk threshold above which the memory-efficient attention path is used.
+CHUNKED_ATTN_THRESHOLD = 2048
+
+
+class HostIO(NamedTuple):
+    """Per-iteration host-offload interface of the unified decode step."""
+
+    x_carry: jnp.ndarray        # (Bc, d) residual carry of host rows
+    positions: jnp.ndarray      # (Bc,) token positions of host rows
+    attn_in: jnp.ndarray        # (Bc, H, D) host attention for `consume_layer`
+    consume_layer: jnp.ndarray  # () int32 — absolute layer idx, -1 = none
+    emit_layer: jnp.ndarray     # () int32 — attn layer to emit QKV at, -1 = none
+    window_start: jnp.ndarray   # () int32 — first layer host rows commit at
+    window_end: jnp.ndarray     # () int32 — exclusive end of commit window
+    row_valid: jnp.ndarray      # (Bc,) bool — rows in the active cohort
+    #                             (empty/just-spliced slots never commit)
+
+
+class QKVOut(NamedTuple):
+    """Q/K/V emitted for the host backend (valid iff emit_layer >= 0)."""
+
+    q: jnp.ndarray  # (Bc, H, D)
+    k: jnp.ndarray  # (Bc, KV, D)
+    v: jnp.ndarray  # (Bc, KV, D)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def entry_init(key: jax.Array, cfg: ModelConfig, kind: BlockKind,
+               entry_idx: int = 0) -> Params:
+    """Parameters of a single (unstacked) block entry."""
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ffn_kind = cfg.ffn_kind_for_entry(entry_idx)
+    if kind == BlockKind.ATTN:
+        p: Params = {
+            "ln1": rmsnorm_init(d, dt),
+            "attn": attention_init(k1, d, cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim, dt),
+        }
+        if ffn_kind != FFNKind.NONE:
+            p["ln2"] = rmsnorm_init(d, dt)
+            p["ffn"] = _ffn_init(k2, cfg, ffn_kind)
+        return p
+    if kind == BlockKind.MAMBA:
+        p = {"ln1": rmsnorm_init(d, dt),
+             "mamba": ssm.mamba_init(k1, d, cfg.mamba, dt)}
+        if ffn_kind != FFNKind.NONE:
+            p["ln2"] = rmsnorm_init(d, dt)
+            p["ffn"] = _ffn_init(k3, cfg, ffn_kind)
+        return p
+    if kind == BlockKind.SLSTM:
+        return {"ln1": rmsnorm_init(d, dt),
+                "slstm": ssm.slstm_init(k1, d, cfg.num_heads, dt)}
+    if kind == BlockKind.MLSTM:
+        return {"ln1": rmsnorm_init(d, dt),
+                "mlstm": ssm.mlstm_init(k1, d, cfg.num_heads, dt)}
+    raise ValueError(kind)
+
+
+def _ffn_init(key: jax.Array, cfg: ModelConfig, kind: FFNKind) -> Params:
+    if kind == FFNKind.MOE:
+        return moe_init(key, cfg.d_model, cfg.moe, _dtype(cfg))
+    return mlp_init(key, cfg.d_model, cfg.d_ff, _dtype(cfg))
+
+
+def stack_init(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, ...]:
+    """Init all blocks; returns tuple over pattern entries, leaves (G, ...)."""
+    out = []
+    for j, kind in enumerate(cfg.block_pattern):
+        keys = jax.random.split(jax.random.fold_in(key, j), cfg.num_groups)
+        out.append(jax.vmap(
+            lambda k, kd=kind, jj=j: entry_init(k, cfg, kd, jj))(keys))
+    return tuple(out)
+
+
+def entry_state_init(cfg: ModelConfig, kind: BlockKind, *, device_batch: int,
+                     total_batch: int, cache_len: int, kv_dtype=jnp.bfloat16):
+    """Decode state of one (unstacked) entry.
+
+    Attention caches hold only the ``device_batch`` rows (host rows'
+    KV lives in the host pool); recurrent states hold every row.
+    """
+    if kind == BlockKind.ATTN:
+        shape = (device_batch, cache_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+        return AttnKV(k=jnp.zeros(shape, kv_dtype), v=jnp.zeros(shape, kv_dtype))
+    if kind == BlockKind.MAMBA:
+        return ssm.mamba_init_state(cfg.mamba, cfg.d_model, total_batch)
+    if kind == BlockKind.SLSTM:
+        return ssm.slstm_init_state(cfg.d_model, cfg.num_heads, total_batch)
+    if kind == BlockKind.MLSTM:
+        return ssm.mlstm_block_init_state(cfg.d_model, cfg.num_heads, total_batch)
+    raise ValueError(kind)
+
+
+def _stack_over_groups(cfg: ModelConfig, s):
+    """Tile an entry state over the G scan groups (preserves init values,
+    e.g. the xLSTM stabilizer's -1e30 fill)."""
+    return jax.tree.map(
+        lambda x: jnp.repeat(x[None], cfg.num_groups, axis=0), s)
+
+
+def state_init(cfg: ModelConfig, *, device_batch: int, host_batch: int = 0,
+               cache_len: int, kv_dtype=jnp.bfloat16) -> StackState:
+    """Zero decode state for the whole stack (leaves stacked over G)."""
+    total = device_batch + host_batch
+    per_entry = []
+    for kind in cfg.block_pattern:
+        s = entry_state_init(cfg, kind, device_batch=device_batch,
+                             total_batch=total, cache_len=cache_len,
+                             kv_dtype=kv_dtype)
+        per_entry.append(_stack_over_groups(cfg, s))
+    return StackState(per_entry=tuple(per_entry),
+                      lengths=jnp.zeros((device_batch,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _ffn_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+               rng: Optional[jax.Array]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    # presence of a router distinguishes MoE from dense at apply time
+    if "router" in p:
+        return moe_ffn(p, x, cfg.moe, router_key=rng)
+    return mlp(p, x), jnp.zeros((), jnp.float32)
+
+
+def _attn_full(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+               positions: jnp.ndarray, kv: Optional[AttnKV],
+               lengths: Optional[jnp.ndarray],
+               prefix_len: Optional[jnp.ndarray],
+               rng: Optional[jax.Array]):
+    """Full-seq attention block.  x: (B, T, d)."""
+    inv_freq = rope_frequencies(cfg.resolved_head_dim, cfg.rope_theta)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = qkv_project(p["attn"], h, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.resolved_head_dim, positions, inv_freq)
+    q = constrain(q, "batch", None, "heads", None)
+    t = x.shape[1]
+    new_kv = None
+    if kv is not None:
+        # prefill: write the span, attend over the cache
+        b = x.shape[0]
+        rows = jnp.arange(b)[:, None]
+        cols = lengths[:, None] + jnp.arange(t)[None, :]
+        kc = kv.k.at[rows, cols].set(k.astype(kv.k.dtype))
+        vc = kv.v.at[rows, cols].set(v.astype(kv.v.dtype))
+        new_kv = AttnKV(k=kc, v=vc)
+        s = kc.shape[1]
+        kv_positions = jnp.arange(s)[None, :].repeat(b, 0)
+        valid = lengths + t
+        if s > CHUNKED_ATTN_THRESHOLD:
+            attn = chunked_gqa_attention(
+                q, kc, vc, q_positions=positions, kv_positions=kv_positions,
+                causal=cfg.causal, prefix_len=prefix_len, kv_valid_len=valid)
+        else:
+            attn = gqa_attention(q, kc, vc, causal=cfg.causal,
+                                 q_positions=positions,
+                                 kv_positions=kv_positions,
+                                 kv_valid_len=valid, prefix_len=prefix_len)
+    else:
+        if t > CHUNKED_ATTN_THRESHOLD:
+            attn = chunked_gqa_attention(
+                q, k, v, q_positions=positions, kv_positions=positions,
+                causal=cfg.causal, prefix_len=prefix_len)
+        else:
+            attn = gqa_attention(q, k, v, causal=cfg.causal,
+                                 q_positions=positions, kv_positions=positions,
+                                 prefix_len=prefix_len)
+    attn = constrain(attn, "batch", None, "heads", None)
+    x = x + attention_output(p["attn"], attn)
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        f, aux = _ffn_apply(p["ffn"], cfg, h2, rng)
+        x = x + f
+    return x, new_kv, aux
+
+
+def entry_forward_full(p: Params, cfg: ModelConfig, kind: BlockKind,
+                       x: jnp.ndarray, positions: jnp.ndarray,
+                       state, lengths, prefix_len, rng):
+    """One block over a full sequence.  Returns (x, new_state, aux)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind == BlockKind.ATTN:
+        return _attn_full(p, cfg, x, positions, state, lengths, prefix_len, rng)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == BlockKind.MAMBA:
+        s = state if state is not None else ssm.mamba_init_state(
+            cfg.mamba, cfg.d_model, x.shape[0])
+        y, s_new = ssm.mamba_forward(p["mamba"], cfg.mamba, h, s)
+        x = x + y
+        aux = zero
+        if "ffn" in p:
+            h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            f, aux = _ffn_apply(p["ffn"], cfg, h2, rng)
+            x = x + f
+        return x, s_new, aux
+    if kind == BlockKind.SLSTM:
+        s = state if state is not None else ssm.slstm_init_state(
+            cfg.d_model, cfg.num_heads, x.shape[0])
+        y, s_new = ssm.slstm_forward(p["slstm"], h, s, cfg.num_heads)
+        return x + y, s_new, zero
+    if kind == BlockKind.MLSTM:
+        s = state if state is not None else ssm.mlstm_block_init_state(
+            cfg.d_model, cfg.num_heads, x.shape[0])
+        y, s_new = ssm.mlstm_forward(p["mlstm"], h, s, cfg.num_heads)
+        return x + y, s_new, zero
+    raise ValueError(kind)
+
+
+def stack_forward(blocks: Tuple[Params, ...], cfg: ModelConfig,
+                  x: jnp.ndarray, positions: jnp.ndarray,
+                  state: Optional[StackState] = None, *,
+                  prefix_len: Optional[jnp.ndarray] = None,
+                  rng: Optional[jax.Array] = None,
+                  remat: bool = False):
+    """Run the whole stack over a full sequence.
+
+    Returns (x, new_state | None, aux_loss).
+    """
+    x = constrain(x, "batch", "seq", None)
+
+    if state is None:
+        def group(carry, xs):
+            xc, aux = carry
+            params_g, g_idx = xs
+            for j, kind in enumerate(cfg.block_pattern):
+                rng_j = (jax.random.fold_in(rng, g_idx * cfg.pattern_period + j)
+                         if rng is not None else None)
+                xc, _, a = entry_forward_full(
+                    jax.tree.map(lambda q: q, params_g[j]), cfg, kind, xc,
+                    positions, None, None, prefix_len, rng_j)
+            xc = constrain(xc, "batch", "seq", None)
+            return (xc, aux + a), None
+
+        fn = jax.checkpoint(group) if remat else group
+        (x, aux), _ = jax.lax.scan(
+            fn, (x, jnp.zeros((), jnp.float32)),
+            (blocks, jnp.arange(cfg.num_groups)))
+        return x, None, aux
+
+    def group_state(carry, xs):
+        xc, aux = carry
+        params_g, state_g, g_idx = xs
+        new_states = []
+        for j, kind in enumerate(cfg.block_pattern):
+            rng_j = (jax.random.fold_in(rng, g_idx * cfg.pattern_period + j)
+                     if rng is not None else None)
+            xc, s_new, a = entry_forward_full(
+                params_g[j], cfg, kind, xc, positions, state_g[j],
+                state.lengths, prefix_len, rng_j)
+            new_states.append(s_new if s_new is not None else state_g[j])
+            aux = aux + a
+        xc = constrain(xc, "batch", "seq", None)
+        return (xc, aux), tuple(new_states)
+
+    fn = jax.checkpoint(group_state) if remat else group_state
+    (x, aux), new_per_entry = jax.lax.scan(
+        fn, (x, jnp.zeros((), jnp.float32)),
+        (blocks, state.per_entry, jnp.arange(cfg.num_groups)))
+    new_state = StackState(per_entry=new_per_entry,
+                           lengths=state.lengths + x.shape[1])
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# Unified decode step (APEX Asynchronous Overlap semantics)
+# ---------------------------------------------------------------------------
+
+
+def _attn_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray, kv: AttnKV, lengths: jnp.ndarray,
+                 layer_idx: jnp.ndarray, host: Optional[HostIO],
+                 device_batch: int):
+    """One attention block for one decode token.  x: (B, d).
+
+    Returns (x_new (pre-commit), new_kv, qkv_host (or None)).
+    """
+    inv_freq = rope_frequencies(cfg.resolved_head_dim, cfg.rope_theta)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)[:, None]               # (B,1,d)
+    q, k, v = qkv_project(p["attn"], h, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.resolved_head_dim, positions[:, None], inv_freq)
+    bg = device_batch
+    # device rows: write the fresh token, attend over the valid cache
+    rows = jnp.arange(bg)
+    kc = kv.k.at[rows, lengths].set(k[:bg, 0].astype(kv.k.dtype))
+    vc = kv.v.at[rows, lengths].set(v[:bg, 0].astype(kv.v.dtype))
+    new_kv = AttnKV(k=kc, v=vc)
+    attn_g = gqa_attention(q[:bg], kc, vc, causal=False,
+                           kv_valid_len=lengths + 1)              # (Bg,1,H,D)
+    if host is not None:
+        use_host = layer_idx == host.consume_layer
+        attn_c = jnp.where(use_host, host.attn_in.astype(attn_g.dtype), 0.0)
+        attn = jnp.concatenate([attn_g[:, 0], attn_c], axis=0)    # (B,H,D)
+        qkv_host = QKVOut(q=q[bg:, 0], k=k[bg:, 0], v=v[bg:, 0])
+    else:
+        attn = attn_g[:, 0]
+        qkv_host = None
+    out = attention_output(p["attn"], attn[:, None])[:, 0]
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        f, aux = _ffn_apply(p["ffn"], cfg, h2[:, None], None)
+        x = x + f[:, 0]
+    return x, new_kv, qkv_host, aux
+
+
+def _recurrent_decode(p: Params, cfg: ModelConfig, kind: BlockKind,
+                      x: jnp.ndarray, state):
+    """One recurrent block for one decode token.  x: (B, d)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)[:, None]
+    if kind == BlockKind.MAMBA:
+        y, s_new = ssm.mamba_forward(p["mamba"], cfg.mamba, h, state)
+        x2 = x + y[:, 0]
+        if "ffn" in p:
+            h2 = rmsnorm(p["ln2"], x2, cfg.norm_eps)
+            f, _ = _ffn_apply(p["ffn"], cfg, h2[:, None], None)
+            x2 = x2 + f[:, 0]
+        return x2, s_new
+    if kind == BlockKind.SLSTM:
+        y, s_new = ssm.slstm_forward(p["slstm"], h, state, cfg.num_heads)
+        return x + y[:, 0], s_new
+    if kind == BlockKind.MLSTM:
+        y, s_new = ssm.mlstm_forward(p["mlstm"], h, state, cfg.num_heads)
+        return x + y[:, 0], s_new
+    raise ValueError(kind)
+
+
+def _commit_rows(layer_idx, host: Optional[HostIO], device_batch: int,
+                 total_batch: int) -> jnp.ndarray:
+    """(B,) bool — which rows commit residual/state updates at this layer."""
+    if host is None:
+        return jnp.ones((total_batch,), bool)
+    in_window = (layer_idx >= host.window_start) & (layer_idx < host.window_end)
+    gpu = jnp.ones((device_batch,), bool)
+    cpu = host.row_valid & in_window
+    return jnp.concatenate([gpu, cpu])
+
+
+def decode_step(blocks: Tuple[Params, ...], cfg: ModelConfig,
+                x: jnp.ndarray, positions: jnp.ndarray, state: StackState,
+                host: Optional[HostIO] = None):
+    """One decode iteration over the unified batch.
+
+    x: (B, d) residual-stream input — device rows carry the fresh token
+    embedding, host rows carry ``host.x_carry``.  positions: (B,).
+    Returns (x_final (B, d), new_state, qkv_out | None).
+    """
+    device_batch = state.lengths.shape[0]
+    total = x.shape[0]
+    x = constrain(x, "batch", None)
+    period = cfg.pattern_period
+
+    dummy_qkv = QKVOut(
+        q=jnp.zeros((total - device_batch, cfg.num_heads,
+                     cfg.resolved_head_dim), jnp.float32),
+        k=jnp.zeros((total - device_batch, cfg.num_kv_heads,
+                     cfg.resolved_head_dim), jnp.float32),
+        v=jnp.zeros((total - device_batch, cfg.num_kv_heads,
+                     cfg.resolved_head_dim), jnp.float32),
+    ) if host is not None else None
+
+    def group(carry, xs):
+        xc, qkv_acc = carry
+        params_g, state_g, g_idx = xs
+        new_states = []
+        for j, kind in enumerate(cfg.block_pattern):
+            layer_idx = g_idx * period + j
+            commit = _commit_rows(layer_idx, host, device_batch, total)
+            if kind == BlockKind.ATTN:
+                x_new, kv_new, qkv_host, _ = _attn_decode(
+                    params_g[j], cfg, xc, positions, state_g[j],
+                    state.lengths, layer_idx, host, device_batch)
+                new_states.append(kv_new)   # device rows only: always commit
+                if host is not None:
+                    emit = layer_idx == host.emit_layer
+                    qkv_acc = jax.tree.map(
+                        lambda new, old: jnp.where(emit, new, old),
+                        qkv_host, qkv_acc)
+            else:
+                x_new, s_new = _recurrent_decode(params_g[j], cfg, kind, xc,
+                                                 state_g[j])
+                s_old = state_g[j]
+                s_kept = jax.tree.map(
+                    lambda n, o: jnp.where(
+                        commit.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                    s_new, s_old)
+                new_states.append(s_kept)
+            xc = jnp.where(commit[:, None], x_new, xc)
+            xc = constrain(xc, "batch", None)
+        return (xc, qkv_acc), tuple(new_states)
+
+    (x, qkv_out), new_per_entry = jax.lax.scan(
+        group, (x, dummy_qkv),
+        (blocks, state.per_entry, jnp.arange(cfg.num_groups)))
+    new_state = StackState(per_entry=new_per_entry, lengths=state.lengths + 1)
+    return x, new_state, qkv_out

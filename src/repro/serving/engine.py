@@ -1,0 +1,373 @@
+"""Online serving engine — real execution of the APEX design.
+
+Wires together: admission (GPU-first, rule 1), the Algorithm-1
+scheduler, the Asynchronous Overlap runtime (OverlapController +
+HostExecutor thread) and the jitted model step functions.  On TPU the
+device tier is the chip mesh; on this container it is the jax CPU
+backend while the host tier is the threaded numpy executor — the
+*structure* (async dispatch of the device step overlapping host
+attention) is identical.
+
+Static-shape discipline: one decode compile per (device_slots,
+host_slots) pair; inactive rows ride along masked.  Asymmetric
+Pipelining is executed at engine granularity (two sub-steps per cycle,
+host attention computed between them) — the per-layer interleaved
+variant exists only in the simulator; this engine focuses on the
+paper's contribution (Asynchronous Overlap), which is exact here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.overlap_engine import Cohort, HostExecutor, OverlapController
+from repro.core.scheduler import StrategyKind
+from repro.models import (ModelParams, decode_step, init_decode_state, prefill)
+from repro.models.config import BlockKind, ModelConfig
+from repro.models.kv_cache import PagedKVPool, StackState
+from repro.serving.request import Phase, Request
+from repro.serving.sampler import sample
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    device_slots: int = 8
+    host_slots: int = 8
+    cache_len: int = 256
+    page_size: int = 32
+    host_pool_pages: int = 512
+    max_queue: int = 1024
+    temperature: float = 0.0
+    # offload policy: fraction of device KV that must be claimed before
+    # requests go to the host tier (GPU-first rule)
+    enable_offload: bool = True
+
+
+@dataclasses.dataclass
+class EngineStats:
+    device_tokens: int = 0
+    host_tokens: int = 0
+    iterations: int = 0
+    wall_time: float = 0.0
+    host_busy_time: float = 0.0
+
+    @property
+    def throughput(self) -> float:
+        return (self.device_tokens + self.host_tokens) / max(self.wall_time,
+                                                             1e-9)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: ModelParams,
+                 ecfg: Optional[EngineConfig] = None) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.e = ecfg or EngineConfig()
+        if not cfg.has_kv_cache:
+            self.e.enable_offload = False   # APEX inapplicable (DESIGN §5)
+        self.state = init_decode_state(
+            cfg, device_batch=self.e.device_slots,
+            host_batch=self.e.host_slots if self.e.enable_offload else 0,
+            cache_len=self.e.cache_len)
+        self.slots: List[Optional[Request]] = [None] * self.e.device_slots
+        self.queue: List[Request] = []
+        self.host_requests: Dict[int, Request] = {}
+        self.stats = EngineStats()
+        self._decode_fn = jax.jit(
+            lambda p, tok, st: decode_step(p, cfg, tok, st))
+        self._overlap = None
+        self._executor = None
+        if self.e.enable_offload:
+            self._overlap = OverlapController(cfg)
+            pool = PagedKVPool(self.e.host_pool_pages, self.e.page_size,
+                               cfg.num_attn_layers, cfg.num_kv_heads,
+                               cfg.resolved_head_dim)
+            self._executor = HostExecutor(cfg, pool)
+            self._cohort: Optional[Cohort] = None
+            self._host_slot_owner: Dict[int, int] = {}   # slot -> request_id
+            self._pending_job: Optional[int] = None
+            self._job_ids = iter(range(1, 1 << 30))
+            self._decode_overlap_fn = jax.jit(
+                lambda p, tok, st, host: decode_step(p, cfg, tok, st, host))
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        request.phase = Phase.QUEUED
+        self.queue.append(request)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    # --- prefill ----------------------------------------------------------
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        """Prefill on device into this slot of the shared state."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        sub = init_decode_state(self.cfg, device_batch=1,
+                                cache_len=self.e.cache_len)
+        logits, sub = prefill(self.params, self.cfg, {"tokens": prompt}, sub)
+        tok = int(sample(logits, temperature=self.e.temperature)[0])
+        req.output.append(tok)
+        if req.first_token_time is None:
+            req.first_token_time = time.perf_counter()
+        # splice the single-row state into the shared batch state
+        new_entries = []
+        for j, entry in enumerate(self.state.per_entry):
+            if self.cfg.block_pattern[j] == BlockKind.ATTN:
+                new_entries.append(jax.tree.map(
+                    lambda big, small: big.at[:, slot].set(small[:, 0]),
+                    entry, sub.per_entry[j]))
+            else:
+                new_entries.append(jax.tree.map(
+                    lambda big, small: big.at[:, slot].set(small[:, 0]),
+                    entry, sub.per_entry[j]))
+        lengths = self.state.lengths.at[slot].set(req.prompt_len)
+        self.state = StackState(per_entry=tuple(new_entries), lengths=lengths)
+        self.slots[slot] = req
+        req.slot = slot
+        req.phase = Phase.DECODE_DEVICE
+
+    def _free_host_slot(self) -> Optional[int]:
+        for i in range(self.e.host_slots):
+            if i not in self._host_slot_owner:
+                return i
+        return None
+
+    def _prefill_to_host(self, req: Request, host_slot: int) -> None:
+        """Prefill on device, migrate attention KV to the host pool
+        (paper §3.1: device prefills; host owns decode attention).
+        Recurrent (Mamba/xLSTM) states stay ON-DEVICE, spliced into the
+        unified state's host row — only attention stalls on the host."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        sub = init_decode_state(self.cfg, device_batch=1,
+                                cache_len=self.e.cache_len)
+        logits, sub = prefill(self.params, self.cfg, {"tokens": prompt}, sub)
+        tok = int(sample(logits, temperature=self.e.temperature)[0])
+        req.output.append(tok)
+        if req.first_token_time is None:
+            req.first_token_time = time.perf_counter()
+        per_layer = []
+        new_entries = []
+        row = self.e.device_slots + host_slot
+        for j, entry in enumerate(self.state.per_entry):
+            if self.cfg.block_pattern[j] == BlockKind.ATTN:
+                k = np.asarray(sub.per_entry[j].k[:, 0], np.float32)
+                v = np.asarray(sub.per_entry[j].v[:, 0], np.float32)
+                for g in range(self.cfg.num_groups):
+                    per_layer.append((k[g, :req.prompt_len],
+                                      v[g, :req.prompt_len]))
+                new_entries.append(entry)   # host rows hold no device KV
+            else:
+                new_entries.append(jax.tree.map(
+                    lambda big, small: big.at[:, row].set(small[:, 0]),
+                    entry, sub.per_entry[j]))
+        self.state = StackState(per_entry=tuple(new_entries),
+                                lengths=self.state.lengths)
+        # reorder: per_layer currently grouped by entry then g; build
+        # absolute attention-layer order
+        ordered = [None] * self.cfg.num_attn_layers
+        idx = 0
+        for j, kind in enumerate(self.cfg.block_pattern):
+            if kind != BlockKind.ATTN:
+                continue
+            for g in range(self.cfg.num_groups):
+                abs_layer = g * self.cfg.pattern_period + j
+                ordered[self.cfg.attn_layer_indices.index(abs_layer)] = \
+                    per_layer[idx]
+                idx += 1
+        self._executor.migrate_prompt(req.request_id, ordered)
+        self.host_requests[req.request_id] = req
+        self._host_slot_owner[host_slot] = req.request_id
+        req.slot = host_slot
+        req.phase = Phase.DECODE_HOST
+        # the cohort picks the new member up at the next token boundary
+
+    # --- admission (rule 1: GPU-first) --------------------------------------
+    def _admit(self) -> None:
+        while self.queue:
+            req = self.queue[0]
+            if req.prompt_len + req.max_new_tokens >= self.e.cache_len:
+                req.max_new_tokens = self.e.cache_len - req.prompt_len - 1
+            slot = self._free_slot()
+            if slot is not None:
+                self._prefill_into_slot(self.queue.pop(0), slot)
+                continue
+            if self.e.enable_offload:
+                hslot = self._free_host_slot()
+                if hslot is not None and self._executor.pool.can_admit(
+                        req.prompt_len + req.max_new_tokens):
+                    self._prefill_to_host(self.queue.pop(0), hslot)
+                    continue
+            break
+
+    # --- cohort management ------------------------------------------------
+    def _ensure_cohort(self) -> Optional[Cohort]:
+        """(Re)build the host cohort — ONLY at token boundaries
+        (attn_ptr == -1): recurrent-state commits are not idempotent, so
+        membership must stay frozen mid-journey."""
+        c = self._cohort
+        if c is not None and c.attn_ptr != -1:
+            return c
+        slot_rids = [self._host_slot_owner.get(i, -1)
+                     for i in range(self.e.host_slots)]
+        if all(r < 0 for r in slot_rids):
+            self._cohort = None
+            return None
+        bc = self.e.host_slots
+        d = self.cfg.d_model
+        emb = self.params.embedding["embed"]
+        x_carry = jnp.zeros((bc, d), emb.dtype)
+        positions = np.zeros((bc,), np.int64)
+        for i, rid in enumerate(slot_rids):
+            if rid < 0:
+                continue
+            r = self.host_requests[rid]
+            x_carry = x_carry.at[i].set(
+                jnp.take(emb, jnp.int32(r.output[-1]), axis=0))
+            positions[i] = r.total_len - 1
+        self._cohort = Cohort(
+            slot_rids=slot_rids, positions=positions, x_carry=x_carry,
+            attn_in=jnp.zeros((bc, self.cfg.num_heads,
+                               self.cfg.resolved_head_dim), jnp.float32))
+        return self._cohort
+
+    # --- one engine iteration ------------------------------------------------
+    def step(self) -> None:
+        t0 = time.perf_counter()
+        self._admit()
+        active_rows = [i for i, r in enumerate(self.slots) if r is not None]
+        tokens = np.zeros((self.e.device_slots,), np.int32)
+        for i in active_rows:
+            tokens[i] = self.slots[i].output[-1]
+        # lengths hygiene for empty slots
+        mask = np.zeros((self.e.device_slots,), bool)
+        mask[active_rows] = True
+        lengths = jnp.where(jnp.asarray(mask), self.state.lengths, 0)
+        self.state = StackState(per_entry=self.state.per_entry,
+                                lengths=lengths)
+
+        cohort = self._ensure_cohort() if self.e.enable_offload else None
+        if cohort is not None:
+            self._step_overlap(jnp.asarray(tokens), cohort, active_rows)
+        elif active_rows:
+            self._step_device_only(jnp.asarray(tokens), active_rows)
+        self.stats.iterations += 1
+        self.stats.wall_time += time.perf_counter() - t0
+        self._retire()
+
+    def _commit_device(self, logits, active_rows) -> None:
+        toks = sample(logits[: self.e.device_slots],
+                      temperature=self.e.temperature)
+        toks = np.asarray(toks)
+        now = time.perf_counter()
+        for i in active_rows:
+            r = self.slots[i]
+            r.output.append(int(toks[i]))
+            self.stats.device_tokens += 1
+            if r.first_token_time is None:
+                r.first_token_time = now
+
+    def _step_device_only(self, tokens, active_rows) -> None:
+        logits, self.state, _, _ = self._decode_fn(self.params, tokens,
+                                                   self.state)
+        self._commit_device(logits, active_rows)
+
+    def _step_overlap(self, tokens, cohort: Cohort, active_rows) -> None:
+        """One Asynchronous Overlap iteration (paper §3.3)."""
+        ctl = self._overlap
+        valid = cohort.valid_slots
+        # the GPU re-check (end of §3.4): if the host result for the
+        # pending job is not ready, host rows ride along untouched
+        if self._pending_job is not None:
+            out = self._executor.poll(self._pending_job)
+            if out is None:
+                host_idle = ctl.host_io(cohort)._replace(
+                    consume_layer=jnp.int32(-1), emit_layer=jnp.int32(-1),
+                    window_start=jnp.int32(0), window_end=jnp.int32(0))
+                logits, self.state, _, xf = self._decode_overlap_fn(
+                    self.params, tokens, self.state, host_idle)
+                self._commit_device(logits, active_rows)
+                return
+            buf = np.zeros(cohort.attn_in.shape, np.float32)
+            for j, i in enumerate(valid):
+                buf[i] = out[j]
+            cohort.attn_in = jnp.asarray(buf)
+            self._pending_job = None
+
+        io = ctl.host_io(cohort)
+        emit_layer = ctl.emit_layer(cohort)
+        completes = ctl.completes_token(cohort)
+        logits, self.state, qkv, x_final = self._decode_overlap_fn(
+            self.params, tokens, self.state, io)
+        self._commit_device(logits, active_rows)
+        cohort.x_carry = x_final[self.e.device_slots:]
+        if emit_layer >= 0:
+            job = next(self._job_ids)
+            idx = np.asarray(valid, np.int64)
+            self._executor.submit(
+                job, emit_layer, cohort.request_ids,
+                np.asarray(qkv.q, np.float32)[idx],
+                np.asarray(qkv.k, np.float32)[idx],
+                np.asarray(qkv.v, np.float32)[idx],
+                cohort.positions[idx])
+            self._pending_job = job
+        if completes:
+            row_idx = [self.e.device_slots + i for i in valid]
+            toks = np.asarray(sample(logits[jnp.asarray(row_idx)],
+                                     temperature=self.e.temperature))
+            emb = self.params.embedding["embed"]
+            for j, i in enumerate(valid):
+                r = self.host_requests[cohort.slot_rids[i]]
+                r.output.append(int(toks[j]))
+                self.stats.host_tokens += 1
+                cohort.positions[i] += 1
+                cohort.x_carry = cohort.x_carry.at[i].set(
+                    jnp.take(emb, jnp.int32(toks[j]), axis=0
+                             ).astype(cohort.x_carry.dtype))
+            self._executor.advance_token(cohort.request_ids)
+            cohort.attn_in = jnp.zeros_like(cohort.attn_in)
+        for rid in cohort.request_ids:
+            self.host_requests[rid].layer_progress = ctl.layer_progress(cohort)
+        ctl.advance(cohort)
+
+    def _retire(self) -> None:
+        now = time.perf_counter()
+        for i, r in enumerate(self.slots):
+            if r is not None and r.done:
+                r.phase = Phase.FINISHED
+                r.finish_time = now
+                self.slots[i] = None
+        done_hosts = [rid for rid, r in self.host_requests.items() if r.done]
+        for rid in done_hosts:
+            r = self.host_requests.pop(rid)
+            r.phase = Phase.FINISHED
+            r.finish_time = now
+            self._executor.free(rid)
+            self._host_slot_owner.pop(r.slot, None)
+        # the cohort rebuilds itself at the next token boundary
+        # (_ensure_cohort); completions always leave attn_ptr == -1
+
+    # --- driver -------------------------------------------------------------
+    def run(self, requests: List[Request], *, max_iterations: int = 100000
+            ) -> EngineStats:
+        for r in requests:
+            self.submit(r)
+        it = 0
+        while (self.queue or any(self.slots) or self.host_requests) \
+                and it < max_iterations:
+            self.step()
+            it += 1
+        if self._executor is not None:
+            self.stats.host_busy_time = self._executor.busy_time
+        return self.stats
+
+    def shutdown(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown()

@@ -1,0 +1,67 @@
+"""Request lifecycle for the online serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+class Phase(str, enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE_DEVICE = "decode_device"
+    DECODE_HOST = "decode_host"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    arrival_time: float = 0.0
+    phase: Phase = Phase.QUEUED
+    output: List[int] = dataclasses.field(default_factory=list)
+    # serving bookkeeping
+    slot: Optional[int] = None          # device cache slot (device tier)
+    layer_progress: int = 0             # APEX rule-4 partial progress
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def tokens_generated(self) -> int:
+        return len(self.output)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.tokens_generated
+
+    @property
+    def done(self) -> bool:
+        return self.tokens_generated >= self.max_new_tokens
+
+    def kv_demand(self) -> int:
+        """Tokens of KV this request will need in total."""
+        return self.prompt_len + self.max_new_tokens
+
+    def per_token_latency(self) -> Optional[float]:
+        if self.finish_time is None or not self.output:
+            return None
+        return (self.finish_time - self.arrival_time) / len(self.output)
+
+
+def make_synthetic_request(rng: np.random.Generator, *, prompt_len: int,
+                           output_len: int, vocab: int,
+                           arrival: float = 0.0) -> Request:
+    return Request(
+        prompt=list(rng.integers(0, vocab, prompt_len)),
+        max_new_tokens=output_len, arrival_time=arrival)

@@ -1,0 +1,6 @@
+from repro.training import checkpoint
+from repro.training.optimizer import (AdamW, Adafactor, clip_by_global_norm,
+                                      global_norm, make_optimizer)
+from repro.training.train_step import (TrainConfig, TrainState,
+                                       causal_lm_loss, init_train_state,
+                                       make_train_step)

@@ -1,0 +1,166 @@
+"""Optimizers in pure JAX: AdamW and Adafactor, ZeRO-friendly.
+
+Optimizer states are pytrees with the same structure (and therefore
+the same NamedSharding via ``distributed.sharding.param_shardings``)
+as the parameters — sharding params FSDP-style automatically shards
+the states (ZeRO).  Adafactor keeps factored second moments for the
+giant assigned archs (llama3-405b, kimi-k2) where full AdamW moments
+cannot fit a single pod (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # bf16 moments halve optimizer memory at negligible quality cost —
+    # the default for the huge assigned archs.
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mh = m2 / c1
+            vh = v2 / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:   # decay matrices only (standard practice)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype)
+            return new_p, m2.astype(m.dtype), v2.astype(v.dtype)
+
+        # flatten/unflatten unzip — tree.map with is_leaf=tuple would
+        # swallow NamedTuple nodes (ModelParams is a tuple subclass)
+        gl, treedef = jax.tree_util.tree_flatten(grads)
+        ml = treedef.flatten_up_to(state.m)
+        vl = treedef.flatten_up_to(state.v)
+        pl = treedef.flatten_up_to(params)
+        results = [upd(g, m, v, p) for g, m, v, p in zip(gl, ml, vl, pl)]
+        new_p = treedef.unflatten([r[0] for r in results])
+        new_m = treedef.unflatten([r[1] for r in results])
+        new_v = treedef.unflatten([r[2] for r in results])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any     # row second moments (or full v for <2D params)
+    vc: Any     # col second moments (zeros for <2D params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    Memory per matrix param: rows + cols instead of rows*cols — the
+    only optimizer that fits llama3-405b training on one v5e pod.
+    """
+
+    lr: float = 1e-3
+    decay: float = 0.8        # beta2_t = 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdafactorState:
+        def rows(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def cols(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(rows, params),
+                              vc=jax.tree.map(cols, params))
+
+    def update(self, grads, state: AdafactorState, params
+               ) -> Tuple[Any, AdafactorState]:
+        step = state.step + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+
+        def upd(g, vr, vc, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if p.ndim >= 2:
+                vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr2 / jnp.maximum(
+                    jnp.mean(vr2, axis=-1, keepdims=True), self.eps)
+                precond = (r[..., None] * vc2[..., None, :])
+                update = gf * jax.lax.rsqrt(jnp.maximum(precond, self.eps))
+            else:
+                vr2 = beta2 * vr + (1 - beta2) * g2
+                vc2 = vc
+                update = gf * jax.lax.rsqrt(jnp.maximum(vr2, self.eps))
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(update)) + self.eps)
+            update = update / jnp.maximum(1.0, rms / self.clip_threshold)
+            new_p = p.astype(jnp.float32) - self.lr * update
+            if self.weight_decay and p.ndim >= 2:
+                new_p = new_p - self.lr * self.weight_decay \
+                    * p.astype(jnp.float32)
+            return new_p.astype(p.dtype), vr2, vc2
+
+        gl, treedef = jax.tree_util.tree_flatten(grads)
+        vrl = treedef.flatten_up_to(state.vr)
+        vcl = treedef.flatten_up_to(state.vc)
+        pl = treedef.flatten_up_to(params)
+        results = [upd(g, vr, vc, p)
+                   for g, vr, vc, p in zip(gl, vrl, vcl, pl)]
+        pick = lambda i: treedef.unflatten([r[i] for r in results])
+        return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def make_optimizer(name: str, **kwargs):
+    if name == "adamw":
+        return AdamW(**kwargs)
+    if name == "adafactor":
+        return Adafactor(**kwargs)
+    raise KeyError(name)

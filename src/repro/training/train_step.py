@@ -1,0 +1,175 @@
+"""Training step: causal-LM loss, grad accumulation, remat, compression.
+
+``make_train_step`` builds the jitted step the launcher lowers in the
+dry-run:  loss → grad → (optional int8 compression w/ error feedback)
+→ clip → optimizer.  Microbatching runs as a ``lax.scan`` over
+gradient-accumulation steps so arbitrarily large global batches lower
+with O(1) HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression
+from repro.distributed.sharding import constrain
+from repro.models import forward_train
+from repro.models.config import ModelConfig
+from repro.training.optimizer import clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    error_feedback: Optional[Any]    # compression residuals (or None)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    grad_clip: float = 1.0
+    accum_steps: int = 1             # microbatch count per step
+    remat: bool = True
+    compress_grads: bool = False     # int8 + error feedback
+    z_loss: float = 0.0              # logit norm regularizer
+    # chunked loss: compute unembed+cross-entropy over seq chunks of
+    # this many tokens, never materializing the full (B,T,V) logits
+    # (the dominant activation at 100k+ vocabularies). 0 = off.
+    loss_chunk: int = 0
+
+
+def causal_lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                   mask: Optional[jnp.ndarray] = None,
+                   z_loss: float = 0.0) -> jnp.ndarray:
+    """Next-token cross-entropy.  logits: (B, T, V); labels: (B, T)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz)
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    if tcfg.loss_chunk:
+        return _make_chunked_loss_fn(cfg, tcfg)
+
+    def loss_fn(params, batch: Dict[str, jnp.ndarray], rng):
+        logits, aux = forward_train(params, cfg, batch, rng=rng,
+                                    remat=tcfg.remat)
+        # shift-by-one inside the batch: predict tokens[t+1]
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        loss = causal_lm_loss(logits[:, :-1], labels[:, 1:],
+                              None if mask is None else mask[:, 1:],
+                              z_loss=tcfg.z_loss)
+        return loss + aux, {"loss": loss, "aux_loss": aux}
+    return loss_fn
+
+
+def _make_chunked_loss_fn(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Fused unembed+CE over sequence chunks (hillclimb: the (B,T,V)
+    fp32 logits were the dominant train activation for 100k-vocab
+    archs).  Exact: same loss as the dense path."""
+    from repro.models.model import forward_hidden
+    from repro.models.layers import unembed
+
+    def loss_fn(params, batch: Dict[str, jnp.ndarray], rng):
+        hidden, aux = forward_hidden(params, cfg, batch, rng=rng,
+                                     remat=tcfg.remat)
+        labels = batch["labels"]
+        b, t, d = hidden.shape
+        c = min(tcfg.loss_chunk, t - 1)
+        n = (t - 1) // c
+        used = n * c
+        h = hidden[:, :used].reshape(b, n, c, d).swapaxes(0, 1)
+        lab = labels[:, 1:1 + used].reshape(b, n, c).swapaxes(0, 1)
+
+        def chunk(carry, xs):
+            hc, yc = xs
+            logits = unembed(params.embedding, hc).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yc[..., None], -1)[..., 0]
+            nll = logz - gold
+            if tcfg.z_loss:
+                nll = nll + tcfg.z_loss * jnp.square(logz)
+            return carry + jnp.sum(nll), None
+
+        total, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32), (h, lab))
+        loss = total / (b * used)
+        return loss + aux, {"loss": loss, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, optimizer
+                    ) -> Callable:
+    """Returns step(state, batch, rng) -> (state, metrics).
+
+    With ``accum_steps > 1`` the batch's leading dim must be
+    divisible by it; microbatches scan sequentially (grads accumulate
+    in fp32), which is also what keeps the 256-sequence global batches
+    of the assigned shapes lowerable at O(1) HLO size.
+    """
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch, rng):
+        (loss, metrics), grads = grad_fn(params, batch, rng)
+        return grads, metrics
+
+    def accumulate(params, batch, rng):
+        n = tcfg.accum_steps
+        micro = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        def body(carry, mb_rng):
+            acc, metrics_acc = carry
+            mb, r = mb_rng
+            g, m = single(params, mb, r)
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32) / n, acc, g)
+            metrics_acc = jax.tree.map(lambda a, v: a + v / n, metrics_acc, m)
+            return (acc, metrics_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_metrics = {"loss": jnp.zeros((), jnp.float32),
+                        "aux_loss": jnp.zeros((), jnp.float32)}
+        rngs = jax.random.split(rng, n)
+        (grads, metrics), _ = jax.lax.scan(body, (zeros, zero_metrics),
+                                           (micro, rngs))
+        return grads, metrics
+
+    def step(state: TrainState, batch: Dict[str, jnp.ndarray],
+             rng: jax.Array) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        if tcfg.accum_steps > 1:
+            grads, metrics = accumulate(state.params, batch, rng)
+        else:
+            grads, metrics = single(state.params, batch, rng)
+
+        ef = state.error_feedback
+        if tcfg.compress_grads:
+            grads, ef = compression.compress_decompress_with_feedback(
+                grads, ef)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        metrics["grad_norm"] = gnorm
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params)
+        return TrainState(params, opt_state, ef), metrics
+
+    return step
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, optimizer,
+                     params) -> TrainState:
+    ef = None
+    if tcfg.compress_grads:
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      error_feedback=ef)

@@ -1,0 +1,77 @@
+"""Property tests (hypothesis) on the paper's analytical model."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical
+from repro.core.analytical import Timings, plan_async_overlap
+
+pos = st.floats(min_value=1e-5, max_value=1e3, allow_nan=False,
+                allow_infinity=False)
+rate = st.floats(min_value=1e-2, max_value=1e12, allow_nan=False,
+                 allow_infinity=False)
+
+
+@given(t_gl=pos, t_ga=pos, n_g=rate, n_c=rate)
+@settings(max_examples=300, deadline=None)
+def test_ineq5_equals_ineq6(t_gl, t_ga, n_g, n_c):
+    """The paper's algebra: Inequality (5) <=> Inequality (6)."""
+    t = Timings(t_glinear=t_gl, t_gatt=t_ga, n_g=n_g, n_c=n_c)
+    lhs = analytical.pipelining_beneficial_decode_only(t)
+    rhs = analytical.pipelining_beneficial_ineq6(t)
+    # only strict-boundary float noise may disagree
+    margin = abs(n_g / n_c - analytical.ineq6_threshold(t))
+    if margin > 1e-6 * max(1.0, n_g / n_c):
+        assert lhs == rhs
+
+
+@given(t_gl=pos, t_ga=pos)
+@settings(max_examples=200, deadline=None)
+def test_ineq6_threshold_minimum_is_3_plus_2sqrt2(t_gl, t_ga):
+    """min over ratios of 2r + 3 + 1/r = 3 + 2*sqrt(2) ~ 5.83."""
+    t = Timings(t_glinear=t_gl, t_gatt=t_ga, n_g=1.0, n_c=1.0)
+    assert analytical.ineq6_threshold(t) >= 3 + 2 * math.sqrt(2) - 1e-9
+
+
+def test_paper_regime_threshold():
+    """Paper §3.2: for T_gatt/T_glinear in [0.5, 1.5] the threshold is
+    ~<= 7.5 => N_C must be >= ~13% of N_G."""
+    for ratio in (0.5, 0.75, 1.0, 1.25, 1.5):
+        t = Timings(t_glinear=1.0, t_gatt=ratio, n_g=1.0, n_c=1.0)
+        assert analytical.ineq6_threshold(t) <= 8.0
+    # the global min sits at T_glinear/T_gatt = 1/sqrt(2)
+    t = Timings(t_glinear=1.0, t_gatt=math.sqrt(2), n_g=1.0, n_c=1.0)
+    assert analytical.ineq6_threshold(t) == pytest.approx(3 + 2 * math.sqrt(2))
+
+
+@given(t_gl=pos, t_ga=pos, n_g=rate, n_c=rate, pref=pos, pref_att=pos)
+@settings(max_examples=200, deadline=None)
+def test_mixed_window_never_smaller(t_gl, t_ga, n_g, n_c, pref, pref_att):
+    """Prefill widens the CPU window => mixed pipelining holds at least
+    whenever decode-only pipelining holds (for windows >= T_overlap)."""
+    t = Timings(t_glinear=t_gl, t_gatt=t_ga, n_g=n_g, n_c=n_c,
+                t_glinear_pref=t_gl + pref, t_gatt_pref=t_ga + pref_att)
+    window_mixed = t.t_glinear_pref + t.t_glinear + t.t_gatt_pref
+    if window_mixed >= analytical.t_overlap(t):
+        if analytical.pipelining_beneficial_decode_only(t):
+            assert analytical.pipelining_beneficial_mixed(t)
+
+
+@given(dev=st.integers(1, 512), queue=st.integers(0, 4096),
+       layers=st.integers(1, 128), ctx=st.floats(1, 1e6))
+@settings(max_examples=200, deadline=None)
+def test_overlap_plan_invariants(dev, queue, layers, ctx):
+    t = Timings(t_glinear=0.03, t_gatt=0.01, n_g=3e6, n_c=3e5)
+    plan = plan_async_overlap(t, device_batch=dev, host_queue=queue,
+                              num_attn_layers=layers, mean_context=ctx)
+    assert 0 <= plan.host_batch <= queue
+    assert plan.iterations_per_host_token == layers + 1
+    # the host cohort never exceeds what fits one iteration's budget
+    assert plan.host_batch * ctx <= t.n_c * plan.iteration_time + ctx
+    assert plan.total_tokens_per_s >= plan.device_tokens_per_s
+
+
+def test_speedup_estimate_matches_paper_form():
+    # §5.2: S ~ b/a — decode-heavy (b=1) on a 10x-power gap => 10% gain
+    assert analytical.speedup_estimate(10.0, 1.0) == pytest.approx(0.1)

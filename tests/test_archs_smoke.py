@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests (deliverable (f)): every assigned arch
+instantiates a REDUCED config of the same family and runs one forward
++ one train step on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import (decode_step, forward_train, init_decode_state,
+                          init_params, prefill)
+from repro.training import (TrainConfig, init_train_state, make_optimizer,
+                            make_train_step)
+
+ARCHS = list_archs()
+
+
+def _inputs(cfg, key, b=2, t=16):
+    if cfg.frontend == "audio":
+        return {"embeds": jax.random.normal(key, (b, t, cfg.d_model),
+                                            jnp.bfloat16),
+                "labels": jax.random.randint(key, (b, t), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        p = cfg.frontend_tokens
+        return {"patches": jax.random.normal(key, (b, p, cfg.d_model),
+                                             jnp.bfloat16),
+                "tokens": jax.random.randint(key, (b, t), 0, cfg.vocab_size),
+                "labels": jax.random.randint(key, (b, t + p), 0,
+                                             cfg.vocab_size)}
+    toks = jax.random.randint(key, (b, t), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch, key):
+    cfg = get_config(arch).reduced()
+    params = init_params(key, cfg)
+    b, t = 2, 16
+    inputs = _inputs(cfg, key, b, t)
+    logits, aux = forward_train(params, cfg, inputs)
+    expect_t = t + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (b, expect_t, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch, key):
+    cfg = get_config(arch).reduced()
+    params = init_params(key, cfg)
+    tcfg = TrainConfig(remat=False)
+    opt = make_optimizer("adamw", lr=1e-3)
+    step = jax.jit(make_train_step(cfg, tcfg, opt))
+    state = init_train_state(cfg, tcfg, opt, params)
+    inputs = _inputs(cfg, key)
+    state, metrics = step(state, inputs, key)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+DECODE_ARCHS = [a for a in ARCHS if get_config(a).causal]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_decode_consistency(arch, key):
+    """Greedy decode after prefill == the same positions computed by
+    the full forward (teacher forcing)."""
+    cfg = get_config(arch).reduced()
+    params = init_params(key, cfg)
+    b, t = 2, 12
+    inputs = _inputs(cfg, key, b, t)
+    inputs.pop("labels")
+    state = init_decode_state(cfg, device_batch=b, cache_len=64)
+    logits_p, state = prefill(params, cfg, inputs, state)
+    tok1 = jnp.argmax(logits_p, -1)
+    # decode one more token
+    logits_d, state, _, _ = decode_step(params, cfg, tok1, state)
+
+    # teacher-forced check: full forward over prompt + tok1
+    if cfg.frontend == "vision":
+        full = {"patches": inputs["patches"],
+                "tokens": jnp.concatenate([inputs["tokens"], tok1[:, None]], 1)}
+    elif cfg.frontend == "audio":
+        pytest.skip("encoder-only")
+    else:
+        full = {"tokens": jnp.concatenate([inputs["tokens"], tok1[:, None]], 1)}
+    logits_full, _ = forward_train(params, cfg, full)
+    # MoE routing is discontinuous: bf16 path differences between the
+    # (prefill+decode) and teacher-forced computations can flip a
+    # border-line top-k choice and shift a few logits by ~5e-2 while
+    # greedy tokens stay identical (tests/test_overlap.py asserts exact
+    # token equality end-to-end).  Dense archs stay at the tight bound.
+    from repro.models.config import FFNKind
+    tol = 8e-2 if cfg.ffn_kind == FFNKind.MOE else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(logits_d, np.float32),
+        np.asarray(logits_full[:, -1], np.float32), atol=tol, rtol=tol)
+    # and the prefill's last-position logits match the forward's
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32),
+        np.asarray(logits_full[:, -2], np.float32), atol=tol, rtol=tol)

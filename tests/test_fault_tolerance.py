@@ -1,0 +1,62 @@
+"""Fault-tolerance logic: heartbeats, stragglers, elastic resharding."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.fault_tolerance import (ElasticPlanner,
+                                               HeartbeatMonitor,
+                                               RestartPolicy)
+
+
+def test_heartbeat_death_and_recovery():
+    mon = HeartbeatMonitor(range(4), timeout=10.0)
+    for w in range(4):
+        mon.beat(w, now=0.0)
+    assert mon.sweep(now=5.0) == []
+    mon.beat(0, now=9.0)
+    dead = mon.sweep(now=11.0)
+    assert set(dead) == {1, 2, 3}
+    assert mon.alive_workers() == [0]
+    mon.beat(2, now=12.0)   # node came back
+    assert 2 in mon.alive_workers()
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor(range(5), timeout=100.0, straggler_factor=2.0)
+    for w, t in zip(range(5), [1.0, 1.1, 0.9, 1.0, 5.0]):
+        mon.beat(w, now=0.0, step_time=t)
+    assert mon.stragglers() == [4]
+
+
+@given(total=st.integers(16, 1024), ndead=st.integers(0, 64))
+@settings(max_examples=100, deadline=None)
+def test_elastic_planner_invariants(total, ndead):
+    planner = ElasticPlanner((16, 16), ("data", "model"))
+    ndead = min(ndead, total)
+    plan = planner.plan(total, list(range(ndead)))
+    # never grows, never kills the model axis, data stays a divisor
+    assert plan.new_mesh[1] == 16
+    assert 1 <= plan.new_mesh[0] <= 16
+    assert 16 % plan.new_mesh[0] == 0
+    if ndead == 0:
+        assert not plan.changed
+        assert not plan.needs_checkpoint_roundtrip
+
+
+def test_elastic_multi_pod_axis_names():
+    planner = ElasticPlanner((2, 16, 16), ("pod", "data", "model"))
+    plan = planner.plan(total_hosts=64, dead_hosts=[1, 2, 3, 4])
+    assert plan.new_mesh[0] == 2 and plan.new_mesh[2] == 16
+    assert plan.new_mesh[1] < 16
+
+
+def test_restart_policy_backoff_and_budget():
+    p = RestartPolicy(max_restarts=3, backoff_base=1.0, backoff_cap=100.0)
+    delays = []
+    while True:
+        d = p.next_delay()
+        if d is None:
+            break
+        delays.append(d)
+    assert delays == [1.0, 2.0, 4.0]
+    p.record_success()
+    assert p.next_delay() == 1.0   # healthy interval resets the loop

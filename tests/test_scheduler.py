@@ -1,0 +1,115 @@
+"""Algorithm-1 scheduler + admission control + paged pool properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.perf_model import analytic_model
+from repro.core.scheduler import (AdmissionController, ApexScheduler,
+                                  StrategyKind)
+from repro.models.kv_cache import PagedKVPool
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return ApexScheduler(analytic_model("a10", get_config("llama3.1-8b")))
+
+
+def test_rule1_no_host_requests_is_gpu_only(sched):
+    d = sched.schedule([], [1, 2, 3], [], mean_context=1024)
+    assert d.strategy == StrategyKind.GPU_ONLY
+
+
+def test_decode_only_prefers_async_overlap_on_a10(sched):
+    # N_G/N_C ~ 35 >> threshold on the A10 calibration
+    d = sched.schedule([], list(range(64)), list(range(32)),
+                       mean_context=1024)
+    assert d.strategy == StrategyKind.ASYNC_OVERLAP
+    assert "Ineq(6)" in d.reason
+
+
+def test_mixed_branch_widens_window(sched):
+    d = sched.schedule(["p"], list(range(64)), list(range(32)),
+                       mean_context=1024, prefill_tokens=4096)
+    # with a big prefill window pipelining becomes beneficial (paper
+    # Algorithm 1 mixed branch)
+    assert d.strategy == StrategyKind.ASYM_PIPELINE
+    assert d.sub_batch_2 is not None
+
+
+def test_rule4_partial_progress_prioritized(sched):
+    class R:
+        def __init__(self, p):
+            self.layer_progress = p
+    reqs = [R(0), R(10), R(5)]
+    d = sched.schedule(["p"], [1], reqs, mean_context=1024,
+                       prefill_tokens=4096)
+    assert d.strategy == StrategyKind.ASYM_PIPELINE
+    progresses = [r.layer_progress for r in d.sub_batch_2]
+    assert progresses == sorted(progresses, reverse=True)
+
+
+@given(budget_d=st.integers(10, 10000), budget_h=st.integers(0, 100000),
+       needs=st.lists(st.integers(1, 2000), min_size=1, max_size=60))
+@settings(max_examples=100, deadline=None)
+def test_admission_never_overcommits(budget_d, budget_h, needs):
+    ac = AdmissionController(device_kv_budget_tokens=budget_d,
+                             host_kv_budget_tokens=budget_h)
+    placed = []
+    for need in needs:
+        tier = ac.place(need)
+        placed.append((tier, need))
+        assert ac.device_used <= budget_d
+        assert ac.host_used <= budget_h
+    # GPU-first: a request lands on host only if the device could not
+    # hold it at that moment
+    ac2 = AdmissionController(device_kv_budget_tokens=budget_d,
+                              host_kv_budget_tokens=budget_h)
+    for tier, need in placed:
+        if tier == "host":
+            assert ac2.device_used + need > budget_d
+        got = ac2.place(need)
+        assert got == tier
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_paged_pool_alloc_free_invariants(data):
+    pool = PagedKVPool(num_pages=64, page_size=16, num_layers=2,
+                       kv_heads=2, head_dim=8)
+    live = {}
+    rid = 0
+    for _ in range(data.draw(st.integers(1, 30))):
+        if live and data.draw(st.booleans()):
+            victim = data.draw(st.sampled_from(sorted(live)))
+            pool.free(victim)
+            del live[victim]
+        else:
+            tokens = data.draw(st.integers(1, 64))
+            if pool.can_admit(tokens):
+                pool.allocate(rid, tokens)
+                live[rid] = tokens
+                rid += 1
+    used = sum(len(chain) for chain in pool.page_tables.values())
+    assert used + pool.num_free == 64
+    # no page is referenced twice
+    all_pages = [p for chain in pool.page_tables.values() for p in chain]
+    assert len(all_pages) == len(set(all_pages))
+
+
+def test_paged_pool_write_read_roundtrip(rng):
+    pool = PagedKVPool(num_pages=32, page_size=4, num_layers=3,
+                       kv_heads=2, head_dim=8)
+    pool.allocate(7, 10)
+    k = rng.standard_normal((10, 2, 8)).astype(np.float32)
+    v = rng.standard_normal((10, 2, 8)).astype(np.float32)
+    for layer in range(3):
+        pool.write_prompt(7, layer, k, v, advance=(layer == 2))
+    for layer in range(3):
+        k2, v2 = pool.gather(7, layer)
+        np.testing.assert_array_equal(k, k2)
+        np.testing.assert_array_equal(v, v2)
+    pool.append(7, 0, k[0], v[0], advance=False)
+    pool.append(7, 1, k[0], v[0], advance=False)
+    pool.append(7, 2, k[0], v[0], advance=True)
+    assert pool.lengths[7] == 11

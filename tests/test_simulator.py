@@ -1,0 +1,71 @@
+"""Simulator sanity + reproduction of the paper's qualitative claims."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import workloads
+from repro.serving.simulator import (ServingSimulator, SimConfig,
+                                     compare_schedulers)
+
+
+def _trace(cfg, n=40, **kw):
+    return lambda: workloads.generate("osc", num_requests=n,
+                                      vocab=cfg.vocab_size, seed=3, **kw)
+
+
+def test_conservation_of_tokens():
+    cfg = get_config("llama3.1-8b")
+    reqs = _trace(cfg)()
+    expected = sum(r.max_new_tokens for r in reqs)
+    sim = ServingSimulator(cfg, "a10", SimConfig(scheduler="apex"))
+    res = sim.run(reqs)
+    assert res.requests_finished == len(reqs)
+    assert res.total_output_tokens == sum(r.max_new_tokens for r in reqs)
+    assert res.total_output_tokens <= expected  # truncation only shrinks
+
+
+def test_apex_beats_gpu_only_in_decode_heavy_regime():
+    """Paper Fig. 5/7: hybrid APEX > device-only for long outputs."""
+    cfg = get_config("llama3.1-8b")
+    res = compare_schedulers(
+        cfg, "a10", _trace(cfg, output_mean_override=800),
+        schedulers=("gpu_only", "apex"))
+    assert res["apex"].throughput > res["gpu_only"].throughput
+    assert res["apex"].host_tokens > 0
+
+
+def test_apex_never_pathological_vs_neo():
+    """Paper §5.2: APEX >= NEO (the Ineq gate avoids NEO's bad greedy
+    pipelining)."""
+    cfg = get_config("llama3.1-8b")
+    res = compare_schedulers(cfg, "a10",
+                             _trace(cfg, output_mean_override=600),
+                             schedulers=("neo", "apex"))
+    assert res["apex"].throughput >= 0.95 * res["neo"].throughput
+
+
+def test_strategy_selection_matches_regime():
+    """On A10 decode-heavy, Algorithm 1 must mostly pick async overlap
+    (N_G/N_C >> threshold)."""
+    cfg = get_config("llama3.1-8b")
+    sim = ServingSimulator(cfg, "a10", SimConfig(scheduler="apex"))
+    res = sim.run(_trace(cfg, output_mean_override=800)())
+    counts = res.strategy_iterations
+    ao = counts.get("async_overlap", 0)
+    ap = counts.get("asym_pipeline", 0)
+    assert ao > ap
+
+
+def test_t4_memory_pressure_admits_few_device_requests():
+    """Paper's T4 regime: llama2-7b leaves only a few thousand KV
+    tokens on a 16 GB device."""
+    cfg = get_config("llama2-7b")
+    sim = ServingSimulator(cfg, "t4", SimConfig(scheduler="gpu_only"))
+    assert sim.device_kv_tokens < 10_000
+    sim_a10 = ServingSimulator(get_config("llama3.1-8b"), "a10")
+    assert sim_a10.device_kv_tokens > 30_000
+
+
+def test_model_too_big_raises():
+    with pytest.raises(ValueError):
+        ServingSimulator(get_config("llama3-405b"), "t4")

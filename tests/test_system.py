@@ -1,0 +1,112 @@
+"""End-to-end system behaviour: the serving engine under mixed load,
+HLO collective analysis, sharding rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed import sharding
+from repro.launch.analysis import (analytic_costs, collective_bytes_from_hlo,
+                                   _shape_bytes)
+from repro.models import init_params
+from repro.serving import Engine, EngineConfig, Request
+from repro.serving.request import make_synthetic_request
+
+
+def test_registry_complete():
+    assert len(list_archs(assigned_only=True)) == 10
+    assert len(list_archs()) == 12
+
+
+def test_engine_continuous_batching_mixed_arrivals():
+    cfg = get_config("stablelm-12b").reduced(layers=2, d_model=64, vocab=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, EngineConfig(device_slots=3, host_slots=3,
+                                           cache_len=64))
+    rng = np.random.default_rng(0)
+    reqs = [make_synthetic_request(rng, prompt_len=int(p), output_len=int(o),
+                                   vocab=cfg.vocab_size)
+            for p, o in zip(rng.integers(4, 12, 7), rng.integers(2, 8, 7))]
+    stats = eng.run(reqs)
+    eng.shutdown()
+    assert all(r.done for r in reqs)
+    assert stats.device_tokens + stats.host_tokens == sum(
+        len(r.output) - 1 for r in reqs)  # first token comes from prefill
+
+
+def test_collective_parser_scales_while_loops():
+    """A scanned matmul with an all-reduce per step must be attributed
+    trip_count x bytes, not 1x."""
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8] get-tuple-element(%p), index=1
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8]) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8] parameter(0)
+  %ar0 = f32[8]{0} all-reduce(%a), replica_groups={}, to_apply=%add
+  %init = (s32[], f32[8]) tuple(%c0, %ar0)
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8] get-tuple-element(%w), index=1
+}
+"""
+    stats = collective_bytes_from_hlo(hlo)
+    # 1 entry all-reduce (32B) + 7 x body all-reduce (32B) = 256B
+    assert stats.total_bytes == 32 + 7 * 32
+    assert stats.unscaled_bytes == 64
+
+
+def test_shape_bytes_parser():
+    assert _shape_bytes("f32[8,4]") == 128
+    assert _shape_bytes("bf16[2,3,4]") == 48
+    assert _shape_bytes("(f32[2], s32[4])") == 8 + 16
+
+
+def test_analytic_costs_monotonic():
+    cfg = get_config("llama3.1-8b")
+    d1 = analytic_costs(cfg, "decode", seq_len=1024, global_batch=8)
+    d2 = analytic_costs(cfg, "decode", seq_len=2048, global_batch=8)
+    assert d2.hbm_bytes > d1.hbm_bytes          # KV read grows with context
+    o = analytic_costs(cfg, "decode", seq_len=1024, global_batch=8,
+                       host_fraction=0.5)
+    assert o.hbm_bytes < d1.hbm_bytes           # offload relieves HBM
+    assert o.flops < d1.flops                   # device attention shrinks
+    t = analytic_costs(cfg, "train", seq_len=128, global_batch=4)
+    assert t.model_flops == pytest.approx(
+        6.0 * cfg.active_param_count() * 4 * 128)
+
+
+def test_sharding_rules_resolve_and_dedup():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with sharding.use_sharding(mesh, sharding.rules_for_mesh(mesh)):
+        spec = sharding.resolve("experts", "fsdp", "ffn")
+        # "experts" takes model; "ffn" must NOT reuse it
+        assert spec == P("model", "data", None)
+    with sharding.use_sharding(mesh, sharding.rules_for_mesh(mesh, "serve")):
+        spec = sharding.resolve("experts", "fsdp", "ffn")
+        assert spec == P(None, "data", "model")
+
+
+def test_fit_spec_drops_non_dividing_axes():
+    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    fitted = sharding.fit_spec(mesh, P("model", "data"), (3, 8))
+    assert fitted == P(None, "data")
+    fitted2 = sharding.fit_spec(mesh, P(("data", "model"), None), (6, 4))
+    assert fitted2 == P("data", None)  # 6 % 2 == 0 but 6 % 4 != 0
