@@ -181,26 +181,26 @@ def ineq_regime() -> List[Row]:
 def overlap_microbench() -> List[Row]:
     from repro.configs import get_config
     from repro.models import init_params
-    from repro.serving import Engine, EngineConfig
-    from repro.serving.request import make_synthetic_request
+    from repro.serving import InferenceServer, ServerConfig
     cfg = get_config("llama3.1-8b").reduced(layers=4, d_model=128, vocab=256)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
     rows: List[Row] = []
     for offload in (False, True):
-        eng = Engine(cfg, params, EngineConfig(
-            device_slots=2, host_slots=6, cache_len=96,
-            enable_offload=offload))
-        reqs = [make_synthetic_request(rng, prompt_len=12, output_len=12,
-                                       vocab=cfg.vocab_size)
-                for _ in range(8)]
+        scfg = ServerConfig(device_slots=2, host_slots=6, cache_len=96,
+                            enable_offload=offload, num_requests=8,
+                            prompt_len=12, output_len=12)
         t0 = time.perf_counter()
-        stats = eng.run(reqs)
+        with InferenceServer(cfg, params, scfg) as server:
+            for r in scfg.build_requests(vocab=cfg.vocab_size):
+                server.submit(r)
+            stats = server.run_until_idle()
         wall = time.perf_counter() - t0
-        eng.shutdown()
         total = stats.device_tokens + stats.host_tokens
+        hybrid = sum(v for k, v in stats.strategy_counts.items()
+                     if k != "gpu_only")
         rows.append((
             f"overlap/engine_offload={offload}", wall / max(total, 1) * 1e6,
             f"tok/s={total/wall:.1f} host_tok={stats.host_tokens} "
+            f"hybrid_iters={hybrid} "
             f"host_busy={stats.host_busy_time:.2f}s of {wall:.2f}s wall"))
     return rows

@@ -10,7 +10,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import (decode_step, init_decode_state, init_params,
                           prefill)
-from repro.serving import Engine, EngineConfig, Request
+from repro.serving import InferenceServer, Request, ServerConfig
 
 # 1. a reduced-geometry Llama-3.1-family model (the paper's A10 model)
 cfg = get_config("llama3.1-8b").reduced(layers=4, d_model=128, vocab=512)
@@ -28,14 +28,19 @@ for _ in range(7):
     toks.append(int(jnp.argmax(logits, -1)[0]))
 print("raw decode:   ", toks)
 
-# 3. the APEX engine: 1 device slot forces offload of the second request
-eng = Engine(cfg, params, EngineConfig(device_slots=1, host_slots=2,
-                                       cache_len=64))
-r1 = Request(prompt=[int(t) for t in prompt[0]], max_new_tokens=8)
-r2 = Request(prompt=[int(t) for t in prompt[0]], max_new_tokens=8)
-stats = eng.run([r1, r2])
-eng.shutdown()
-print("device request:", r1.output)
-print("host request:  ", r2.output, "(host tokens:", stats.host_tokens, ")")
-assert r1.output == toks and r2.output == toks, "outputs must be identical"
+# 3. the APEX server: 1 device slot forces offload of the second
+#    request; h2 streams per-token while the scheduler-driven
+#    continuous-batching loop advances both requests
+with InferenceServer(cfg, params, ServerConfig(device_slots=1, host_slots=2,
+                                               cache_len=64)) as server:
+    h1 = server.submit(Request(prompt=[int(t) for t in prompt[0]],
+                               max_new_tokens=8))
+    h2 = server.submit([int(t) for t in prompt[0]], max_new_tokens=8)
+    streamed = list(h2.tokens())     # pulls tokens as they are produced
+    server.run_until_idle()
+    stats = server.stats
+print("device request:", h1.output)
+print("host request:  ", streamed, "(host tokens:", stats.host_tokens, ")")
+print("strategies:    ", stats.strategy_counts)
+assert h1.output == toks and streamed == toks, "outputs must be identical"
 print("OK — device, host-offloaded and raw decode all agree")

@@ -1,5 +1,6 @@
-"""Online serving under a conversation-trace workload with the APEX
-scheduler — reports throughput/latency and strategy decisions.
+"""Online serving under a conversation-trace workload through the
+scheduler-driven ``InferenceServer`` — streams tokens per request and
+reports throughput / latency / per-iteration strategy decisions.
 
     PYTHONPATH=src python examples/serve_chat.py
 """
@@ -9,34 +10,44 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import analytic_model, ApexScheduler
+from repro.core import ApexScheduler, analytic_model
 from repro.models import init_params
-from repro.serving import Engine, EngineConfig
-from repro.serving.workloads import generate
+from repro.serving import InferenceServer, ServerConfig
 
 cfg = get_config("llama2-7b").reduced(layers=4, d_model=128, vocab=512)
 params = init_params(jax.random.PRNGKey(0), cfg)
 
-# the Algorithm-1 scheduler on the paper's T4 calibration
+# Algorithm 1 standalone, on the paper's T4 calibration: the same
+# scheduler the server runs every iteration.
 sched = ApexScheduler(analytic_model("t4", get_config("llama2-7b")))
 d = sched.schedule([], list(range(4)), list(range(24)), mean_context=1024)
 print(f"Algorithm 1 decode-only decision on T4: {d.strategy.value} "
       f"({d.reason})")
 
-engine = Engine(cfg, params, EngineConfig(device_slots=3, host_slots=6,
-                                          cache_len=96))
-reqs = generate("azure-conv", num_requests=10, vocab=cfg.vocab_size, seed=0)
-for r in reqs:   # shrink to example scale
-    r.prompt = r.prompt[:24]
-    r.max_new_tokens = min(r.max_new_tokens, 16)
-    r.arrival_time = time.perf_counter()
+# one structured config: engine capacity + scheduler + workload
+scfg = ServerConfig(device_slots=3, host_slots=6, cache_len=96,
+                    workload="azure-conv", num_requests=10,
+                    prompt_len=24, output_len=16)
+
 t0 = time.perf_counter()
-stats = engine.run(reqs)
-engine.shutdown()
+with InferenceServer(cfg, params, scfg) as server:
+    handles = [server.submit(r)
+               for r in scfg.build_requests(vocab=cfg.vocab_size)]
+    # stream the first response token-by-token; pulling the iterator
+    # drives the continuous-batching loop, so every request advances
+    print("request 0 stream:", end=" ", flush=True)
+    for tok in handles[0].tokens():
+        print(tok, end=" ", flush=True)
+    print()
+    server.run_until_idle()
+    stats = server.stats
 wall = time.perf_counter() - t0
+
+reqs = [h.request for h in handles]
 lats = [r.per_token_latency() for r in reqs if r.per_token_latency()]
 print(f"{len(reqs)} requests, {stats.device_tokens} device + "
       f"{stats.host_tokens} host tokens in {wall:.1f}s "
       f"({(stats.device_tokens + stats.host_tokens)/wall:.1f} tok/s)")
+print(f"per-iteration strategy decisions: {stats.strategy_counts}")
 print(f"avg per-token latency {np.mean(lats)*1e3:.0f} ms; "
       f"host attention busy {stats.host_busy_time:.2f}s (overlapped)")

@@ -121,6 +121,11 @@ class AdmissionController:
     New requests claim device KV slots while they fit; once the device
     budget is exhausted, requests are designated host-offloaded
     (provided the host pool can hold them — else they wait).
+
+    The serving engine passes ``device_ok`` / ``host_ok`` to fold its
+    structural constraints (a free batch slot, paged-pool pages) into
+    the same placement decision, so KV budgets and slot management are
+    one mechanism.
     """
 
     device_kv_budget_tokens: int
@@ -128,12 +133,15 @@ class AdmissionController:
     device_used: int = 0
     host_used: int = 0
 
-    def place(self, need_tokens: int) -> Optional[str]:
+    def place(self, need_tokens: int, *, device_ok: bool = True,
+              host_ok: bool = True) -> Optional[str]:
         """Returns "device" | "host" | None (must wait)."""
-        if self.device_used + need_tokens <= self.device_kv_budget_tokens:
+        if device_ok and \
+                self.device_used + need_tokens <= self.device_kv_budget_tokens:
             self.device_used += need_tokens
             return "device"
-        if self.host_used + need_tokens <= self.host_kv_budget_tokens:
+        if host_ok and \
+                self.host_used + need_tokens <= self.host_kv_budget_tokens:
             self.host_used += need_tokens
             return "host"
         return None

@@ -117,7 +117,9 @@ def resolve(*logical: Optional[str]) -> PartitionSpec:
         else:
             fresh = tuple(a for a in axes if a not in used)
             used.update(fresh)
-            parts.append(fresh if fresh else None)
+            # canonical form: a singleton tuple is the bare axis name
+            parts.append(fresh[0] if len(fresh) == 1
+                         else (fresh if fresh else None))
     return PartitionSpec(*parts)
 
 

@@ -1,12 +1,17 @@
 """End-to-end online-serving driver (deliverable (b), the paper's kind).
 
-Serves a reduced-geometry model with batched synthetic requests under
-a chosen strategy, reporting throughput / latency / host-overlap
-utilization.  APEX offload is exact: host rows emit the same tokens a
+Serves a reduced-geometry model through the scheduler-driven
+``InferenceServer``: requests come from a paper workload trace
+(``--workload``) or the synthetic default, and Algorithm 1 picks the
+execution strategy every iteration.  In closed-loop mode the first
+response streams token by token; with ``--arrival-rate`` the trace is
+instead replayed open-loop in wall-clock time (no streaming demo).
+APEX offload is exact: host rows emit the same tokens a
 device-resident run would (tests/test_overlap.py enforces this).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.1-8b \
-        --requests 16 --device-slots 2 --host-slots 6
+        --requests 16 --device-slots 2 --host-slots 6 \
+        --workload azure-conv
 """
 from __future__ import annotations
 
@@ -18,9 +23,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
-from repro.serving import Engine, EngineConfig
-from repro.serving.request import make_synthetic_request
-from repro.serving.workloads import WORKLOADS, generate
+from repro.serving import InferenceServer, ServerConfig
+from repro.serving.workloads import WORKLOADS
 
 
 def main() -> None:
@@ -34,39 +38,69 @@ def main() -> None:
     ap.add_argument("--device-slots", type=int, default=4)
     ap.add_argument("--host-slots", type=int, default=8)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--platform", default="a10",
+                    help="analytic calibration feeding Algorithm 1")
+    ap.add_argument("--workload", default=None,
+                    choices=sorted(WORKLOADS) + ["synthetic"],
+                    help="paper trace driving request generation "
+                         "(default: synthetic fixed-length)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson arrivals in req/s (default: closed loop)")
     ap.add_argument("--no-offload", action="store_true")
+    ap.add_argument("--no-stream", action="store_true",
+                    help="suppress the per-token stream of request 0")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced(layers=args.layers,
                                         d_model=args.d_model, vocab=512)
-    print(f"serving {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
-          f"device_slots={args.device_slots} host_slots={args.host_slots} "
-          f"offload={not args.no_offload}")
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = Engine(cfg, params, EngineConfig(
+    scfg = ServerConfig(
         device_slots=args.device_slots, host_slots=args.host_slots,
-        cache_len=args.cache_len, enable_offload=not args.no_offload))
+        cache_len=args.cache_len, enable_offload=not args.no_offload,
+        platform=args.platform,
+        workload=None if args.workload in (None, "synthetic")
+        else args.workload,
+        num_requests=args.requests, arrival_rate=args.arrival_rate,
+        prompt_len=args.prompt_len, output_len=args.output_len)
+    print(f"serving {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
+          f"device_slots={scfg.device_slots} host_slots={scfg.host_slots} "
+          f"offload={scfg.enable_offload} "
+          f"workload={scfg.workload or 'synthetic'}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
 
-    rng = np.random.default_rng(0)
-    reqs = [make_synthetic_request(rng, prompt_len=args.prompt_len,
-                                   output_len=args.output_len,
-                                   vocab=cfg.vocab_size)
-            for _ in range(args.requests)]
     t0 = time.time()
-    start = time.perf_counter()      # engine clocks use perf_counter
-    for r in reqs:
-        r.arrival_time = start
-    stats = engine.run(reqs)
-    engine.shutdown()
+    with InferenceServer(cfg, params, scfg) as server:
+        reqs = scfg.build_requests(vocab=cfg.vocab_size)
+        if args.no_stream or args.arrival_rate:
+            if args.arrival_rate and not args.no_stream:
+                print("open-loop replay (--arrival-rate): per-token "
+                      "streaming demo disabled")
+            handles = server.serve(reqs,
+                                   realtime=args.arrival_rate is not None)
+        else:
+            handles = [server.submit(r) for r in reqs]
+            print("request 0 stream: ", end="", flush=True)
+            for tok in handles[0].tokens():
+                print(tok, end=" ", flush=True)
+            print()
+            server.run_until_idle()
+        stats = server.stats
     wall = time.time() - t0
-    lats = [r.per_token_latency() for r in reqs if r.per_token_latency()]
-    print(f"finished {len(reqs)} requests in {wall:.2f}s")
+
+    done = [h.request for h in handles]
+    lats = [r.per_token_latency() for r in done if r.per_token_latency()]
+    ttfts = [r.time_to_first_token() for r in done
+             if r.time_to_first_token() is not None]
+    print(f"finished {len(done)} requests in {wall:.2f}s")
     print(f"tokens: device={stats.device_tokens} host={stats.host_tokens} "
           f"-> {(stats.device_tokens + stats.host_tokens) / wall:.1f} tok/s")
-    print(f"avg per-token latency: {np.mean(lats) * 1e3:.1f} ms")
+    print(f"strategy decisions: {stats.strategy_counts}")
+    if lats:
+        print(f"avg per-token latency: {np.mean(lats) * 1e3:.1f} ms; "
+              f"avg TTFT: {np.mean(ttfts) * 1e3:.1f} ms")
     if stats.host_busy_time:
         print(f"host attention busy: {stats.host_busy_time:.2f}s "
-              f"({100 * stats.host_busy_time / wall:.0f}% of wall — overlapped)")
+              f"({100 * stats.host_busy_time / wall:.0f}% of wall — "
+              f"overlapped)")
 
 
 if __name__ == "__main__":

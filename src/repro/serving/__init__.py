@@ -1,3 +1,4 @@
+from repro.serving.api import InferenceServer, RequestHandle, ServerConfig
 from repro.serving.engine import Engine, EngineConfig, EngineStats
 from repro.serving.request import Phase, Request
 from repro.serving.simulator import (ServingSimulator, SimConfig, SimResult,

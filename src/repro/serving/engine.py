@@ -1,19 +1,34 @@
 """Online serving engine — real execution of the APEX design.
 
-Wires together: admission (GPU-first, rule 1), the Algorithm-1
-scheduler, the Asynchronous Overlap runtime (OverlapController +
-HostExecutor thread) and the jitted model step functions.  On TPU the
-device tier is the chip mesh; on this container it is the jax CPU
-backend while the host tier is the threaded numpy executor — the
-*structure* (async dispatch of the device step overlapping host
-attention) is identical.
+Wires together: admission (GPU-first, rule 1, via the shared
+``AdmissionController``), the Algorithm-1 scheduler, the Asynchronous
+Overlap runtime (OverlapController + HostExecutor thread) and the
+jitted model step functions.  On TPU the device tier is the chip mesh;
+on this container it is the jax CPU backend while the host tier is the
+threaded numpy executor — the *structure* (async dispatch of the
+device step overlapping host attention) is identical.
+
+Every iteration snapshots the three queues (prefill admitted this
+step, device decodes, host decodes with rule-4 ``layer_progress``) and
+runs ``ApexScheduler.schedule`` against the profiled performance
+model.  The returned ``Decision`` picks the execution variant:
+
+  * ``GPU_ONLY``       — device-only decode (no host-designated rows).
+  * ``ASYNC_OVERLAP``  — deferred synchronization: the host job from
+    the previous iteration is *polled*; if late, host rows ride along
+    untouched (the §3.4 GPU re-check) and never stall the device.
+  * ``ASYM_PIPELINE``  — executed at engine granularity as the
+    two-sub-step variant: device sub-step k emits the cohort's QKV,
+    host attention is *synchronized* (blocking) before sub-step k+1
+    consumes it — host attention sits between consecutive device
+    sub-steps, on the critical path, guaranteeing one cohort layer of
+    progress per cycle (the paper's per-layer interleaved variant
+    lives in the simulator).
 
 Static-shape discipline: one decode compile per (device_slots,
-host_slots) pair; inactive rows ride along masked.  Asymmetric
-Pipelining is executed at engine granularity (two sub-steps per cycle,
-host attention computed between them) — the per-layer interleaved
-variant exists only in the simulator; this engine focuses on the
-paper's contribution (Asynchronous Overlap), which is exact here.
+host_slots) pair; inactive rows ride along masked.  Both hybrid
+variants are exact — host rows emit bit-identical tokens to a
+device-resident run (tests/test_overlap.py enforces this).
 """
 from __future__ import annotations
 
@@ -26,7 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.overlap_engine import Cohort, HostExecutor, OverlapController
-from repro.core.scheduler import StrategyKind
+from repro.core.perf_model import analytic_model
+from repro.core.scheduler import (AdmissionController, ApexScheduler,
+                                  Decision, StrategyKind)
 from repro.models import (ModelParams, decode_step, init_decode_state, prefill)
 from repro.models.config import BlockKind, ModelConfig
 from repro.models.kv_cache import PagedKVPool, StackState
@@ -46,6 +63,18 @@ class EngineConfig:
     # offload policy: fraction of device KV that must be claimed before
     # requests go to the host tier (GPU-first rule)
     enable_offload: bool = True
+    # Algorithm-1 scheduling: analytic platform calibration feeding the
+    # performance model, and the §4.2 knobs passed to ApexScheduler.
+    platform: str = "a10"
+    host_min_ratio: float = 0.0
+    max_pipeline_sub_batch: int = 256
+    use_scheduler: bool = True
+    # optional KV-budget overrides for the AdmissionController; None
+    # derives them from slot capacity (then the structural constraints
+    # — free slot, paged pool — bind first).  Set tighter values to
+    # throttle admission below the engine's physical capacity.
+    device_kv_budget_tokens: Optional[int] = None
+    host_kv_budget_tokens: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -55,6 +84,14 @@ class EngineStats:
     iterations: int = 0
     wall_time: float = 0.0
     host_busy_time: float = 0.0
+    # per-iteration Algorithm-1 outcomes: StrategyKind.value -> count
+    strategy_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    last_decision: Optional[Decision] = None
+
+    def record_decision(self, decision: Decision) -> None:
+        key = decision.strategy.value
+        self.strategy_counts[key] = self.strategy_counts.get(key, 0) + 1
+        self.last_decision = decision
 
     @property
     def throughput(self) -> float:
@@ -64,7 +101,8 @@ class EngineStats:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params: ModelParams,
-                 ecfg: Optional[EngineConfig] = None) -> None:
+                 ecfg: Optional[EngineConfig] = None,
+                 scheduler: Optional[ApexScheduler] = None) -> None:
         self.cfg = cfg
         self.params = params
         self.e = ecfg or EngineConfig()
@@ -78,6 +116,23 @@ class Engine:
         self.queue: List[Request] = []
         self.host_requests: Dict[int, Request] = {}
         self.stats = EngineStats()
+        self.scheduler = scheduler
+        if self.scheduler is None and self.e.use_scheduler:
+            self.scheduler = ApexScheduler(
+                analytic_model(self.e.platform, cfg),
+                host_min_ratio=self.e.host_min_ratio,
+                max_pipeline_sub_batch=self.e.max_pipeline_sub_batch)
+        device_budget = (self.e.device_kv_budget_tokens
+                         if self.e.device_kv_budget_tokens is not None
+                         else self.e.device_slots * self.e.cache_len)
+        host_budget = 0
+        if self.e.enable_offload:
+            host_budget = (self.e.host_kv_budget_tokens
+                           if self.e.host_kv_budget_tokens is not None
+                           else self.e.host_pool_pages * self.e.page_size)
+        self.admission = AdmissionController(
+            device_kv_budget_tokens=device_budget,
+            host_kv_budget_tokens=host_budget)
         self._decode_fn = jax.jit(
             lambda p, tok, st: decode_step(p, cfg, tok, st))
         self._overlap = None
@@ -97,6 +152,8 @@ class Engine:
 
     # ------------------------------------------------------------------
     def submit(self, request: Request) -> None:
+        if request.arrival_time is None:
+            request.arrival_time = time.perf_counter()
         request.phase = Phase.QUEUED
         self.queue.append(request)
 
@@ -109,6 +166,7 @@ class Engine:
     # --- prefill ----------------------------------------------------------
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
         """Prefill on device into this slot of the shared state."""
+        req.phase = Phase.PREFILL
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
         sub = init_decode_state(self.cfg, device_batch=1,
                                 cache_len=self.e.cache_len)
@@ -117,17 +175,14 @@ class Engine:
         req.output.append(tok)
         if req.first_token_time is None:
             req.first_token_time = time.perf_counter()
-        # splice the single-row state into the shared batch state
-        new_entries = []
-        for j, entry in enumerate(self.state.per_entry):
-            if self.cfg.block_pattern[j] == BlockKind.ATTN:
-                new_entries.append(jax.tree.map(
-                    lambda big, small: big.at[:, slot].set(small[:, 0]),
-                    entry, sub.per_entry[j]))
-            else:
-                new_entries.append(jax.tree.map(
-                    lambda big, small: big.at[:, slot].set(small[:, 0]),
-                    entry, sub.per_entry[j]))
+        # splice the single-row state into the shared batch state — the
+        # same row-assignment works for every entry kind (attention KV
+        # and recurrent states share the batch-axis layout)
+        new_entries = [
+            jax.tree.map(lambda big, small: big.at[:, slot].set(small[:, 0]),
+                         entry, sub.per_entry[j])
+            for j, entry in enumerate(self.state.per_entry)
+        ]
         lengths = self.state.lengths.at[slot].set(req.prompt_len)
         self.state = StackState(per_entry=tuple(new_entries), lengths=lengths)
         self.slots[slot] = req
@@ -145,6 +200,7 @@ class Engine:
         (paper §3.1: device prefills; host owns decode attention).
         Recurrent (Mamba/xLSTM) states stay ON-DEVICE, spliced into the
         unified state's host row — only attention stalls on the host."""
+        req.phase = Phase.PREFILL
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
         sub = init_decode_state(self.cfg, device_batch=1,
                                 cache_len=self.e.cache_len)
@@ -190,22 +246,34 @@ class Engine:
         # the cohort picks the new member up at the next token boundary
 
     # --- admission (rule 1: GPU-first) --------------------------------------
-    def _admit(self) -> None:
+    def _admit(self) -> List[Request]:
+        """Admit queued requests through the shared AdmissionController:
+        KV budgets and engine slot availability are one placement
+        decision.  Returns the requests prefilled this iteration (the
+        scheduler's prefill snapshot)."""
+        admitted: List[Request] = []
         while self.queue:
             req = self.queue[0]
             if req.prompt_len + req.max_new_tokens >= self.e.cache_len:
                 req.max_new_tokens = self.e.cache_len - req.prompt_len - 1
+            need = req.kv_demand()
             slot = self._free_slot()
-            if slot is not None:
-                self._prefill_into_slot(self.queue.pop(0), slot)
-                continue
-            if self.e.enable_offload:
-                hslot = self._free_host_slot()
-                if hslot is not None and self._executor.pool.can_admit(
-                        req.prompt_len + req.max_new_tokens):
-                    self._prefill_to_host(self.queue.pop(0), hslot)
-                    continue
-            break
+            hslot = self._free_host_slot() if self.e.enable_offload else None
+            tier = self.admission.place(
+                need, device_ok=slot is not None,
+                host_ok=(hslot is not None
+                         and self._executor.pool.can_admit(need)))
+            if tier is None:
+                break
+            req = self.queue.pop(0)
+            req.tier = tier
+            req.kv_reserved = need
+            if tier == "device":
+                self._prefill_into_slot(req, slot)
+            else:
+                self._prefill_to_host(req, hslot)
+            admitted.append(req)
+        return admitted
 
     # --- cohort management ------------------------------------------------
     def _ensure_cohort(self) -> Optional[Cohort]:
@@ -238,11 +306,38 @@ class Engine:
                                self.cfg.resolved_head_dim), jnp.float32))
         return self._cohort
 
+    # --- Algorithm 1 ---------------------------------------------------------
+    def _schedule(self, admitted: List[Request],
+                  active_rows: List[int]) -> Optional[Decision]:
+        """Build queue snapshots and run Algorithm 1 for this iteration."""
+        if self.scheduler is None:
+            return None
+        # Device requests admitted this iteration are the prefill
+        # queue, not decodes.  Host requests stay in decode_cpu even
+        # when just admitted: at engine granularity their cohort decode
+        # runs in this same step, and the strategy choice must see them
+        # (decode_cpu empty <=> GPU_ONLY must match the dispatch).
+        new_ids = {r.request_id for r in admitted}
+        decode_gpu = [r for r in (self.slots[i] for i in active_rows)
+                      if r.request_id not in new_ids]
+        decode_cpu = list(self.host_requests.values())
+        if not (admitted or decode_gpu or decode_cpu):
+            return None                      # idle iteration: nothing to decide
+        contexts = [r.total_len for r in decode_gpu + decode_cpu]
+        mean_context = float(np.mean(contexts)) if contexts else 1.0
+        decision = self.scheduler.schedule(
+            admitted, decode_gpu, decode_cpu,
+            mean_context=max(mean_context, 1.0),
+            prefill_tokens=sum(r.prompt_len for r in admitted))
+        self.stats.record_decision(decision)
+        return decision
+
     # --- one engine iteration ------------------------------------------------
     def step(self) -> None:
         t0 = time.perf_counter()
-        self._admit()
+        admitted = self._admit()
         active_rows = [i for i, r in enumerate(self.slots) if r is not None]
+        decision = self._schedule(admitted, active_rows)
         tokens = np.zeros((self.e.device_slots,), np.int32)
         for i in active_rows:
             tokens[i] = self.slots[i].output[-1]
@@ -255,7 +350,10 @@ class Engine:
 
         cohort = self._ensure_cohort() if self.e.enable_offload else None
         if cohort is not None:
-            self._step_overlap(jnp.asarray(tokens), cohort, active_rows)
+            wait = (decision is not None
+                    and decision.strategy == StrategyKind.ASYM_PIPELINE)
+            self._step_overlap(jnp.asarray(tokens), cohort, active_rows,
+                               wait=wait)
         elif active_rows:
             self._step_device_only(jnp.asarray(tokens), active_rows)
         self.stats.iterations += 1
@@ -279,14 +377,23 @@ class Engine:
                                                    self.state)
         self._commit_device(logits, active_rows)
 
-    def _step_overlap(self, tokens, cohort: Cohort, active_rows) -> None:
-        """One Asynchronous Overlap iteration (paper §3.3)."""
+    def _step_overlap(self, tokens, cohort: Cohort, active_rows,
+                      *, wait: bool = False) -> None:
+        """One hybrid iteration (paper §3.3).
+
+        ``wait=False`` — Asynchronous Overlap: poll the pending host
+        job; if late, host rows ride along untouched (the §3.4
+        re-check).  ``wait=True`` — Asymmetric Pipelining at engine
+        granularity: block until the host result is ready, putting host
+        attention between the two device sub-steps (on the critical
+        path) so every cycle advances the cohort one layer."""
         ctl = self._overlap
         valid = cohort.valid_slots
-        # the GPU re-check (end of §3.4): if the host result for the
-        # pending job is not ready, host rows ride along untouched
         if self._pending_job is not None:
-            out = self._executor.poll(self._pending_job)
+            if wait:
+                out = self._executor.result(self._pending_job, timeout=120.0)
+            else:
+                out = self._executor.poll(self._pending_job)
             if out is None:
                 host_idle = ctl.host_io(cohort)._replace(
                     consume_layer=jnp.int32(-1), emit_layer=jnp.int32(-1),
@@ -343,25 +450,31 @@ class Engine:
             if r is not None and r.done:
                 r.phase = Phase.FINISHED
                 r.finish_time = now
+                self.admission.release("device", r.kv_reserved)
                 self.slots[i] = None
         done_hosts = [rid for rid, r in self.host_requests.items() if r.done]
         for rid in done_hosts:
             r = self.host_requests.pop(rid)
             r.phase = Phase.FINISHED
             r.finish_time = now
+            self.admission.release("host", r.kv_reserved)
             self._executor.free(rid)
             self._host_slot_owner.pop(r.slot, None)
         # the cohort rebuilds itself at the next token boundary
         # (_ensure_cohort); completions always leave attn_ptr == -1
 
     # --- driver -------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or any(r is not None for r in self.slots)
+                    or self.host_requests)
+
     def run(self, requests: List[Request], *, max_iterations: int = 100000
             ) -> EngineStats:
         for r in requests:
             self.submit(r)
         it = 0
-        while (self.queue or any(self.slots) or self.host_requests) \
-                and it < max_iterations:
+        while self.has_work and it < max_iterations:
             self.step()
             it += 1
         if self._executor is not None:

@@ -1,4 +1,13 @@
-"""Request lifecycle for the online serving engine."""
+"""Request lifecycle for the online serving engine.
+
+``arrival_time`` semantics: ``None`` means "not yet arrived" — the
+engine stamps ``time.perf_counter()`` at ``submit()``.  Workload
+generators (``repro.serving.workloads``) instead fill *relative*
+offsets from trace start; ``InferenceServer.serve`` rebases those onto
+the wall clock before submission, and the discrete-event simulator
+keeps them on its virtual clock.  Latency accessors return ``None``
+rather than silently mixing the two clocks.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -24,11 +33,13 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
-    arrival_time: float = 0.0
+    arrival_time: Optional[float] = None
     phase: Phase = Phase.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
     # serving bookkeeping
     slot: Optional[int] = None          # device cache slot (device tier)
+    tier: Optional[str] = None          # "device" | "host" once admitted
+    kv_reserved: int = 0                # tokens held in the admission budget
     layer_progress: int = 0             # APEX rule-4 partial progress
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -54,14 +65,20 @@ class Request:
         return self.prompt_len + self.max_new_tokens
 
     def per_token_latency(self) -> Optional[float]:
-        if self.finish_time is None or not self.output:
+        if self.finish_time is None or self.arrival_time is None \
+                or not self.output:
             return None
         return (self.finish_time - self.arrival_time) / len(self.output)
+
+    def time_to_first_token(self) -> Optional[float]:
+        if self.first_token_time is None or self.arrival_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
 
 
 def make_synthetic_request(rng: np.random.Generator, *, prompt_len: int,
                            output_len: int, vocab: int,
-                           arrival: float = 0.0) -> Request:
+                           arrival: Optional[float] = None) -> Request:
     return Request(
         prompt=list(rng.integers(0, vocab, prompt_len)),
         max_new_tokens=output_len, arrival_time=arrival)

@@ -98,6 +98,9 @@ class ServingSimulator:
             ) -> SimResult:
         s = self.sim
         hybrid = s.scheduler in ("neo", "apex", "apex+")
+        for r in requests:
+            if r.arrival_time is None:   # unstamped => virtual-clock t=0
+                r.arrival_time = 0.0
         waiting = sorted(requests, key=lambda r: r.arrival_time)
         min_budget = (max(self.device_kv_tokens, self.host_kv_tokens)
                       if hybrid else self.device_kv_tokens)

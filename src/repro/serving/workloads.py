@@ -47,6 +47,12 @@ WORKLOADS = {
 }
 
 
+def poisson_offsets(rng: np.random.Generator, rate: float,
+                    n: int) -> List[float]:
+    """Poisson-process arrival offsets (seconds from trace start)."""
+    return [float(a) for a in np.cumsum(rng.exponential(1.0 / rate, n))]
+
+
 def _lognormal(rng: np.random.Generator, mean: float, cv: float,
                lo: int, hi: int, n: int) -> np.ndarray:
     sigma2 = np.log(1.0 + cv * cv)
@@ -60,8 +66,11 @@ def generate(name: str, *, num_requests: int, vocab: int,
              output_mean_override: Optional[float] = None) -> List[Request]:
     """Sample a request trace.
 
-    ``arrival_rate`` (req/s) => Poisson arrivals; None => all at t=0
-    (closed-loop, the paper's throughput experiments).
+    ``arrival_rate`` (req/s) => Poisson arrivals, expressed as
+    *relative offsets* from trace start (the simulator's virtual clock;
+    ``InferenceServer.serve`` rebases them onto the wall clock).
+    None => closed-loop (the paper's throughput experiments): requests
+    carry no arrival stamp and the engine stamps them at ``submit()``.
     ``output_mean_override`` reproduces the paper's §5.4 output-length
     sweep on a fixed workload.
     """
@@ -73,13 +82,13 @@ def generate(name: str, *, num_requests: int, vocab: int,
     outputs = _lognormal(rng, out_mean, spec.output_cv, 1,
                          spec.output_max, num_requests)
     if arrival_rate:
-        gaps = rng.exponential(1.0 / arrival_rate, num_requests)
-        arrivals = np.cumsum(gaps)
+        arrivals = poisson_offsets(rng, arrival_rate, num_requests)
     else:
-        arrivals = np.zeros(num_requests)
+        arrivals = [None] * num_requests
     return [
         Request(prompt=list(rng.integers(0, vocab, int(p))),
-                max_new_tokens=int(o), arrival_time=float(a))
+                max_new_tokens=int(o),
+                arrival_time=None if a is None else float(a))
         for p, o, a in zip(prompts, outputs, arrivals)
     ]
 

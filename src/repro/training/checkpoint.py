@@ -26,10 +26,36 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
 
-_CODEC = zstandard.ZstdCompressor(level=3)
-_DECODEC = zstandard.ZstdDecompressor()
+try:
+    import zstandard
+except ModuleNotFoundError:          # container without zstd: store raw
+    zstandard = None
+
+
+class _RawCodec:
+    def compress(self, b: bytes) -> bytes:
+        return b
+
+    def decompress(self, b: bytes) -> bytes:
+        return b
+
+
+_CODEC = (zstandard.ZstdCompressor(level=3) if zstandard is not None
+          else _RawCodec())
+_CODEC_NAME = "zstd" if zstandard is not None else "raw"
+
+
+def _decompressor(codec: str):
+    """Pick the decompressor from the manifest codec: raw checkpoints
+    load anywhere; zstd ones need the package."""
+    if codec == "raw":
+        return _RawCodec()
+    if zstandard is None:
+        raise RuntimeError(
+            f"checkpoint was written with codec {codec!r} but the "
+            f"zstandard package is not installed")
+    return zstandard.ZstdDecompressor()
 
 
 def _flatten(tree: Any):
@@ -56,6 +82,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, process_index: int = 0,
                     "dtype": str(np.asarray(l).dtype)} for l in leaves],
         "num_leaves": len(leaves),
         "process_index": process_index,
+        "codec": _CODEC_NAME,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -112,6 +139,7 @@ def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
     path = os.path.join(ckpt_dir, f"step_{step:09d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    decodec = _decompressor(manifest.get("codec", "zstd"))
     leaves_like, treedef = _flatten(tree_like)
     if manifest["num_leaves"] != len(leaves_like):
         raise ValueError(
@@ -122,7 +150,7 @@ def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
     with open(shard, "rb") as f:
         for spec, like in zip(manifest["leaves"], leaves_like):
             n = np.frombuffer(f.read(8), np.int64)[0]
-            raw = _DECODEC.decompress(f.read(int(n)))
+            raw = decodec.decompress(f.read(int(n)))
             arr = np.frombuffer(raw, dtype=np.dtype(spec["dtype"])
                                 ).reshape(spec["shape"]).copy()
             out.append(jnp.asarray(arr))

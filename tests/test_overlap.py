@@ -12,6 +12,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.overlap_engine import OverlapController
+from repro.core.scheduler import Decision, StrategyKind
 from repro.models import init_params
 from repro.serving import Engine, EngineConfig, Request
 from repro.serving.request import make_synthetic_request
@@ -82,6 +83,74 @@ def test_cohort_protocol_window_invariants():
     assert sorted(emitted) == list(cfg.attn_layer_indices)
     # cohort wrapped back to token start
     assert cohort.attn_ptr == -1
+
+
+def test_decode_overload_records_hybrid_decisions():
+    """Scheduler-engine integration: a decode-only overload (more
+    requests than device slots) must run Algorithm 1 every non-idle
+    iteration and pick a hybrid strategy while host rows exist — and
+    the streamed tokens from host-offloaded rows stay bit-identical to
+    a device-only run (checked inside _run_pair's reference)."""
+    ref, test, stats = _run_pair("internlm2-1.8b")
+    by_prompt = {tuple(r.prompt): r.output for r in ref}
+    for r in test:
+        assert r.output == by_prompt[tuple(r.prompt)]
+    hybrid = (stats.strategy_counts.get(StrategyKind.ASYNC_OVERLAP.value, 0)
+              + stats.strategy_counts.get(StrategyKind.ASYM_PIPELINE.value,
+                                          0))
+    assert hybrid > 0, f"no hybrid decisions: {stats.strategy_counts}"
+    assert sum(stats.strategy_counts.values()) <= stats.iterations
+    assert stats.last_decision is not None
+
+
+class _AlwaysPipeline:
+    """Scheduler stub forcing the ASYM_PIPELINE dispatch (the blocking
+    two-sub-step engine variant) whenever host decodes exist."""
+
+    def schedule(self, prefill, decode_gpu, decode_cpu, *, mean_context,
+                 prefill_tokens=0):
+        if not decode_cpu:
+            return Decision(StrategyKind.GPU_ONLY, list(prefill),
+                            list(decode_gpu), [], reason="stub")
+        return Decision(StrategyKind.ASYM_PIPELINE, list(prefill),
+                        list(decode_gpu), list(decode_cpu),
+                        sub_batch_1=list(decode_gpu),
+                        sub_batch_2=list(decode_cpu), reason="stub")
+
+
+def test_asym_pipeline_two_substep_variant_exact():
+    """The blocking (host-synchronized) pipeline dispatch must emit the
+    same tokens as device-only execution — strategy switches change
+    only *when* host attention runs, never *what*."""
+    cfg = get_config("internlm2-1.8b").reduced(layers=None, d_model=64,
+                                               vocab=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    protos = [make_synthetic_request(rng, prompt_len=7, output_len=5,
+                                     vocab=cfg.vocab_size)
+              for _ in range(4)]
+
+    def fresh():
+        return [Request(prompt=list(r.prompt), max_new_tokens=r.max_new_tokens)
+                for r in protos]
+
+    ref_engine = Engine(cfg, params, EngineConfig(
+        device_slots=5, cache_len=64, enable_offload=False))
+    ref = fresh()
+    ref_engine.run(ref)
+    ref_engine.shutdown()
+
+    eng = Engine(cfg, params, EngineConfig(device_slots=1, host_slots=4,
+                                           cache_len=64),
+                 scheduler=_AlwaysPipeline())
+    test = fresh()
+    stats = eng.run(test)
+    eng.shutdown()
+    assert stats.host_tokens > 0
+    assert stats.strategy_counts.get(StrategyKind.ASYM_PIPELINE.value, 0) > 0
+    by_prompt = {tuple(r.prompt): r.output for r in ref}
+    for r in test:
+        assert r.output == by_prompt[tuple(r.prompt)]
 
 
 def test_xlstm_offload_rejected():

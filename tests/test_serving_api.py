@@ -1,0 +1,121 @@
+"""The unified serving surface: InferenceServer / ServerConfig /
+RequestHandle streaming, arrival stamping, admission budget release."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import InferenceServer, Phase, ServerConfig
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("stablelm-12b").reduced(layers=2, d_model=64, vocab=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _server(cfg, params, **kw):
+    defaults = dict(device_slots=2, host_slots=3, cache_len=64,
+                    prompt_len=6, output_len=5, num_requests=5)
+    defaults.update(kw)
+    return InferenceServer(cfg, params, ServerConfig(**defaults))
+
+
+def test_streaming_matches_final_output_and_stamps_times(served):
+    cfg, params = served
+    with _server(cfg, params) as server:
+        h = server.submit([1, 2, 3, 4], max_new_tokens=5)
+        assert h.request.arrival_time is not None   # stamped at submit
+        streamed = list(h.tokens())
+        assert streamed == h.output
+        assert len(streamed) == 5
+        assert h.done and h.phase == Phase.FINISHED
+        assert h.time_to_first_token() is not None
+        assert h.time_to_first_token() >= 0.0
+    assert h.per_token_latency() is not None and h.per_token_latency() > 0
+
+
+def test_interleaved_streams_continuous_batching(served):
+    cfg, params = served
+    with _server(cfg, params) as server:
+        h1 = server.submit([3, 1, 4, 1], max_new_tokens=4)
+        h2 = server.submit([2, 7, 1, 8], max_new_tokens=4)
+        it1, it2 = h1.tokens(), h2.tokens()
+        seq = [next(it1), next(it2), next(it1), next(it2)]
+        assert seq[0] == h1.output[0] and seq[1] == h2.output[0]
+        rest1, rest2 = list(it1), list(it2)
+        assert [seq[0], seq[2]] + rest1 == h1.output
+        assert [seq[1], seq[3]] + rest2 == h2.output
+        stats = server.run_until_idle()
+        # every non-idle iteration ran Algorithm 1
+        assert sum(stats.strategy_counts.values()) > 0
+
+
+def test_admission_budgets_released_on_retire(served):
+    cfg, params = served
+    with _server(cfg, params) as server:
+        for r in server.config.build_requests(vocab=cfg.vocab_size):
+            server.submit(r)
+        assert server.pending + server.active == 5
+        server.run_until_idle()
+        adm = server.engine.admission
+        assert adm.device_used == 0 and adm.host_used == 0
+        assert server.pending == 0 and server.active == 0
+
+
+def test_serve_replays_arrival_offsets(served):
+    cfg, params = served
+    with _server(cfg, params) as server:
+        reqs = server.config.build_requests(vocab=cfg.vocab_size)
+        for i, r in enumerate(reqs):
+            r.arrival_time = i * 1e-4     # relative offsets
+        handles = server.serve(reqs, realtime=True)
+        assert len(handles) == len(reqs)
+        assert all(h.done for h in handles)
+        # offsets were rebased to the wall clock, so latencies are sane
+        lats = [h.per_token_latency() for h in handles]
+        assert all(lat is not None and 0 < lat < 60 for lat in lats)
+
+
+def test_workload_requests_capped_to_cache():
+    scfg = ServerConfig(cache_len=64, prompt_len=16, output_len=8,
+                        workload="azure-conv", num_requests=6)
+    reqs = scfg.build_requests(vocab=64)
+    assert len(reqs) == 6
+    assert all(r.prompt_len <= 16 and r.max_new_tokens <= 8 for r in reqs)
+    assert all(r.arrival_time is None for r in reqs)   # closed loop
+
+
+def test_queue_full_raises(served):
+    cfg, params = served
+    with _server(cfg, params, max_queue=1) as server:
+        server.submit([1, 2], max_new_tokens=2)
+        with pytest.raises(RuntimeError):
+            server.submit([3, 4], max_new_tokens=2)
+        server.run_until_idle()
+
+
+def test_device_kv_budget_override_forces_host_placement(served):
+    """A device budget tighter than slot capacity throttles device
+    admission, pushing overflow to the host tier (rule 1 over the
+    folded AdmissionController)."""
+    cfg, params = served
+    # budget fits exactly one request (prompt 6 + output 5 = 11 tokens)
+    with _server(cfg, params, device_kv_budget_tokens=12) as server:
+        for r in server.config.build_requests(vocab=cfg.vocab_size):
+            server.submit(r)
+        stats = server.run_until_idle()
+        assert stats.host_tokens > 0
+        # never more than one device-resident request at a time
+        assert server.engine.admission.device_kv_budget_tokens == 12
+
+
+def test_gpu_only_when_offload_disabled(served):
+    cfg, params = served
+    with _server(cfg, params, enable_offload=False) as server:
+        for r in server.config.build_requests(vocab=cfg.vocab_size):
+            server.submit(r)
+        stats = server.run_until_idle()
+    assert set(stats.strategy_counts) == {"gpu_only"}
+    assert stats.host_tokens == 0

@@ -105,7 +105,10 @@ def test_sharding_rules_resolve_and_dedup():
 
 
 def test_fit_spec_drops_non_dividing_axes():
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    try:
+        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    except TypeError:    # jax<=0.4.x: AbstractMesh(((name, size), ...))
+        mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
     fitted = sharding.fit_spec(mesh, P("model", "data"), (3, 8))
     assert fitted == P(None, "data")
     fitted2 = sharding.fit_spec(mesh, P(("data", "model"), None), (6, 4))
