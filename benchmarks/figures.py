@@ -175,6 +175,43 @@ def ineq_regime() -> List[Row]:
 
 
 # --------------------------------------------------------------------------
+# §3.1 scheduling accuracy: analytic vs measured perf model on the live
+# engine — predicted step time vs observed wall time, calibrator error
+# --------------------------------------------------------------------------
+
+def perf_model_accuracy() -> List[Row]:
+    import os
+    import tempfile
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import InferenceServer, ServerConfig
+    cfg = get_config("llama3.1-8b").reduced(layers=4, d_model=128, vocab=256)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache = os.path.join(tempfile.gettempdir(), "apex_profile_bench.json")
+    rows: List[Row] = []
+    for spec in ("analytic", "measured"):
+        scfg = ServerConfig(device_slots=2, host_slots=6, cache_len=96,
+                            perf_model=spec, profile_cache=cache,
+                            profile_grid=dict(token_counts=(1, 4, 16),
+                                              kv_positions=(64, 256, 1024),
+                                              transfer_sizes=(1 << 16,)),
+                            num_requests=8, prompt_len=12, output_len=12)
+        with InferenceServer(cfg, params, scfg) as server:
+            for r in scfg.build_requests(vocab=cfg.vocab_size):
+                server.submit(r)
+            stats = server.run_until_idle()
+        decided = max(sum(stats.strategy_counts.values()), 1)
+        rows.append((
+            f"perfmodel/{spec}",
+            stats.observed_time / decided * 1e6,
+            f"pred={stats.predicted_time:.3f}s obs={stats.observed_time:.3f}s "
+            f"err={stats.prediction_error:.2f} "
+            f"ewma={stats.step_error_ewma or 0:.2f} "
+            f"strategies={stats.strategy_counts}"))
+    return rows
+
+
+# --------------------------------------------------------------------------
 # Real measured overlap: engine wall time vs host-attention busy time
 # --------------------------------------------------------------------------
 

@@ -26,6 +26,7 @@ def main() -> None:
         ("fig6_latency", figures.fig6_latency),
         ("fig7_output_length", figures.fig7_output_length),
         ("ineq_regime", figures.ineq_regime),
+        ("perf_model_accuracy", figures.perf_model_accuracy),
         ("overlap_microbench", figures.overlap_microbench),
     ]
     print("name,us_per_call,derived")

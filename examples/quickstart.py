@@ -42,5 +42,8 @@ with InferenceServer(cfg, params, ServerConfig(device_slots=1, host_slots=2,
 print("device request:", h1.output)
 print("host request:  ", streamed, "(host tokens:", stats.host_tokens, ")")
 print("strategies:    ", stats.strategy_counts)
+if stats.prediction_error is not None:   # predicted-vs-observed step time
+    print(f"sched accuracy: {100 * stats.prediction_error:.0f}% error "
+          f"({stats.perf_model_spec} model, online-calibrated)")
 assert h1.output == toks and streamed == toks, "outputs must be identical"
 print("OK — device, host-offloaded and raw decode all agree")

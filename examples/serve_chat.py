@@ -24,8 +24,17 @@ d = sched.schedule([], list(range(4)), list(range(24)), mean_context=1024)
 print(f"Algorithm 1 decode-only decision on T4: {d.strategy.value} "
       f"({d.reason})")
 
-# one structured config: engine capacity + scheduler + workload
+# one structured config: engine capacity + scheduler + workload.
+# perf_model="measured" is the profiling-informed mode (§3.1): the
+# server runs the OfflineProfiler on the *real* backends at startup
+# (cached to profile_cache) and schedules off the measured tables,
+# refined online by the EWMA calibrator.
 scfg = ServerConfig(device_slots=3, host_slots=6, cache_len=96,
+                    perf_model="measured",
+                    profile_cache="/tmp/apex_profile_chat.json",
+                    profile_grid=dict(token_counts=(1, 4, 16),
+                                      kv_positions=(64, 256, 1024),
+                                      transfer_sizes=(1 << 16,)),
                     workload="azure-conv", num_requests=10,
                     prompt_len=24, output_len=16)
 
@@ -51,3 +60,6 @@ print(f"{len(reqs)} requests, {stats.device_tokens} device + "
 print(f"per-iteration strategy decisions: {stats.strategy_counts}")
 print(f"avg per-token latency {np.mean(lats)*1e3:.0f} ms; "
       f"host attention busy {stats.host_busy_time:.2f}s (overlapped)")
+print(f"scheduling accuracy ({stats.perf_model_spec}): predicted "
+      f"{stats.predicted_time:.2f}s vs observed {stats.observed_time:.2f}s "
+      f"(step-error ewma {100 * (stats.step_error_ewma or 0):.0f}%)")

@@ -1,13 +1,17 @@
 """APEX core: the paper's contribution — analytical model (§3.2),
 profiling-informed performance model (§3.1), scheduling algorithm
 (Algorithm 1), and the Asynchronous Overlap runtime (§3.3, §4.2)."""
-from repro.core.analytical import (Timings, ineq6_threshold,
+from repro.core.analytical import (Timings, host_cohort_below_min_ratio,
+                                   ineq6_threshold,
                                    pipelining_beneficial_decode_only,
                                    pipelining_beneficial_ineq6,
                                    pipelining_beneficial_mixed,
                                    plan_async_overlap, speedup_estimate)
 from repro.core.overlap_engine import Cohort, HostExecutor, OverlapController
-from repro.core.perf_model import (AnalyticPerfModel, ModelCosts, PLATFORMS,
-                                   Platform, TablePerfModel, analytic_model)
+from repro.core.perf_model import (AnalyticPerfModel, ModelCosts,
+                                   OnlineCalibrator, PLATFORMS,
+                                   PerfModelProvider, Platform,
+                                   TablePerfModel, analytic_model,
+                                   resolve_perf_model)
 from repro.core.scheduler import (AdmissionController, ApexScheduler,
                                   Decision, StrategyKind)

@@ -92,6 +92,14 @@ def pipelining_beneficial_mixed(t: Timings) -> bool:
     return lhs > rhs
 
 
+def host_cohort_below_min_ratio(host_batch: int, device_batch: int,
+                                ratio: float) -> bool:
+    """§4.2 admission threshold, the single shared predicate: a host
+    cohort smaller than ratio * device_batch cannot amortize the
+    dedicated CPU sub-batch's thread/dispatch overheads."""
+    return ratio > 0 and host_batch < ratio * max(device_batch, 1)
+
+
 def speedup_estimate(power_ratio_a: float, decode_fraction_b: float) -> float:
     """§5.2: achievable throughput gain S ≈ b/a over a device-only
     baseline (a = device:host compute-power ratio, b = fraction of time
@@ -140,7 +148,7 @@ def plan_async_overlap(t: Timings, *, device_batch: int,
     budget_tokens = t.n_c * iter_time            # host KV positions / iter
     max_cohort = int(budget_tokens / max(mean_context, 1.0))
     host_batch = max(0, min(host_queue, max_cohort))
-    if host_min_ratio > 0 and host_batch < host_min_ratio * max(device_batch, 1):
+    if host_cohort_below_min_ratio(host_batch, device_batch, host_min_ratio):
         # too small to amortize host-thread overheads — the paper's
         # empirical admission threshold (§4.2)
         host_batch = 0

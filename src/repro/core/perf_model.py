@@ -18,7 +18,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Optional, Tuple
+import math
+import os
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -191,7 +193,10 @@ class TablePerfModel:
     """
 
     def __init__(self, tables: Dict[str, List[Tuple[float, float]]],
-                 *, kv_bytes_per_pos: int, num_attn_layers: int) -> None:
+                 *, kv_bytes_per_pos: int, num_attn_layers: int,
+                 fingerprint: Optional[str] = None,
+                 profile_grid: Optional[Dict[str, List[float]]] = None
+                 ) -> None:
         self.tables = {k: (np.asarray([p[0] for p in v], float),
                            np.asarray([p[1] for p in v], float))
                        for k, v in tables.items()}
@@ -200,11 +205,21 @@ class TablePerfModel:
                 raise ValueError("table x values must be increasing")
         self.kv_bytes_per_pos = kv_bytes_per_pos
         self.num_attn_layers = num_attn_layers
+        # which model config the tables were measured for (see
+        # model_fingerprint) and at which sample points; None for
+        # hand-built tables
+        self.fingerprint = fingerprint
+        self.profile_grid = (None if profile_grid is None else
+                             {k: [float(x) for x in v]
+                              for k, v in profile_grid.items()})
 
     def _eval(self, op: str, x: float) -> float:
         xs, ys = self.tables[op]
         if x >= xs[-1] and len(xs) >= 2:   # extrapolate last segment
-            slope = (ys[-1] - ys[-2]) / (xs[-1] - xs[-2])
+            # op cost never shrinks with size: a noisy flat tail must
+            # not extrapolate below the last sample (or to <= 0, which
+            # would blow up Timings validation mid-serving)
+            slope = max((ys[-1] - ys[-2]) / (xs[-1] - xs[-2]), 0.0)
             return float(ys[-1] + slope * (x - xs[-1]))
         return float(np.interp(x, xs, ys))
 
@@ -227,20 +242,29 @@ class TablePerfModel:
         return self._eval("prefill", n_tokens)
 
     def n_g(self, context: float) -> float:
-        """Device attention rate in KV positions/s, from the table."""
-        x = 4096.0
+        """Device attention rate in KV positions/s, measured at the
+        actual operating context (secant through the table), so
+        Inequality (5)/(6) decisions track context like the analytic
+        model's do instead of a fixed 4096-position probe."""
+        x = max(float(context), 1.0)
         return x / max(self._eval("gatt", x), 1e-9)
 
     def n_c(self, context: float) -> float:
-        x = 4096.0
+        x = max(float(context), 1.0)
         return x / max(self._eval("catt", x), 1e-9)
 
     def timings(self, decode_batch: int, mean_context: float,
                 prefill_tokens: int = 0) -> Timings:
         kw = {}
         if prefill_tokens:
+            # mirror AnalyticPerfModel: the mixed-branch attention term
+            # is decode attention plus half the prefill's (causal
+            # triangle) attention — omitting the prefill-table term
+            # biased rule 3 toward pipelining under measured tables
             kw = dict(t_glinear_pref=self.t_linear(decode_batch + prefill_tokens),
-                      t_gatt_pref=self.t_gatt(decode_batch, mean_context))
+                      t_gatt_pref=(self.t_gatt(decode_batch, mean_context)
+                                   + 0.5 * self.t_prefill(prefill_tokens,
+                                                          prefill_tokens)))
         return Timings(
             t_glinear=self.t_linear(max(decode_batch, 1)),
             t_gatt=self.t_gatt(max(decode_batch, 1), mean_context),
@@ -253,6 +277,8 @@ class TablePerfModel:
                        for k, (xs, ys) in self.tables.items()},
             "kv_bytes_per_pos": self.kv_bytes_per_pos,
             "num_attn_layers": self.num_attn_layers,
+            "fingerprint": self.fingerprint,
+            "profile_grid": self.profile_grid,
         }
         with open(path, "w") as f:
             json.dump(payload, f, indent=1)
@@ -264,8 +290,211 @@ class TablePerfModel:
         return cls({k: [tuple(p) for p in v]
                     for k, v in payload["tables"].items()},
                    kv_bytes_per_pos=payload["kv_bytes_per_pos"],
-                   num_attn_layers=payload["num_attn_layers"])
+                   num_attn_layers=payload["num_attn_layers"],
+                   fingerprint=payload.get("fingerprint"),
+                   profile_grid=payload.get("profile_grid"))
 
 
 def analytic_model(platform: str, cfg: ModelConfig) -> AnalyticPerfModel:
     return AnalyticPerfModel(PLATFORMS[platform], ModelCosts.from_config(cfg))
+
+
+def model_fingerprint(cfg: ModelConfig) -> str:
+    """Identity of the *model shape* a measured profile belongs to
+    (deliberately host-independent: the same model profiled on another
+    machine is a legitimate reuse; another model's tables are not)."""
+    costs = ModelCosts.from_config(cfg)
+    return (f"{cfg.name}:d{cfg.d_model}:L{cfg.num_layers}"
+            f":attn{costs.num_attn_layers}:kv{costs.kv_bytes_per_pos}")
+
+
+# ---------------------------------------------------------------------------
+# Provider: spec strings -> timings() models
+# ---------------------------------------------------------------------------
+
+
+# profiling grid used when the engine profiles at startup — smaller than
+# the OfflineProfiler defaults so serving start stays interactive; tests
+# and callers override via profile_grid
+STARTUP_PROFILE_GRID: Dict[str, Tuple[int, ...]] = dict(
+    token_counts=(1, 8, 32, 128),
+    # small points cover the short-context regime modest serving
+    # configs actually visit (the profiler shrinks context to the
+    # total), larger points the batched long-context regime
+    kv_positions=(128, 512, 1024, 4096, 16384, 65536),
+    transfer_sizes=(1 << 16, 1 << 20),
+)
+
+
+@dataclasses.dataclass
+class PerfModelProvider:
+    """Resolves a perf-model *spec* string into the ``timings()``
+    interface the scheduler consumes (paper §3.1 made configurable):
+
+      * ``"analytic"``            — analytic calibration for ``platform``
+      * ``"analytic:<platform>"`` — analytic calibration for a named platform
+      * ``"measured"``            — run ``OfflineProfiler`` on the current
+        backends (cached to ``profile_cache`` when given; an existing
+        cache is loaded instead of re-profiling)
+      * ``"file:<path>"``         — load a previously saved profile
+    """
+
+    cfg: ModelConfig
+    platform: str = "a10"
+    profile_cache: Optional[str] = None
+    profile_grid: Optional[Dict[str, Tuple[int, ...]]] = None
+
+    def resolve(self, spec: str):
+        spec = (spec or "analytic").strip()
+        if spec == "analytic":
+            return self._analytic(self.platform)
+        if spec.startswith("analytic:"):
+            return self._analytic(spec.split(":", 1)[1])
+        if spec.startswith("file:"):
+            path = spec.split(":", 1)[1]
+            if not os.path.exists(path):
+                raise ValueError(f"perf-model profile not found: {path!r}")
+            model = TablePerfModel.load(path)
+            want = model_fingerprint(self.cfg)
+            if model.fingerprint is not None and model.fingerprint != want:
+                raise ValueError(
+                    f"profile {path!r} was measured for "
+                    f"{model.fingerprint} but this server runs {want}")
+            return model
+        if spec == "measured":
+            if self.profile_cache and os.path.exists(self.profile_cache):
+                model = TablePerfModel.load(self.profile_cache)
+                if model.fingerprint == model_fingerprint(self.cfg) \
+                        and self._grid_matches(model):
+                    return model
+                # stale cache (another model's tables, a pre-fingerprint
+                # payload of unknown provenance, or an explicitly
+                # requested grid the cache wasn't measured at):
+                # re-profile below and overwrite
+            from repro.core.profiler import OfflineProfiler   # cycle-free
+            grid = dict(self.profile_grid or STARTUP_PROFILE_GRID)
+            model = OfflineProfiler(self.cfg).run(**grid)
+            if self.profile_cache:
+                model.save(self.profile_cache)
+            return model
+        raise ValueError(
+            f"unknown perf-model spec {spec!r}; expected 'analytic', "
+            f"'analytic:<platform>', 'measured' or 'file:<path>'")
+
+    def _analytic(self, platform: str) -> AnalyticPerfModel:
+        if platform not in PLATFORMS:
+            raise ValueError(f"unknown platform {platform!r}; "
+                             f"have {sorted(PLATFORMS)}")
+        return analytic_model(platform, self.cfg)
+
+    def _grid_matches(self, model: TablePerfModel) -> bool:
+        """A cache satisfies an *explicitly requested* grid only if it
+        was measured at those points; with no requested grid (None),
+        any cached measurement of this model is acceptable."""
+        if self.profile_grid is None:
+            return True
+        want = {k: [float(x) for x in v]
+                for k, v in self.profile_grid.items()}
+        return model.profile_grid == want
+
+
+def resolve_perf_model(spec: str, cfg: ModelConfig, *, platform: str = "a10",
+                       profile_cache: Optional[str] = None,
+                       profile_grid: Optional[Dict[str, Tuple[int, ...]]]
+                       = None):
+    return PerfModelProvider(cfg, platform=platform,
+                             profile_cache=profile_cache,
+                             profile_grid=profile_grid).resolve(spec)
+
+
+# ---------------------------------------------------------------------------
+# Online calibration (§3.1 "profiling-informed" made continuous)
+# ---------------------------------------------------------------------------
+
+
+class OnlineCalibrator:
+    """Wraps any base perf model and refines its predictions with EWMA
+    corrections from observed per-iteration timings.
+
+    ``device_scale`` multiplies the device-side op times (``t_glinear``,
+    ``t_gatt`` and their ``*_pref`` variants) and divides the device
+    attention rate ``n_g``; ``host_scale`` scales ``t_catt`` and divides
+    the host rate ``n_c``.  Each observation moves ``log(scale)`` a step
+    ``alpha`` toward ``log(observed/predicted)``, with the per-update
+    ratio clipped to ``[1/max_step, max_step]`` so one-off outliers
+    (jit compiles, page faults) cannot destroy the estimate, while a
+    persistent drift is still converged to geometrically.
+
+    ``step_error_ewma`` tracks |observed - predicted| / observed of the
+    *corrected* predictions — the scheduling-accuracy metric surfaced
+    in ``EngineStats``.
+
+    Deliberate modeling choice: the device side calibrates against the
+    engine's full iteration wall time, so constant per-iteration
+    overhead (dispatch, admission, Python) is folded into
+    ``device_scale`` and widens the modeled host window.  That is the
+    window the host executor *really* has — it computes in the
+    background for the whole iteration, overhead included — but it
+    means ``n_g/n_c`` reflects achieved engine rates, not isolated
+    kernel rates, and on hosts with heavy per-step overhead the
+    scheduler will (correctly) lean further toward hybrid strategies
+    than the uncalibrated analytic constants would.
+    """
+
+    def __init__(self, base: Any, *, alpha: float = 0.2,
+                 max_step: float = 4.0) -> None:
+        self.base = base
+        self.alpha = alpha
+        self.max_step = max_step
+        self.device_scale = 1.0
+        self.host_scale = 1.0
+        self.step_error_ewma: Optional[float] = None
+        self.steps_observed = 0
+        self.host_observed = 0
+
+    # --- observation ------------------------------------------------------
+    def _walk(self, scale: float, predicted: float, observed: float) -> float:
+        if predicted <= 0.0 or observed <= 0.0:
+            return scale
+        ratio = min(max(observed / predicted, 1.0 / self.max_step),
+                    self.max_step)
+        return float(scale * math.exp(self.alpha * math.log(ratio)))
+
+    def observe_step(self, predicted: float, observed: float) -> None:
+        """Feed one engine iteration's predicted vs observed wall time."""
+        if predicted <= 0.0 or observed <= 0.0:
+            return
+        err = abs(observed - predicted) / observed
+        self.step_error_ewma = (err if self.step_error_ewma is None else
+                                (1.0 - self.alpha) * self.step_error_ewma
+                                + self.alpha * err)
+        self.device_scale = self._walk(self.device_scale, predicted, observed)
+        self.steps_observed += 1
+
+    def observe_host(self, predicted: float, observed: float) -> None:
+        """Feed one host-attention job's predicted vs observed time."""
+        if predicted <= 0.0 or observed <= 0.0:
+            return
+        self.host_scale = self._walk(self.host_scale, predicted, observed)
+        self.host_observed += 1
+
+    # --- corrected predictions -------------------------------------------
+    def timings(self, decode_batch: int, mean_context: float,
+                prefill_tokens: int = 0) -> Timings:
+        t = self.base.timings(decode_batch, mean_context,
+                              prefill_tokens=prefill_tokens)
+        s = self.device_scale
+        return dataclasses.replace(
+            t, t_glinear=t.t_glinear * s, t_gatt=t.t_gatt * s,
+            t_glinear_pref=t.t_glinear_pref * s,
+            t_gatt_pref=t.t_gatt_pref * s,
+            n_g=t.n_g / s, n_c=t.n_c / self.host_scale)
+
+    def t_catt(self, batch: int, context: float,
+               layers: Optional[int] = None) -> float:
+        return self.base.t_catt(batch, context, layers=layers) \
+            * self.host_scale
+
+    def __getattr__(self, name: str):
+        # delegate everything else (t_linear, t_prefill, save, ...)
+        return getattr(self.base, name)

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.perf_model import ModelCosts, TablePerfModel
+from repro.core.perf_model import (ModelCosts, TablePerfModel,
+                                   model_fingerprint)
 from repro.kernels.ops import host_paged_attention_numpy
 from repro.models import init_params
 from repro.models.config import ModelConfig
@@ -79,15 +80,19 @@ class OfflineProfiler:
         fn = jax.jit(decode_attention_ref)
         out = []
         for total in kv_positions:
-            batch = max(1, total // context)
+            # totals below `context` measure a single short-context row
+            # so the table covers the small-batch/short-context regime
+            # serving actually visits (instead of clamping to `context`)
+            ctx = min(context, total)
+            batch = max(1, total // ctx)
             q = jnp.ones((batch, cfg.num_heads, cfg.resolved_head_dim),
                          jnp.float32)
-            k = jnp.ones((batch, context, cfg.num_kv_heads,
+            k = jnp.ones((batch, ctx, cfg.num_kv_heads,
                           cfg.resolved_head_dim), jnp.bfloat16)
             v = k
-            lengths = jnp.full((batch,), context, jnp.int32)
+            lengths = jnp.full((batch,), ctx, jnp.int32)
             t = _time_fn(fn, q, k, v, lengths)
-            out.append((float(batch * context),
+            out.append((float(batch * ctx),
                         t * self.costs.num_attn_layers))
         return out
 
@@ -98,13 +103,14 @@ class OfflineProfiler:
         cfg = self.cfg
         out = []
         for total in kv_positions:
-            batch = max(1, total // context)
-            pages_per = -(-context // page_size)
+            ctx = min(context, total)
+            batch = max(1, total // ctx)
+            pages_per = -(-ctx // page_size)
             npages = batch * pages_per
             pages = np.ones((2, npages, page_size, cfg.num_kv_heads,
                              cfg.resolved_head_dim), np.float32)
             pt = np.arange(npages, dtype=np.int32).reshape(batch, pages_per)
-            lengths = np.full((batch,), context, np.int32)
+            lengths = np.full((batch,), ctx, np.int32)
             q = np.ones((batch, cfg.num_heads, cfg.resolved_head_dim),
                         np.float32)
             t0 = time.perf_counter()
@@ -113,8 +119,31 @@ class OfflineProfiler:
                 host_paged_attention_numpy(q, pages, pt, lengths,
                                            page_size=page_size)
             t = (time.perf_counter() - t0) / iters
-            out.append((float(batch * context),
+            out.append((float(batch * ctx),
                         t * self.costs.num_attn_layers))
+        return out
+
+    def profile_prefill(self, token_counts: Sequence[int],
+                        linear_table: List[Tuple[float, float]]
+                        ) -> List[Tuple[float, float]]:
+        """True prefill cost vs tokens: the already-measured linear
+        table plus the causal prefill-attention quadratic term (one
+        layer measured, scaled to all attention layers) — so the
+        scheduler's rule-3 window sees real attention cost instead of
+        a linear-table alias."""
+        from repro.kernels.ref import prefill_attention_ref
+        cfg = self.cfg
+        fn = jax.jit(lambda q, k, v: prefill_attention_ref(q, k, v))
+        lin = dict(linear_table)
+        out = []
+        for n in token_counts:
+            q = jnp.ones((1, n, cfg.num_heads, cfg.resolved_head_dim),
+                         jnp.float32)
+            k = jnp.ones((1, n, cfg.num_kv_heads, cfg.resolved_head_dim),
+                         jnp.float32)
+            t = _time_fn(fn, q, k, k)
+            out.append((float(n),
+                        lin[float(n)] + t * self.costs.num_attn_layers))
         return out
 
     def profile_transfer(self, sizes: Sequence[int]
@@ -142,9 +171,13 @@ class OfflineProfiler:
             "catt": self.profile_catt(kv_positions),
             "transfer": self.profile_transfer(transfer_sizes),
         }
-        # prefill table: reuse the linear table (prefill is linear-dominated
-        # at the profiled scales; attention quadratic term added analytically)
-        tables["prefill"] = tables["linear"]
+        tables["prefill"] = self.profile_prefill(token_counts,
+                                                 tables["linear"])
         return TablePerfModel(tables,
                               kv_bytes_per_pos=self.costs.kv_bytes_per_pos,
-                              num_attn_layers=self.costs.num_attn_layers)
+                              num_attn_layers=self.costs.num_attn_layers,
+                              fingerprint=model_fingerprint(self.cfg),
+                              profile_grid=dict(
+                                  token_counts=list(token_counts),
+                                  kv_positions=list(kv_positions),
+                                  transfer_sizes=list(transfer_sizes)))

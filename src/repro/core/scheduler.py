@@ -46,6 +46,10 @@ class Decision:
     sub_batch_1: Optional[List[Any]] = None
     sub_batch_2: Optional[List[Any]] = None
     reason: str = ""
+    # model-predicted critical-path time of this iteration (seconds);
+    # the engine compares it against the measured wall time to drive
+    # the OnlineCalibrator and the EngineStats accuracy metric
+    predicted_time: float = 0.0
 
 
 def _progress(req: Any) -> int:
@@ -74,35 +78,65 @@ class ApexScheduler:
         decode_gpu = list(decode_gpu)
         decode_cpu = list(decode_cpu)
 
-        # Rule 1 fallout: nothing designated for the host => GPU-only.
-        if not decode_cpu:
-            return Decision(StrategyKind.GPU_ONLY, prefill, decode_gpu, [],
-                            reason="no host-offloaded requests")
-
         batch = max(len(decode_gpu), 1)
         t = self.perf_model.timings(batch, mean_context,
                                     prefill_tokens=prefill_tokens)
+        mixed = bool(prefill) and t.t_glinear_pref > 0.0
+
+        # Rule 1 fallout: nothing designated for the host => GPU-only.
+        if not decode_cpu:
+            return Decision(StrategyKind.GPU_ONLY, prefill, decode_gpu, [],
+                            reason="no host-offloaded requests",
+                            predicted_time=self._aligned_time(t, mixed))
+
+        # §4.2 admission threshold: handle too-small cohorts GPU-aligned
+        # (deferred synchronization; host rows never stall the device)
+        # instead of evaluating the pipeline inequalities.
+        if analytical.host_cohort_below_min_ratio(
+                len(decode_cpu), len(decode_gpu), self.host_min_ratio):
+            return Decision(
+                StrategyKind.ASYNC_OVERLAP, prefill, decode_gpu, decode_cpu,
+                reason=f"host cohort {len(decode_cpu)} < host_min_ratio "
+                       f"{self.host_min_ratio:g} x batch {batch}",
+                predicted_time=self._aligned_time(t, mixed))
 
         if not prefill:
             # Rule 2 — decode-only: Inequality (5).
             if analytical.pipelining_beneficial_decode_only(t):
                 return self._pipeline_decision(prefill, decode_gpu,
-                                               decode_cpu, t,
+                                               decode_cpu, t, mixed,
                                                reason="Ineq(5) holds")
             return Decision(StrategyKind.ASYNC_OVERLAP, prefill, decode_gpu,
                             decode_cpu,
                             reason=f"Ineq(6): N_G/N_C={t.n_g / t.n_c:.1f} >= "
-                                   f"{analytical.ineq6_threshold(t):.1f}")
+                                   f"{analytical.ineq6_threshold(t):.1f}",
+                            predicted_time=self._aligned_time(t, mixed))
 
         # Rule 3 — mixed: widened host window.
         if analytical.pipelining_beneficial_mixed(t):
             return self._pipeline_decision(prefill, decode_gpu, decode_cpu, t,
-                                           reason="mixed Ineq holds")
+                                           mixed, reason="mixed Ineq holds")
         return Decision(StrategyKind.ASYNC_OVERLAP, prefill, decode_gpu,
-                        decode_cpu, reason="mixed Ineq fails")
+                        decode_cpu, reason="mixed Ineq fails",
+                        predicted_time=self._aligned_time(t, mixed))
+
+    # --- predicted iteration times (Eqs. 1/2 + mixed variants) ----------
+    @staticmethod
+    def _aligned_time(t: Timings, mixed: bool) -> float:
+        """GPU-aligned iteration (GPU_ONLY / ASYNC_OVERLAP): Eq. (1)."""
+        if mixed:
+            return t.t_glinear_pref + t.t_gatt_pref
+        return analytical.t_gpu_only(t)
+
+    @staticmethod
+    def _pipeline_time(t: Timings, mixed: bool) -> float:
+        """Asymmetric-pipelining cycle: Eq. (2) / the rule-3 window."""
+        if mixed:
+            return t.t_glinear_pref + t.t_glinear + t.t_gatt_pref
+        return analytical.t_overlap(t)
 
     def _pipeline_decision(self, prefill, decode_gpu, decode_cpu,
-                           t: Timings, reason: str) -> Decision:
+                           t: Timings, mixed: bool, reason: str) -> Decision:
         # Rule 4 — partially processed offloaded requests go first into
         # the CPU-only sub-batch.
         cpu_sorted = sorted(decode_cpu, key=_progress, reverse=True)
@@ -111,7 +145,8 @@ class ApexScheduler:
         sb1 = prefill + decode_gpu + overflow
         return Decision(StrategyKind.ASYM_PIPELINE, prefill, decode_gpu,
                         decode_cpu, sub_batch_1=sb1, sub_batch_2=sb2,
-                        reason=reason)
+                        reason=reason,
+                        predicted_time=self._pipeline_time(t, mixed))
 
 
 @dataclasses.dataclass

@@ -16,6 +16,7 @@ device-resident run would (tests/test_overlap.py enforces this).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -39,7 +40,15 @@ def main() -> None:
     ap.add_argument("--host-slots", type=int, default=8)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--platform", default="a10",
-                    help="analytic calibration feeding Algorithm 1")
+                    help="platform backing the analytic perf-model specs")
+    ap.add_argument("--perf-model", default="measured",
+                    help="perf-model spec feeding Algorithm 1: analytic | "
+                         "analytic:<platform> | measured | file:<path> "
+                         "(default: measured — profile the real backends "
+                         "at startup)")
+    ap.add_argument("--profile-cache", default=None,
+                    help="JSON path for the measured profile; loaded if "
+                         "present, written after profiling otherwise")
     ap.add_argument("--workload", default=None,
                     choices=sorted(WORKLOADS) + ["synthetic"],
                     help="paper trace driving request generation "
@@ -56,7 +65,8 @@ def main() -> None:
     scfg = ServerConfig(
         device_slots=args.device_slots, host_slots=args.host_slots,
         cache_len=args.cache_len, enable_offload=not args.no_offload,
-        platform=args.platform,
+        platform=args.platform, perf_model=args.perf_model,
+        profile_cache=args.profile_cache,
         workload=None if args.workload in (None, "synthetic")
         else args.workload,
         num_requests=args.requests, arrival_rate=args.arrival_rate,
@@ -64,8 +74,13 @@ def main() -> None:
     print(f"serving {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
           f"device_slots={scfg.device_slots} host_slots={scfg.host_slots} "
           f"offload={scfg.enable_offload} "
-          f"workload={scfg.workload or 'synthetic'}")
+          f"workload={scfg.workload or 'synthetic'} "
+          f"perf_model={scfg.perf_model}")
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if scfg.perf_model == "measured" and not (
+            scfg.profile_cache and os.path.exists(scfg.profile_cache)):
+        print("profiling backends at startup (use --profile-cache to "
+              "reuse across runs, or --perf-model analytic to skip)...")
 
     t0 = time.time()
     with InferenceServer(cfg, params, scfg) as server:
@@ -94,6 +109,12 @@ def main() -> None:
     print(f"tokens: device={stats.device_tokens} host={stats.host_tokens} "
           f"-> {(stats.device_tokens + stats.host_tokens) / wall:.1f} tok/s")
     print(f"strategy decisions: {stats.strategy_counts}")
+    if stats.prediction_error is not None:
+        print(f"scheduling accuracy ({stats.perf_model_spec}): predicted "
+              f"{stats.predicted_time:.2f}s vs observed "
+              f"{stats.observed_time:.2f}s "
+              f"(err={100 * stats.prediction_error:.0f}%, "
+              f"ewma={100 * (stats.step_error_ewma or 0):.0f}%)")
     if lats:
         print(f"avg per-token latency: {np.mean(lats) * 1e3:.1f} ms; "
               f"avg TTFT: {np.mean(ttfts) * 1e3:.1f} ms")

@@ -52,6 +52,17 @@ class ServerConfig:
     temperature: float = 0.0
     enable_offload: bool = True
     # --- Algorithm-1 scheduler ------------------------------------------
+    # perf-model spec (repro.core.perf_model.PerfModelProvider):
+    # "analytic" | "analytic:<platform>" | "measured" | "file:<path>".
+    # "measured" profiles the real backends once at server startup
+    # (cached at profile_cache when set) — the profiling-informed mode
+    # for real deployments; "analytic" keeps the platform calibration
+    # (instant startup, the simulation/default mode).  Either way the
+    # engine wraps the model in an OnlineCalibrator refined from
+    # observed iteration timings.
+    perf_model: str = "analytic"
+    profile_cache: Optional[str] = None
+    profile_grid: Optional[dict] = None     # override startup profile points
     platform: str = "a10"            # analytic perf-model calibration
     host_min_ratio: float = 0.0      # §4.2 admission threshold
     max_pipeline_sub_batch: int = 256
@@ -128,6 +139,15 @@ class RequestHandle:
         return self.request.phase == Phase.FINISHED
 
     @property
+    def failed(self) -> bool:
+        """True when the request was rejected (submit or admission)."""
+        return self.request.failed
+
+    @property
+    def error(self) -> Optional[str]:
+        return self.request.error
+
+    @property
     def output(self) -> List[int]:
         return self.request.output
 
@@ -190,12 +210,18 @@ class InferenceServer:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {request.max_new_tokens} "
                 f"(the prefill itself emits the first token)")
-        if request.prompt_len + 2 > self.config.cache_len:
-            # room for the prompt plus at least one generated token;
-            # longer outputs are clamped to the cache (max-model-len)
-            raise ValueError(
-                f"prompt of {request.prompt_len} tokens does not fit "
-                f"cache_len={self.config.cache_len} with room to generate")
+        reason = Engine.prompt_reject_reason(request.prompt_len,
+                                             self.config.cache_len)
+        if reason is not None:
+            # no room for the prompt plus at least one generated token:
+            # reject as a failed handle (Phase.FINISHED, error set)
+            # rather than raising, so open-loop trace replay survives
+            # one oversized request; longer *outputs* are merely
+            # clamped to the cache (max-model-len) at admission
+            if request.arrival_time is None:
+                request.arrival_time = time.perf_counter()
+            Engine.reject(request, reason)
+            return RequestHandle(self, request)
         if len(self.engine.queue) >= self.config.max_queue:
             raise RuntimeError(f"queue full ({self.config.max_queue})")
         self.engine.submit(request)

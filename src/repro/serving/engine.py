@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.overlap_engine import Cohort, HostExecutor, OverlapController
-from repro.core.perf_model import analytic_model
+from repro.core.perf_model import OnlineCalibrator, resolve_perf_model
 from repro.core.scheduler import (AdmissionController, ApexScheduler,
                                   Decision, StrategyKind)
 from repro.models import (ModelParams, decode_step, init_decode_state, prefill)
@@ -63,8 +63,16 @@ class EngineConfig:
     # offload policy: fraction of device KV that must be claimed before
     # requests go to the host tier (GPU-first rule)
     enable_offload: bool = True
-    # Algorithm-1 scheduling: analytic platform calibration feeding the
-    # performance model, and the §4.2 knobs passed to ApexScheduler.
+    # Algorithm-1 scheduling: the perf-model spec resolved by
+    # PerfModelProvider ("analytic" | "analytic:<platform>" |
+    # "measured" | "file:<path>"), the platform backing the analytic
+    # specs, and the §4.2 knobs passed to ApexScheduler.  "measured"
+    # runs the OfflineProfiler once at engine startup (loading/saving
+    # profile_cache when set); the resolved model is wrapped in an
+    # OnlineCalibrator that refines it from observed iteration timings.
+    perf_model: str = "analytic"
+    profile_cache: Optional[str] = None
+    profile_grid: Optional[Dict[str, tuple]] = None
     platform: str = "a10"
     host_min_ratio: float = 0.0
     max_pipeline_sub_batch: int = 256
@@ -87,6 +95,13 @@ class EngineStats:
     # per-iteration Algorithm-1 outcomes: StrategyKind.value -> count
     strategy_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     last_decision: Optional[Decision] = None
+    # scheduling accuracy: per-iteration model-predicted step times vs
+    # the measured wall time of those same (decided) iterations, plus
+    # the OnlineCalibrator's EWMA of the per-step relative error
+    perf_model_spec: str = ""
+    predicted_time: float = 0.0
+    observed_time: float = 0.0
+    step_error_ewma: Optional[float] = None
 
     def record_decision(self, decision: Decision) -> None:
         key = decision.strategy.value
@@ -97,6 +112,18 @@ class EngineStats:
     def throughput(self) -> float:
         return (self.device_tokens + self.host_tokens) / max(self.wall_time,
                                                              1e-9)
+
+    @property
+    def prediction_error(self) -> Optional[float]:
+        """Aggregate |predicted - observed| / observed over decided
+        iterations (None until the first decision lands).  Includes
+        one-off jit-compile iterations by construction — it is the true
+        total gap; ``step_error_ewma`` is the outlier-robust view of
+        current scheduling accuracy."""
+        if self.observed_time <= 0.0:
+            return None
+        return abs(self.predicted_time - self.observed_time) \
+            / self.observed_time
 
 
 class Engine:
@@ -117,9 +144,16 @@ class Engine:
         self.host_requests: Dict[int, Request] = {}
         self.stats = EngineStats()
         self.scheduler = scheduler
+        self._calibrator: Optional[OnlineCalibrator] = None
         if self.scheduler is None and self.e.use_scheduler:
+            base = resolve_perf_model(
+                self.e.perf_model, cfg, platform=self.e.platform,
+                profile_cache=self.e.profile_cache,
+                profile_grid=self.e.profile_grid)
+            self._calibrator = OnlineCalibrator(base)
+            self.stats.perf_model_spec = self.e.perf_model
             self.scheduler = ApexScheduler(
-                analytic_model(self.e.platform, cfg),
+                self._calibrator,
                 host_min_ratio=self.e.host_min_ratio,
                 max_pipeline_sub_batch=self.e.max_pipeline_sub_batch)
         device_budget = (self.e.device_kv_budget_tokens
@@ -146,6 +180,8 @@ class Engine:
             self._cohort: Optional[Cohort] = None
             self._host_slot_owner: Dict[int, int] = {}   # slot -> request_id
             self._pending_job: Optional[int] = None
+            self._pending_host_pred = 0.0   # predicted time of pending job
+            self._host_busy_seen = 0.0      # executor busy_time watermark
             self._job_ids = iter(range(1, 1 << 30))
             self._decode_overlap_fn = jax.jit(
                 lambda p, tok, st, host: decode_step(p, cfg, tok, st, host))
@@ -156,6 +192,25 @@ class Engine:
             request.arrival_time = time.perf_counter()
         request.phase = Phase.QUEUED
         self.queue.append(request)
+
+    @staticmethod
+    def reject(request: Request, reason: str) -> None:
+        """Fail a request without admitting it: Phase.FINISHED with
+        ``error`` set (surfaced as RequestHandle.failed)."""
+        request.error = reason
+        request.phase = Phase.FINISHED
+        request.finish_time = time.perf_counter()
+
+    @staticmethod
+    def prompt_reject_reason(prompt_len: int,
+                             cache_len: int) -> Optional[str]:
+        """The single oversized-prompt predicate shared by API submit
+        and engine admission: None when the prompt leaves room to
+        generate at least one token, else the rejection reason."""
+        if prompt_len < cache_len - 1:
+            return None
+        return (f"prompt of {prompt_len} tokens does not fit "
+                f"cache_len={cache_len} with room to generate")
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slots):
@@ -254,6 +309,14 @@ class Engine:
         admitted: List[Request] = []
         while self.queue:
             req = self.queue[0]
+            reason = self.prompt_reject_reason(req.prompt_len,
+                                               self.e.cache_len)
+            if reason is not None:
+                # no room to generate even one token: rejecting here
+                # beats silently admitting degenerate work (a clamp
+                # would yield max_new_tokens <= 0 yet claim a slot)
+                self.reject(self.queue.pop(0), reason)
+                continue
             if req.prompt_len + req.max_new_tokens >= self.e.cache_len:
                 req.max_new_tokens = self.e.cache_len - req.prompt_len - 1
             need = req.kv_demand()
@@ -283,8 +346,12 @@ class Engine:
         c = self._cohort
         if c is not None and c.attn_ptr != -1:
             return c
-        slot_rids = [self._host_slot_owner.get(i, -1)
-                     for i in range(self.e.host_slots)]
+        # done requests (e.g. clamped to one token, satisfied by the
+        # prefill) retire this step — never enroll them in a journey
+        slot_rids = [rid if rid >= 0 and not self.host_requests[rid].done
+                     else -1
+                     for rid in (self._host_slot_owner.get(i, -1)
+                                 for i in range(self.e.host_slots))]
         if all(r < 0 for r in slot_rids):
             self._cohort = None
             return None
@@ -320,7 +387,9 @@ class Engine:
         new_ids = {r.request_id for r in admitted}
         decode_gpu = [r for r in (self.slots[i] for i in active_rows)
                       if r.request_id not in new_ids]
-        decode_cpu = list(self.host_requests.values())
+        # mirror the dispatch: done host requests retire this step and
+        # never join a cohort, so the decision must not see them either
+        decode_cpu = [r for r in self.host_requests.values() if not r.done]
         if not (admitted or decode_gpu or decode_cpu):
             return None                      # idle iteration: nothing to decide
         contexts = [r.total_len for r in decode_gpu + decode_cpu]
@@ -336,7 +405,12 @@ class Engine:
     def step(self) -> None:
         t0 = time.perf_counter()
         admitted = self._admit()
-        active_rows = [i for i, r in enumerate(self.slots) if r is not None]
+        # rows whose request already reached max_new_tokens (possible
+        # straight out of prefill when the clamp left room for exactly
+        # one token) must not ride this iteration's decode batch — they
+        # retire at the end of the step without over-generating
+        active_rows = [i for i, r in enumerate(self.slots)
+                       if r is not None and not r.done]
         decision = self._schedule(admitted, active_rows)
         tokens = np.zeros((self.e.device_slots,), np.int32)
         for i in active_rows:
@@ -357,7 +431,16 @@ class Engine:
         elif active_rows:
             self._step_device_only(jnp.asarray(tokens), active_rows)
         self.stats.iterations += 1
-        self.stats.wall_time += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.wall_time += dt
+        predicted = getattr(decision, "predicted_time", 0.0) \
+            if decision is not None else 0.0
+        if predicted > 0.0:
+            self.stats.predicted_time += predicted
+            self.stats.observed_time += dt
+            if self._calibrator is not None:
+                self._calibrator.observe_step(predicted, dt)
+                self.stats.step_error_ewma = self._calibrator.step_error_ewma
         self._retire()
 
     def _commit_device(self, logits, active_rows) -> None:
@@ -407,6 +490,14 @@ class Engine:
                 buf[i] = out[j]
             cohort.attn_in = jnp.asarray(buf)
             self._pending_job = None
+            # host-side calibration: the executor's busy_time advanced
+            # by exactly this job's compute (single worker, in-order)
+            if self._calibrator is not None and self._pending_host_pred > 0:
+                observed = self._executor.busy_time - self._host_busy_seen
+                self._calibrator.observe_host(self._pending_host_pred,
+                                              observed)
+            self._host_busy_seen = self._executor.busy_time
+            self._pending_host_pred = 0.0
 
         io = ctl.host_io(cohort)
         emit_layer = ctl.emit_layer(cohort)
@@ -425,6 +516,10 @@ class Engine:
                 np.asarray(qkv.v, np.float32)[idx],
                 cohort.positions[idx])
             self._pending_job = job
+            if self._calibrator is not None:
+                mean_pos = float(np.mean(cohort.positions[idx] + 1))
+                self._pending_host_pred = self._calibrator.t_catt(
+                    len(valid), mean_pos, layers=1)
         if completes:
             row_idx = [self.e.device_slots + i for i in valid]
             toks = np.asarray(sample(logits[jnp.asarray(row_idx)],

@@ -43,6 +43,14 @@ class Request:
     layer_progress: int = 0             # APEX rule-4 partial progress
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # rejection reason: set when the request is refused at submit or
+    # admission (e.g. prompt too long for the KV cache); the request
+    # finishes in Phase.FINISHED with failed=True and no output
+    error: Optional[str] = None
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
 
     @property
     def prompt_len(self) -> int:
@@ -58,7 +66,10 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.tokens_generated >= self.max_new_tokens
+        # a rejected request is finished work too — without the failed
+        # clause a `while not req.done: engine.step()` loop would spin
+        # forever on a request that was refused at admission
+        return self.failed or self.tokens_generated >= self.max_new_tokens
 
     def kv_demand(self) -> int:
         """Tokens of KV this request will need in total."""

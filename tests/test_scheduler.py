@@ -37,6 +37,36 @@ def test_mixed_branch_widens_window(sched):
     assert d.sub_batch_2 is not None
 
 
+def test_host_min_ratio_below_threshold_gpu_aligned():
+    """§4.2 admission threshold: a host cohort smaller than
+    ratio * device_batch falls back to GPU-aligned handling (deferred
+    sync) even when the pipeline inequality would hold."""
+    sched = ApexScheduler(analytic_model("a10", get_config("llama3.1-8b")),
+                          host_min_ratio=1.0)
+    # identical inputs pipeline in test_mixed_branch_widens_window;
+    # with the threshold (32 host < 1.0 * 64 device) they must not
+    d = sched.schedule(["p"], list(range(64)), list(range(32)),
+                       mean_context=1024, prefill_tokens=4096)
+    assert d.strategy == StrategyKind.ASYNC_OVERLAP
+    assert "host_min_ratio" in d.reason
+    assert d.predicted_time > 0
+
+
+def test_host_min_ratio_above_threshold_still_pipelines():
+    sched = ApexScheduler(analytic_model("a10", get_config("llama3.1-8b")),
+                          host_min_ratio=0.25)
+    # 32 host >= 0.25 * 64 device: threshold passes, Ineq applies as-is
+    d = sched.schedule(["p"], list(range(64)), list(range(32)),
+                       mean_context=1024, prefill_tokens=4096)
+    assert d.strategy == StrategyKind.ASYM_PIPELINE
+    # decode-only path honors the threshold too
+    d2 = ApexScheduler(analytic_model("a10", get_config("llama3.1-8b")),
+                       host_min_ratio=8.0).schedule(
+        [], list(range(64)), list(range(32)), mean_context=1024)
+    assert d2.strategy == StrategyKind.ASYNC_OVERLAP
+    assert "host_min_ratio" in d2.reason
+
+
 def test_rule4_partial_progress_prioritized(sched):
     class R:
         def __init__(self, p):

@@ -87,6 +87,43 @@ def test_workload_requests_capped_to_cache():
     assert all(r.arrival_time is None for r in reqs)   # closed loop
 
 
+def test_oversized_prompt_rejected_at_submit(served):
+    """A prompt with no room to generate even one token must fail as
+    Phase.FINISHED with error set — not claim a slot and prefill."""
+    cfg, params = served
+    with _server(cfg, params) as server:           # cache_len=64
+        h = server.submit(list(range(63)), max_new_tokens=4)
+        assert h.failed and h.done
+        assert h.phase == Phase.FINISHED
+        assert "cache_len" in h.error
+        assert list(h.tokens()) == []              # stream ends cleanly
+        assert server.pending == 0 and server.active == 0
+        # a fitting request right at the boundary still works
+        ok = server.submit(list(range(62)), max_new_tokens=4)
+        assert not ok.failed
+        assert len(ok.result()) == 1               # clamped to the cache
+        assert ok.request.max_new_tokens == 1
+
+
+def test_oversized_prompt_rejected_at_engine_admission(served):
+    """Engine-level submission (no InferenceServer validation) rejects
+    at admission instead of silently admitting degenerate work."""
+    from repro.serving import Engine, EngineConfig, Request
+    cfg, params = served
+    eng = Engine(cfg, params, EngineConfig(device_slots=2, host_slots=2,
+                                           cache_len=32))
+    bad = Request(prompt=list(range(31)), max_new_tokens=8)
+    good = Request(prompt=list(range(4)), max_new_tokens=3)
+    stats = eng.run([bad, good])
+    eng.shutdown()
+    assert bad.failed and bad.phase == Phase.FINISHED
+    assert bad.output == [] and bad.finish_time is not None
+    assert not good.failed and good.done
+    assert all(r is None for r in eng.slots)       # no slot leaked
+    assert eng.admission.device_used == 0 and eng.admission.host_used == 0
+    assert stats.device_tokens + stats.host_tokens == len(good.output) - 1
+
+
 def test_queue_full_raises(served):
     cfg, params = served
     with _server(cfg, params, max_queue=1) as server:
