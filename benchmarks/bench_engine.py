@@ -1,0 +1,194 @@
+"""Decode hot-path benchmark: the engine perf numbers each PR is held to.
+
+Measures, on the container's CPU backend in the host-offload config
+(the APEX regime: more requests than device slots, so the host tier
+carries cohorts under ASYNC_OVERLAP):
+
+  * ``decode_iters_per_s``      — engine iterations per second of a
+    post-warmup serving run (jit compiles excluded by warmup).
+  * ``tokens_per_s``            — device+host tokens over the same run.
+  * ``host_overlap_efficiency`` — host-executor busy time / engine wall
+    time of the timed run.  Higher = the host tier really computes in
+    parallel instead of idling between blocking handoffs.
+  * ``prefill_compilations``    — jit traces taken by the bucketed
+    prefill over a workload with many distinct prompt lengths
+    (pre-bucketing engines report -1: the eager path never compiles).
+  * ``admission_latency_ms``    — mean time-to-first-token of that
+    same multi-length workload (admission + prefill cost per request).
+
+Emits ``BENCH_engine.json`` at the repo root (CI uploads it as an
+artifact so the perf trajectory accumulates per PR).  The JSON carries
+``baseline``: the same scenario measured on the pre-parallel-hot-path
+engine (commit d66a15b) on this container, so ``speedup_vs_baseline``
+is directly the PR-over-PR improvement.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] \
+        [--out BENCH_engine.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request, make_synthetic_request
+
+# Pre-PR reference: this same scenario (full mode) measured on the
+# engine before the parallel host runtime / non-blocking handoff /
+# bucketed prefill landed, on the 2-vCPU container CI runs on.
+PRE_PR_BASELINE = {
+    "commit": "d66a15b",
+    "decode_iters_per_s": 10.67,
+    "tokens_per_s": 15.82,
+    "host_overlap_efficiency": 0.051,
+    "admission_latency_ms": 17326.0,
+}
+
+
+def _engine_config(**kw) -> EngineConfig:
+    """Build an EngineConfig from whatever knobs this engine version
+    has (lets the script record baselines on pre-PR checkouts)."""
+    names = {f.name for f in dataclasses.fields(EngineConfig)}
+    return EngineConfig(**{k: v for k, v in kw.items() if k in names})
+
+
+def _fresh(protos):
+    return [Request(prompt=list(r.prompt), max_new_tokens=r.max_new_tokens)
+            for r in protos]
+
+
+def bench_decode(cfg, params, *, smoke: bool, host_workers: int) -> dict:
+    """Offload-heavy serving run; warmup run first so jit compiles and
+    the profiler never land in the timed window."""
+    n_req = 6 if smoke else 10
+    out_len = 8 if smoke else 32
+    ecfg = _engine_config(device_slots=2, host_slots=n_req, cache_len=128,
+                          page_size=32, host_pool_pages=512,
+                          perf_model="analytic", host_workers=host_workers)
+    eng = Engine(cfg, params, ecfg)
+    rng = np.random.default_rng(0)
+    protos = [make_synthetic_request(rng, prompt_len=12, output_len=out_len,
+                                     vocab=cfg.vocab_size)
+              for _ in range(n_req)]
+    try:
+        eng.run(_fresh(protos))                      # warmup: compiles
+        it0, wall0 = eng.stats.iterations, eng.stats.wall_time
+        host0 = eng._executor.busy_time if eng._executor else 0.0
+        dev0, h0 = eng.stats.device_tokens, eng.stats.host_tokens
+        ov0 = eng.stats.strategy_counts.get("async_overlap", 0)
+        eng.run(_fresh(protos))                      # timed
+        iters = eng.stats.iterations - it0
+        wall = eng.stats.wall_time - wall0
+        host_busy = (eng._executor.busy_time if eng._executor else 0.0) - host0
+        toks = (eng.stats.device_tokens + eng.stats.host_tokens) - dev0 - h0
+        overlap = eng.stats.strategy_counts.get("async_overlap", 0) - ov0
+    finally:
+        eng.shutdown()
+    return {
+        "decode_iters_per_s": iters / max(wall, 1e-9),
+        "tokens_per_s": toks / max(wall, 1e-9),
+        "host_overlap_efficiency": host_busy / max(wall, 1e-9),
+        "iterations": iters,
+        "host_tokens": eng.stats.host_tokens - h0,
+        "async_overlap_iterations": overlap,
+    }
+
+
+def bench_prefill(cfg, params, *, smoke: bool, host_workers: int) -> dict:
+    """Admission/prefill over many distinct prompt lengths: compile
+    count (bucketing bounds it) and mean TTFT."""
+    n_req = 8 if smoke else 16
+    lengths = list(range(3, 3 + n_req))              # all distinct
+    ecfg = _engine_config(device_slots=n_req + 1, host_slots=0,
+                          enable_offload=False, cache_len=128,
+                          perf_model="analytic", host_workers=host_workers)
+    eng = Engine(cfg, params, ecfg)
+    rng = np.random.default_rng(1)
+    reqs = [Request(prompt=list(rng.integers(0, cfg.vocab_size, n)),
+                    max_new_tokens=2) for n in lengths]
+    try:
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        wall = time.perf_counter() - t0
+    finally:
+        eng.shutdown()
+    ttfts = [r.first_token_time - r.arrival_time for r in reqs
+             if r.first_token_time is not None]
+    return {
+        "prefill_compilations": getattr(eng.stats, "prefill_compilations",
+                                        -1),
+        "distinct_prompt_lengths": n_req,
+        "admission_latency_ms": 1e3 * float(np.mean(ttfts)) if ttfts else None,
+        "prefill_wall_s": wall,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small/fast variant for CI (same metrics)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_engine.json at "
+                         "the repo root)")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--host-workers", type=int, default=0,
+                    help="HostExecutor worker threads (0 = auto)")
+    ap.add_argument("--record-baseline", action="store_true",
+                    help="print the metrics dict for embedding as a "
+                         "pre-change baseline instead of writing JSON")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(layers=4, d_model=128, vocab=256)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    decode = bench_decode(cfg, params, smoke=args.smoke,
+                          host_workers=args.host_workers)
+    prefill = bench_prefill(cfg, params, smoke=args.smoke,
+                            host_workers=args.host_workers)
+
+    payload = {
+        "bench": "engine_hot_path",
+        "mode": "smoke" if args.smoke else "full",
+        "arch": cfg.name,
+        "backend": jax.default_backend(),
+        "host_workers": args.host_workers,
+        **decode,
+        **prefill,
+        "baseline": PRE_PR_BASELINE,
+    }
+    if not args.smoke and PRE_PR_BASELINE["decode_iters_per_s"]:
+        payload["speedup_vs_baseline"] = (
+            decode["decode_iters_per_s"]
+            / PRE_PR_BASELINE["decode_iters_per_s"])
+    if args.record_baseline:
+        print(json.dumps({k: decode[k] for k in
+                          ("decode_iters_per_s", "tokens_per_s",
+                           "host_overlap_efficiency")}
+                         | {"admission_latency_ms":
+                            prefill["admission_latency_ms"]}, indent=1))
+        return
+    out = args.out or os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_engine.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+    for k in ("decode_iters_per_s", "tokens_per_s",
+              "host_overlap_efficiency", "prefill_compilations",
+              "admission_latency_ms"):
+        print(f"  {k}: {payload[k]}")
+    if "speedup_vs_baseline" in payload:
+        print(f"  speedup_vs_baseline: "
+              f"{payload['speedup_vs_baseline']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

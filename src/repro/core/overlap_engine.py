@@ -11,11 +11,14 @@ Two pieces:
     in hybrids) commit on-device in the same window — the host stalls
     only attention.  A token completes every (num_attn_layers + 1)
     iterations.
-  * ``HostExecutor`` — the host attention thread (the paper's
-    Pybind11/GIL-release runtime, rendered as a Python worker whose
-    numpy/BLAS and jax-cpu kernels release the GIL natively).  It owns
-    the host paged KV pool, appends each emitted K/V, computes paged
-    attention, and double-buffers results for the next iteration.
+  * ``HostExecutor`` — the parallel host attention runtime (the
+    paper's Pybind11/GIL-release runtime, rendered as a dispatcher
+    thread plus a worker pool whose numpy/BLAS kernels release the GIL
+    natively).  It owns the host paged KV pool, performs the
+    device→host QKV transfer *inside* the worker (non-blocking
+    handoff), appends each emitted K/V with one vectorized write,
+    shards a job's cohort rows across workers, and buffers results for
+    the next iteration.
 
 ``scratch/validate_overlap.py``-style equivalence (host-offloaded rows
 produce bit-identical tokens to device rows) is enforced in
@@ -24,8 +27,10 @@ tests/test_overlap.py.
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -135,32 +140,61 @@ class _Job:
     job_id: int
     layer: int                       # absolute layer index of the QKV
     request_ids: List[int]
-    q: np.ndarray                    # (Bc, H, D)
-    k: np.ndarray                    # (Bc, KV, D)
-    v: np.ndarray
-    positions: np.ndarray            # (Bc,) token positions
+    q: Any                           # (Bc, H, D)  — jax or numpy; the
+    k: Any                           # (Bc, KV, D)   device→host transfer
+    v: Any                           #               happens in the worker
+    positions: np.ndarray            # (n,) token positions of valid rows
+    rows: Optional[np.ndarray]       # (n,) valid row indices into q/k/v
+
+
+def _as_f32(a) -> np.ndarray:
+    """Materialize on host as float32 — a no-op (no copy) when the
+    input already is a float32 numpy array; for jax arrays this is the
+    device→host transfer and belongs on the worker thread."""
+    if isinstance(a, np.ndarray) and a.dtype == np.float32:
+        return a
+    return np.asarray(a, np.float32)
 
 
 class HostExecutor:
-    """Background host-attention worker owning the paged KV pool.
+    """Parallel host-attention runtime owning the paged KV pool.
 
-    ``submit`` is non-blocking: the engine dispatches the next device
-    step while the worker computes — the asynchronous overlap.
+    ``submit`` is non-blocking and accepts device (jax) arrays: the
+    device→host transfer runs inside the worker, overlapped with the
+    engine's *next* device dispatch — the engine never syncs on QKV.
+    A job's cohort rows are sharded across ``workers`` threads
+    (numpy/BLAS releases the GIL, so shards genuinely run in parallel)
+    into disjoint views of a preallocated per-job output buffer.
     ``result`` blocks only if the host is genuinely the straggler, in
     which case the engine's re-check semantics (paper §3.4 end) apply.
+
+    Host-busy accounting is split so the calibrator's ``t_catt`` stays
+    honest: ``transfer_time`` (device→host materialization) vs
+    ``compute_time`` (KV append + paged attention); ``busy_time`` is
+    their sum.  Callers may hand consumed result buffers back through
+    ``recycle`` — unreturned buffers are simply allocated per job.
     """
 
     def __init__(self, cfg: ModelConfig, pool: PagedKVPool,
-                 *, synchronous: bool = False) -> None:
+                 *, synchronous: bool = False, workers: int = 0) -> None:
         self.cfg = cfg
         self.pool = pool
         self.page_size = pool.page_size
         self.synchronous = synchronous
+        if workers <= 0:     # leave a core for the device dispatch thread
+            workers = max(1, (os.cpu_count() or 2) - 1)
+        self.workers = workers
+        self._shards: Optional[ThreadPoolExecutor] = (
+            ThreadPoolExecutor(max_workers=workers,
+                               thread_name_prefix="host-attn")
+            if workers > 1 else None)
         self._results: Dict[int, np.ndarray] = {}
         self._lock = threading.Lock()
         self._done = threading.Condition(self._lock)
         self._queue: "queue.Queue[Optional[_Job]]" = queue.Queue()
-        self._busy_time = 0.0
+        self._free_bufs: Dict[tuple, List[np.ndarray]] = {}
+        self._transfer_time = 0.0
+        self._compute_time = 0.0
         self._worker: Optional[threading.Thread] = None
         if not synchronous:
             self._worker = threading.Thread(target=self._run, daemon=True)
@@ -173,14 +207,30 @@ class HostExecutor:
 
     # --- API -------------------------------------------------------------------
     def submit(self, job_id: int, layer: int, request_ids: Sequence[int],
-               q, k, v, positions) -> None:
-        job = _Job(job_id, layer, list(request_ids),
-                   np.asarray(q, np.float32), np.asarray(k, np.float32),
-                   np.asarray(v, np.float32), np.asarray(positions))
+               q, k, v, positions, *, rows=None) -> None:
+        """Enqueue one layer's host attention for a cohort.
+
+        q/k/v may be jax device arrays covering the *full* cohort;
+        ``rows`` selects the valid slots after the worker materializes
+        them on host.  positions: (len(request_ids),) — already
+        restricted to valid rows.
+        """
+        job = _Job(job_id, layer, list(request_ids), q, k, v,
+                   np.asarray(positions),
+                   None if rows is None else np.asarray(rows, np.int64))
         if self.synchronous:
             self._execute(job)
         else:
             self._queue.put(job)
+
+    @staticmethod
+    def _unwrap(job_id: int, out):
+        # a failed job publishes its exception as the result so the
+        # engine fails loudly at the next poll instead of treating the
+        # job as forever-late (silent ride-along livelock)
+        if isinstance(out, BaseException):
+            raise RuntimeError(f"host job {job_id} failed") from out
+        return out
 
     def result(self, job_id: int, timeout: Optional[float] = None
                ) -> np.ndarray:
@@ -188,25 +238,31 @@ class HostExecutor:
             while job_id not in self._results:
                 if not self._done.wait(timeout):
                     raise TimeoutError(f"host job {job_id} not ready")
-            return self._results.pop(job_id)
+            return self._unwrap(job_id, self._results.pop(job_id))
 
     def poll(self, job_id: int) -> Optional[np.ndarray]:
         """Non-blocking readiness check (the paper's GPU re-check)."""
         with self._lock:
-            return self._results.pop(job_id, None)
+            return self._unwrap(job_id, self._results.pop(job_id, None))
+
+    def recycle(self, buf: np.ndarray) -> None:
+        """Return a consumed result buffer for reuse by later jobs."""
+        with self._lock:
+            self._free_bufs.setdefault(buf.shape, []).append(buf)
 
     def migrate_prompt(self, request_id: int, per_layer_kv) -> None:
         """Move a prefilled request's KV to the host pool.
 
         per_layer_kv: list over attention layers of (k, v) arrays of
-        shape (T, KV, D).
+        shape (T, KV, D).  The request's chains may already be
+        reserved (the engine allocates at placement time).
         """
         t = per_layer_kv[0][0].shape[0]
-        self.pool.allocate(request_id, t)
+        if request_id not in self.pool.lengths:
+            self.pool.allocate(request_id, t)
         n_layers = len(per_layer_kv)
         for li, (k, v) in enumerate(per_layer_kv):
-            self.pool.write_prompt(request_id, li, np.asarray(k, np.float32),
-                                   np.asarray(v, np.float32),
+            self.pool.write_prompt(request_id, li, _as_f32(k), _as_f32(v),
                                    advance=(li == n_layers - 1))
 
     def free(self, request_id: int) -> None:
@@ -216,10 +272,22 @@ class HostExecutor:
         if self._worker is not None:
             self._queue.put(None)
             self._worker.join(timeout=5)
+        if self._shards is not None:
+            self._shards.shutdown(wait=False)
 
     @property
     def busy_time(self) -> float:
-        return self._busy_time
+        return self._transfer_time + self._compute_time
+
+    @property
+    def transfer_time(self) -> float:
+        """Seconds spent materializing device QKV on the host."""
+        return self._transfer_time
+
+    @property
+    def compute_time(self) -> float:
+        """Seconds of actual host attention work (append + paged attn)."""
+        return self._compute_time
 
     # --- worker -------------------------------------------------------------
     def _run(self) -> None:
@@ -227,41 +295,68 @@ class HostExecutor:
             job = self._queue.get()
             if job is None:
                 return
-            self._execute(job)
+            try:
+                self._execute(job)
+            except BaseException as e:          # noqa: BLE001 — surfaced
+                # publish the failure as the job's result (see _unwrap)
+                # and keep the dispatcher alive for subsequent jobs
+                with self._done:
+                    self._results[job.job_id] = e
+                    self._done.notify_all()
+
+    def _out_buffer(self, shape: tuple) -> np.ndarray:
+        with self._lock:
+            free = self._free_bufs.get(shape)
+            if free:
+                return free.pop()
+        return np.empty(shape, np.float32)
 
     def _execute(self, job: _Job) -> None:
         import time
         t0 = time.perf_counter()
+        # device→host transfer (no-op for float32 numpy inputs): doing
+        # it here — not at submit — is the non-blocking handoff; the
+        # engine is already dispatching the next device step
+        q, k, v = _as_f32(job.q), _as_f32(job.k), _as_f32(job.v)
+        if job.rows is not None:
+            q, k, v = q[job.rows], k[job.rows], v[job.rows]
+        t1 = time.perf_counter()
         li = self._pool_layer(job.layer)
-        bc = len(job.request_ids)
-        # append the fresh token's K/V for this layer (length advances
-        # only when the token's final layer is written — the shared
-        # counter must reflect *completed* positions)
-        for i, rid in enumerate(job.request_ids):
-            pos = int(job.positions[i])
-            chain = self.pool.page_tables[(rid, li)]
-            page_idx = pos // self.page_size
-            if page_idx >= len(chain):
-                self.pool.extend(rid, pos + 1 - self.pool.lengths[rid])
-                chain = self.pool.page_tables[(rid, li)]
-            page = chain[page_idx]
-            slot = pos % self.page_size
-            self.pool.pages[0, page, slot] = job.k[i]
-            self.pool.pages[1, page, slot] = job.v[i]
+        n = len(job.request_ids)
+        # append the fresh token's K/V for this layer — one vectorized
+        # write for the whole cohort (length advances only when the
+        # token's final layer is written: the shared counter must
+        # reflect *completed* positions)
+        self.pool.append_rows(job.request_ids, li, job.positions, k, v)
 
-        # paged attention over [0, pos] inclusive
-        max_pages = max(len(self.pool.page_tables[(rid, li)])
-                        for rid in job.request_ids)
-        pt = np.zeros((bc, max_pages), np.int32)
-        for i, rid in enumerate(job.request_ids):
-            chain = self.pool.page_tables[(rid, li)]
-            pt[i, :len(chain)] = chain
+        # paged attention over [0, pos] inclusive, rows sharded across
+        # the worker pool into disjoint slices of one output buffer
+        chains = [self.pool.page_tables[(rid, li)]
+                  for rid in job.request_ids]
+        max_pages = max(len(c) for c in chains)
+        pt = np.zeros((n, max_pages), np.int32)
+        for i, c in enumerate(chains):
+            pt[i, :len(c)] = c
         lengths = job.positions.astype(np.int32) + 1
-        out = host_paged_attention_numpy(job.q, self.pool.pages, pt, lengths,
-                                         page_size=self.page_size)
+        out = self._out_buffer(q.shape)
+        if self._shards is None or n < 2:
+            host_paged_attention_numpy(q, self.pool.pages, pt, lengths,
+                                       page_size=self.page_size, out=out)
+        else:
+            bounds = np.linspace(0, n, min(self.workers, n) + 1).astype(int)
+            futs = [
+                self._shards.submit(
+                    host_paged_attention_numpy, q[a:b], self.pool.pages,
+                    pt[a:b], lengths[a:b], page_size=self.page_size,
+                    out=out[a:b])
+                for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+            for f in futs:
+                f.result()
+        t2 = time.perf_counter()
         with self._done:
             self._results[job.job_id] = out
-            self._busy_time += time.perf_counter() - t0
+            self._transfer_time += t1 - t0
+            self._compute_time += t2 - t1
             self._done.notify_all()
 
     def advance_token(self, request_ids: Sequence[int]) -> None:

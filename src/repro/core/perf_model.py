@@ -472,7 +472,14 @@ class OnlineCalibrator:
         self.steps_observed += 1
 
     def observe_host(self, predicted: float, observed: float) -> None:
-        """Feed one host-attention job's predicted vs observed time."""
+        """Feed one host-attention job's predicted vs observed time.
+
+        Callers must pass the job's *compute* time only (KV append +
+        paged attention): the engine's non-blocking handoff performs
+        the device→host QKV transfer inside the executor worker, and
+        folding that share in here would inflate ``t_catt`` — transfer
+        is modeled separately by ``t_transfer``.
+        """
         if predicted <= 0.0 or observed <= 0.0:
             return
         self.host_scale = self._walk(self.host_scale, predicted, observed)

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -74,13 +75,20 @@ def host_paged_attention(q, pages, page_table, lengths, *, page_size: int):
 
 def host_paged_attention_numpy(q: np.ndarray, pages: np.ndarray,
                                page_table: np.ndarray, lengths: np.ndarray,
-                               *, page_size: int) -> np.ndarray:
-    """Blocked numpy implementation (GIL released inside BLAS calls)."""
+                               *, page_size: int,
+                               out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Blocked numpy implementation (GIL released inside BLAS calls).
+
+    ``out`` (B, H, D) float32, written in place when given — lets the
+    threaded executor shard rows of one job across workers into
+    disjoint views of a preallocated per-job buffer.
+    """
     b, h, d = q.shape
     kv = pages.shape[3]
     g = h // kv
     scale = 1.0 / math.sqrt(d)
-    out = np.empty((b, h, d), np.float32)
+    if out is None:
+        out = np.empty((b, h, d), np.float32)
     for i in range(b):
         n = int(lengths[i])
         npages = -(-n // page_size) if n else 0

@@ -55,6 +55,11 @@ def main() -> None:
                          "(default: synthetic fixed-length)")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrivals in req/s (default: closed loop)")
+    ap.add_argument("--host-workers", type=int, default=0,
+                    help="host-attention worker threads per job "
+                         "(0 = auto: cpu_count - 1)")
+    ap.add_argument("--no-bucketed-prefill", action="store_true",
+                    help="disable the bucketed/batched prefill fast path")
     ap.add_argument("--no-offload", action="store_true")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress the per-token stream of request 0")
@@ -65,6 +70,8 @@ def main() -> None:
     scfg = ServerConfig(
         device_slots=args.device_slots, host_slots=args.host_slots,
         cache_len=args.cache_len, enable_offload=not args.no_offload,
+        host_workers=args.host_workers,
+        bucketed_prefill=not args.no_bucketed_prefill,
         platform=args.platform, perf_model=args.perf_model,
         profile_cache=args.profile_cache,
         workload=None if args.workload in (None, "synthetic")

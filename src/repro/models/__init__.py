@@ -2,11 +2,12 @@ from repro.models.config import (BlockKind, FFNKind, MambaConfig, MoEConfig,
                                  ModelConfig)
 from repro.models.model import (ModelParams, abstract_params, decode_step,
                                 forward_train, init_decode_state, init_params,
-                                prefill)
+                                prefill, prefill_bucketed)
 from repro.models.transformer import HostIO, QKVOut
 
 __all__ = [
     "BlockKind", "FFNKind", "MambaConfig", "MoEConfig", "ModelConfig",
     "ModelParams", "abstract_params", "decode_step", "forward_train",
-    "init_decode_state", "init_params", "prefill", "HostIO", "QKVOut",
+    "init_decode_state", "init_params", "prefill", "prefill_bucketed",
+    "HostIO", "QKVOut",
 ]

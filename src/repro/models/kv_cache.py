@@ -17,6 +17,7 @@ block stack; every leaf carries a leading ``G`` (scan groups) axis.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -85,6 +86,13 @@ class PagedKVPool:
     (index 0 = K, 1 = V).  Each (request, layer) owns a chain of pages
     recorded in ``page_tables``.  Allocation is a simple free list —
     deterministic and O(1) — matching vLLM's block allocator.
+
+    Page-chain mutation (``allocate``/``extend``/``free``) is guarded
+    by a lock: the serving engine reserves chains at admission time on
+    its own thread while the host executor's in-flight job may extend
+    a chain concurrently.  ``can_admit`` stays an advisory lock-free
+    read — callers must tolerate ``allocate`` raising ``MemoryError``
+    if a concurrent extension consumed the pages in between.
     """
 
     def __init__(self, num_pages: int, page_size: int, num_layers: int,
@@ -98,15 +106,17 @@ class PagedKVPool:
         self.page_tables: Dict[Tuple[int, int], List[int]] = {}
         # request_id -> token count (same across layers)
         self.lengths: Dict[int, int] = {}
+        self._alloc_lock = threading.Lock()
 
     @property
     def num_free(self) -> int:
         return len(self.free_pages)
 
-    def pages_needed(self, extra_tokens: int, current: int) -> int:
-        have = -(-current // self.page_size) * self.page_size if current else 0
-        need_tokens = max(0, current + extra_tokens - have)
-        return -(-need_tokens // self.page_size)
+    def pages_short(self, total_tokens: int, chain_len: int) -> int:
+        """Pages a chain of ``chain_len`` is short of holding
+        ``total_tokens`` — the single capacity predicate shared by
+        ``extend`` and the bulk/streaming write paths."""
+        return max(0, -(-total_tokens // self.page_size) - chain_len)
 
     def can_admit(self, tokens: int) -> bool:
         per_layer = -(-tokens // self.page_size)
@@ -114,23 +124,27 @@ class PagedKVPool:
 
     def allocate(self, request_id: int, tokens: int) -> None:
         """Reserve page chains for a new request with `tokens` capacity."""
-        if not self.can_admit(tokens):
-            raise MemoryError("paged pool exhausted")
         per_layer = -(-tokens // self.page_size)
-        for layer in range(self.num_layers):
-            self.page_tables[(request_id, layer)] = [
-                self.free_pages.pop() for _ in range(per_layer)]
-        self.lengths[request_id] = 0
+        with self._alloc_lock:
+            if self.num_free < per_layer * self.num_layers:
+                raise MemoryError("paged pool exhausted")
+            for layer in range(self.num_layers):
+                self.page_tables[(request_id, layer)] = [
+                    self.free_pages.pop() for _ in range(per_layer)]
+            self.lengths[request_id] = 0
 
     def extend(self, request_id: int, extra_tokens: int) -> None:
+        """Grow every layer's chain to hold lengths + extra_tokens."""
         cur = self.lengths[request_id]
-        need = self.pages_needed(extra_tokens, cur)
-        if need * self.num_layers > self.num_free:
-            raise MemoryError("paged pool exhausted on extend")
-        if need:
-            for layer in range(self.num_layers):
-                self.page_tables[(request_id, layer)].extend(
-                    self.free_pages.pop() for _ in range(need))
+        with self._alloc_lock:
+            chain_len = len(self.page_tables[(request_id, 0)])
+            need = self.pages_short(cur + extra_tokens, chain_len)
+            if need * self.num_layers > self.num_free:
+                raise MemoryError("paged pool exhausted on extend")
+            if need:
+                for layer in range(self.num_layers):
+                    self.page_tables[(request_id, layer)].extend(
+                        self.free_pages.pop() for _ in range(need))
 
     def append(self, request_id: int, layer: int, k: np.ndarray,
                v: np.ndarray, advance: bool) -> None:
@@ -154,22 +168,49 @@ class PagedKVPool:
 
     def write_prompt(self, request_id: int, layer: int, k: np.ndarray,
                      v: np.ndarray, advance: bool) -> None:
-        """Bulk-write a prompt's K/V (T, kv_heads, head_dim) for one layer."""
+        """Bulk-write a prompt's K/V (T, kv_heads, head_dim) for one
+        layer: one strided write per page span, no per-token loop."""
         t = k.shape[0]
         start = self.lengths[request_id]
-        need = self.pages_needed(t, start)
         chain = self.page_tables[(request_id, layer)]
-        if (start + t + self.page_size - 1) // self.page_size > len(chain):
+        if self.pages_short(start + t, len(chain)):
             self.extend(request_id, t)
             chain = self.page_tables[(request_id, layer)]
-        for off in range(t):
+        off = 0
+        while off < t:
             pos = start + off
             page = chain[pos // self.page_size]
             slot = pos % self.page_size
-            self.pages[0, page, slot] = k[off]
-            self.pages[1, page, slot] = v[off]
+            span = min(self.page_size - slot, t - off)
+            self.pages[0, page, slot:slot + span] = k[off:off + span]
+            self.pages[1, page, slot:slot + span] = v[off:off + span]
+            off += span
         if advance:
             self.lengths[request_id] = start + t
+
+    def append_rows(self, request_ids, layer: int, positions: np.ndarray,
+                    k: np.ndarray, v: np.ndarray) -> None:
+        """Vectorized one-token-per-request append at explicit positions
+        (the host cohort's per-layer write): a single fancy-index store
+        for the whole batch instead of a Python loop of row writes.
+
+        k, v: (B, kv_heads, head_dim); positions: (B,) — the in-flight
+        token's position per request (``lengths`` is NOT advanced; call
+        ``lengths[rid] += 1`` / the executor's token-boundary hook once
+        the token's final layer is written).
+        """
+        ps = self.page_size
+        positions = np.asarray(positions, np.int64)
+        pages = np.empty(len(request_ids), np.int64)
+        for i, rid in enumerate(request_ids):
+            chain = self.page_tables[(rid, layer)]
+            page_idx = int(positions[i]) // ps
+            if page_idx >= len(chain):
+                self.extend(rid, int(positions[i]) + 1 - self.lengths[rid])
+                chain = self.page_tables[(rid, layer)]
+            pages[i] = chain[page_idx]
+        self.pages[0, pages, positions % ps] = k
+        self.pages[1, pages, positions % ps] = v
 
     def gather(self, request_id: int, layer: int
                ) -> Tuple[np.ndarray, np.ndarray]:
@@ -192,7 +233,8 @@ class PagedKVPool:
         return np.concatenate(parts_k, 0), np.concatenate(parts_v, 0)
 
     def free(self, request_id: int) -> None:
-        for layer in range(self.num_layers):
-            chain = self.page_tables.pop((request_id, layer), [])
-            self.free_pages.extend(chain)
-        self.lengths.pop(request_id, None)
+        with self._alloc_lock:
+            for layer in range(self.num_layers):
+                chain = self.page_tables.pop((request_id, layer), [])
+                self.free_pages.extend(chain)
+            self.lengths.pop(request_id, None)

@@ -102,6 +102,37 @@ def prefill(params: ModelParams, cfg: ModelConfig,
     return logits, new_state
 
 
+def prefill_bucketed(params: ModelParams, cfg: ModelConfig,
+                     tokens: jnp.ndarray, prompt_lens: jnp.ndarray,
+                     *, cache_len: int,
+                     kv_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, StackState]:
+    """Batched prefill over right-padded prompts (the serving fast path).
+
+    tokens: (B, T) int32, each row a prompt right-padded to the bucket
+    length T; prompt_lens: (B,) real lengths.  Returns per-row logits
+    of each prompt's *last real token* plus the filled decode state.
+
+    Exact only for attention-only stacks: causal masking makes padded
+    positions invisible to every real position, and the junk K/V they
+    leave beyond ``prompt_lens`` is masked (then overwritten) during
+    decode.  Recurrent blocks (Mamba/xLSTM) fold padded steps into
+    their state, so hybrid architectures must take the per-request
+    ``prefill`` path instead — the engine gates on ``block_pattern``.
+    """
+    b, t = tokens.shape
+    state = init_decode_state(cfg, device_batch=b, cache_len=cache_len,
+                              kv_dtype=kv_dtype)
+    x = embed(params.embedding, tokens)
+    positions = (state.lengths[:, None]
+                 + jnp.arange(t, dtype=jnp.int32)[None, :])
+    x, new_state, _ = transformer.stack_forward(
+        params.blocks, cfg, x, positions, state)
+    x_last = x[jnp.arange(b), prompt_lens - 1]
+    x_last = rmsnorm(params.final_norm, x_last, cfg.norm_eps)
+    logits = unembed(params.embedding, x_last)
+    return logits, new_state
+
+
 def decode_step(params: ModelParams, cfg: ModelConfig,
                 tokens: jnp.ndarray, state: StackState,
                 host: Optional[HostIO] = None,

@@ -51,6 +51,11 @@ class ServerConfig:
     max_queue: int = 1024
     temperature: float = 0.0
     enable_offload: bool = True
+    # host-tier worker threads sharding each host-attention job's rows
+    # (0 = auto: cpu_count - 1) and the bucketed-prefill fast path (see
+    # EngineConfig; docs/serving_api.md "Performance")
+    host_workers: int = 0
+    bucketed_prefill: bool = True
     # --- Algorithm-1 scheduler ------------------------------------------
     # perf-model spec (repro.core.perf_model.PerfModelProvider):
     # "analytic" | "analytic:<platform>" | "measured" | "file:<path>".
@@ -287,6 +292,8 @@ class InferenceServer:
         if self.engine._executor is not None:
             self.engine.stats.host_busy_time = \
                 self.engine._executor.busy_time
+            self.engine.stats.host_transfer_time = \
+                self.engine._executor.transfer_time
         return self.engine.stats
 
     @property

@@ -44,7 +44,8 @@ from repro.core.overlap_engine import Cohort, HostExecutor, OverlapController
 from repro.core.perf_model import OnlineCalibrator, resolve_perf_model
 from repro.core.scheduler import (AdmissionController, ApexScheduler,
                                   Decision, StrategyKind)
-from repro.models import (ModelParams, decode_step, init_decode_state, prefill)
+from repro.models import (ModelParams, decode_step, init_decode_state,
+                          prefill, prefill_bucketed)
 from repro.models.config import BlockKind, ModelConfig
 from repro.models.kv_cache import PagedKVPool, StackState
 from repro.serving.request import Phase, Request
@@ -60,6 +61,16 @@ class EngineConfig:
     host_pool_pages: int = 512
     max_queue: int = 1024
     temperature: float = 0.0
+    # host-tier parallelism: worker threads sharding each host-attention
+    # job's cohort rows (0 = auto: cpu_count - 1, leaving a core for the
+    # device dispatch thread)
+    host_workers: int = 0
+    # bucketed/batched prefill fast path (attention-only stacks): prompt
+    # lengths padded to powers of two so jit retraces stay <=
+    # log2(cache_len), same-bucket admissions prefilled in one device
+    # call.  Hybrid (recurrent) stacks always take the exact
+    # per-request path regardless of this flag.
+    bucketed_prefill: bool = True
     # offload policy: fraction of device KV that must be claimed before
     # requests go to the host tier (GPU-first rule)
     enable_offload: bool = True
@@ -91,7 +102,15 @@ class EngineStats:
     host_tokens: int = 0
     iterations: int = 0
     wall_time: float = 0.0
+    # host-executor busy split: compute (KV append + paged attention)
+    # vs device->host QKV transfer; busy = compute + transfer.  Only
+    # the compute share feeds the calibrator's t_catt correction.
     host_busy_time: float = 0.0
+    host_transfer_time: float = 0.0
+    # jit traces taken by the bucketed prefill fast path (bounded by
+    # log2(cache_len) x log2(device_slots) by construction; 0 when the
+    # engine uses the per-request path)
+    prefill_compilations: int = 0
     # per-iteration Algorithm-1 outcomes: StrategyKind.value -> count
     strategy_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     last_decision: Optional[Decision] = None
@@ -169,6 +188,14 @@ class Engine:
             host_kv_budget_tokens=host_budget)
         self._decode_fn = jax.jit(
             lambda p, tok, st: decode_step(p, cfg, tok, st))
+        # bucketed/batched prefill is exact only when no recurrent state
+        # can fold padded positions in (see models.prefill_bucketed)
+        self._bucketed_prefill = self.e.bucketed_prefill and all(
+            kind == BlockKind.ATTN for kind in cfg.block_pattern)
+        self._prefill_compiles = 0
+        self._prefill_jit = jax.jit(self._prefill_traced)
+        self._splice_jit = jax.jit(self._splice_device_row,
+                                   donate_argnums=(0,))
         self._overlap = None
         self._executor = None
         if self.e.enable_offload:
@@ -176,12 +203,13 @@ class Engine:
             pool = PagedKVPool(self.e.host_pool_pages, self.e.page_size,
                                cfg.num_attn_layers, cfg.num_kv_heads,
                                cfg.resolved_head_dim)
-            self._executor = HostExecutor(cfg, pool)
+            self._executor = HostExecutor(cfg, pool,
+                                          workers=self.e.host_workers)
             self._cohort: Optional[Cohort] = None
             self._host_slot_owner: Dict[int, int] = {}   # slot -> request_id
             self._pending_job: Optional[int] = None
             self._pending_host_pred = 0.0   # predicted time of pending job
-            self._host_busy_seen = 0.0      # executor busy_time watermark
+            self._host_compute_seen = 0.0   # executor compute_time watermark
             self._job_ids = iter(range(1, 1 << 30))
             self._decode_overlap_fn = jax.jit(
                 lambda p, tok, st, host: decode_step(p, cfg, tok, st, host))
@@ -204,9 +232,12 @@ class Engine:
     @staticmethod
     def prompt_reject_reason(prompt_len: int,
                              cache_len: int) -> Optional[str]:
-        """The single oversized-prompt predicate shared by API submit
-        and engine admission: None when the prompt leaves room to
-        generate at least one token, else the rejection reason."""
+        """The single degenerate-prompt predicate shared by API submit
+        and engine admission: None when the prompt is non-empty and
+        leaves room to generate at least one token, else the rejection
+        reason."""
+        if prompt_len < 1:
+            return "empty prompt"
         if prompt_len < cache_len - 1:
             return None
         return (f"prompt of {prompt_len} tokens does not fit "
@@ -219,8 +250,34 @@ class Engine:
         return None
 
     # --- prefill ----------------------------------------------------------
+    def _prefill_traced(self, params: ModelParams, tokens, plens):
+        # trace-count probe: the body runs only when jit (re)traces,
+        # i.e. once per new (bucket_len, batch_bucket) shape pair —
+        # surfaced as EngineStats.prefill_compilations
+        self._prefill_compiles += 1
+        return prefill_bucketed(params, self.cfg, tokens, plens,
+                                cache_len=self.e.cache_len)
+
+    def _splice_device_row(self, state: StackState, sub_entries,
+                           row, slot, plen) -> StackState:
+        """Scatter one prefilled sub-state row into the shared batch
+        state via dynamic_update on donated buffers — no full-state
+        copy per admission."""
+        def upd(big, small):
+            r = jax.lax.dynamic_index_in_dim(small, row, axis=1,
+                                             keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                big, r.astype(big.dtype), slot, axis=1)
+        new_entries = tuple(
+            jax.tree.map(upd, entry, sub)
+            for entry, sub in zip(state.per_entry, sub_entries))
+        lengths = jax.lax.dynamic_update_index_in_dim(
+            state.lengths, plen.astype(state.lengths.dtype), slot, axis=0)
+        return StackState(per_entry=new_entries, lengths=lengths)
+
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
-        """Prefill on device into this slot of the shared state."""
+        """Per-request prefill on device into this slot of the shared
+        state (the exact path hybrid/recurrent stacks require)."""
         req.phase = Phase.PREFILL
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
         sub = init_decode_state(self.cfg, device_batch=1,
@@ -250,39 +307,20 @@ class Engine:
                 return i
         return None
 
-    def _prefill_to_host(self, req: Request, host_slot: int) -> None:
-        """Prefill on device, migrate attention KV to the host pool
-        (paper §3.1: device prefills; host owns decode attention).
-        Recurrent (Mamba/xLSTM) states stay ON-DEVICE, spliced into the
-        unified state's host row — only attention stalls on the host."""
-        req.phase = Phase.PREFILL
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        sub = init_decode_state(self.cfg, device_batch=1,
-                                cache_len=self.e.cache_len)
-        logits, sub = prefill(self.params, self.cfg, {"tokens": prompt}, sub)
-        tok = int(sample(logits, temperature=self.e.temperature)[0])
-        req.output.append(tok)
-        if req.first_token_time is None:
-            req.first_token_time = time.perf_counter()
+    def _host_kv_from_sub(self, sub: StackState, row: int, plen: int):
+        """Host (numpy) copies of one prefilled row's attention KV, as
+        the per-attention-layer [(k, v), ...] list ``migrate_prompt``
+        expects, in absolute attention-layer order."""
         per_layer = []
-        new_entries = []
-        row = self.e.device_slots + host_slot
-        for j, entry in enumerate(self.state.per_entry):
-            if self.cfg.block_pattern[j] == BlockKind.ATTN:
-                k = np.asarray(sub.per_entry[j].k[:, 0], np.float32)
-                v = np.asarray(sub.per_entry[j].v[:, 0], np.float32)
-                for g in range(self.cfg.num_groups):
-                    per_layer.append((k[g, :req.prompt_len],
-                                      v[g, :req.prompt_len]))
-                new_entries.append(entry)   # host rows hold no device KV
-            else:
-                new_entries.append(jax.tree.map(
-                    lambda big, small: big.at[:, row].set(small[:, 0]),
-                    entry, sub.per_entry[j]))
-        self.state = StackState(per_entry=tuple(new_entries),
-                                lengths=self.state.lengths)
-        # reorder: per_layer currently grouped by entry then g; build
-        # absolute attention-layer order
+        for j, kind in enumerate(self.cfg.block_pattern):
+            if kind != BlockKind.ATTN:
+                continue
+            k = np.asarray(sub.per_entry[j].k[:, row], np.float32)
+            v = np.asarray(sub.per_entry[j].v[:, row], np.float32)
+            for g in range(self.cfg.num_groups):
+                per_layer.append((k[g, :plen], v[g, :plen]))
+        # per_layer is grouped by entry then g; reorder to absolute
+        # attention-layer order
         ordered = [None] * self.cfg.num_attn_layers
         idx = 0
         for j, kind in enumerate(self.cfg.block_pattern):
@@ -293,20 +331,89 @@ class Engine:
                 ordered[self.cfg.attn_layer_indices.index(abs_layer)] = \
                     per_layer[idx]
                 idx += 1
-        self._executor.migrate_prompt(req.request_id, ordered)
+        return ordered
+
+    def _prefill_to_host(self, req: Request, host_slot: int) -> None:
+        """Per-request prefill on device, migrating attention KV to the
+        host pool (paper §3.1: device prefills; host owns decode
+        attention).  Recurrent (Mamba/xLSTM) states stay ON-DEVICE,
+        spliced into the unified state's host row — only attention
+        stalls on the host."""
+        req.phase = Phase.PREFILL
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        sub = init_decode_state(self.cfg, device_batch=1,
+                                cache_len=self.e.cache_len)
+        logits, sub = prefill(self.params, self.cfg, {"tokens": prompt}, sub)
+        tok = int(sample(logits, temperature=self.e.temperature)[0])
+        req.output.append(tok)
+        if req.first_token_time is None:
+            req.first_token_time = time.perf_counter()
+        row = self.e.device_slots + host_slot
+        new_entries = []
+        for j, entry in enumerate(self.state.per_entry):
+            if self.cfg.block_pattern[j] == BlockKind.ATTN:
+                new_entries.append(entry)   # host rows hold no device KV
+            else:
+                new_entries.append(jax.tree.map(
+                    lambda big, small: big.at[:, row].set(small[:, 0]),
+                    entry, sub.per_entry[j]))
+        self.state = StackState(per_entry=tuple(new_entries),
+                                lengths=self.state.lengths)
+        self._executor.migrate_prompt(
+            req.request_id, self._host_kv_from_sub(sub, 0, req.prompt_len))
         self.host_requests[req.request_id] = req
         self._host_slot_owner[host_slot] = req.request_id
         req.slot = host_slot
         req.phase = Phase.DECODE_HOST
         # the cohort picks the new member up at the next token boundary
 
+    def _prefill_batched(self, placements) -> None:
+        """The prefill fast path (attention-only stacks): bucket prompt
+        lengths to powers of two and prefill each bucket's admissions
+        in ONE jitted device call.  Batch sizes are power-of-two padded
+        too, so jit retraces stay bounded by log2(cache_len) x
+        log2(2*device_slots) shape pairs for the whole serving run."""
+        groups: Dict[int, list] = {}
+        for p in placements:
+            blen = 1 << max(p[0].prompt_len - 1, 0).bit_length()
+            groups.setdefault(blen, []).append(p)
+        for blen in sorted(groups):
+            group = groups[blen]
+            bb = 1 << (len(group) - 1).bit_length()
+            tokens = np.zeros((bb, blen), np.int32)
+            plens = np.ones((bb,), np.int32)   # padded rows: discarded
+            for j, (req, _, _) in enumerate(group):
+                req.phase = Phase.PREFILL
+                tokens[j, :req.prompt_len] = req.prompt
+                plens[j] = req.prompt_len
+            logits, sub = self._prefill_jit(self.params, jnp.asarray(tokens),
+                                            jnp.asarray(plens))
+            toks = np.asarray(sample(logits, temperature=self.e.temperature))
+            now = time.perf_counter()
+            for j, (req, tier, slot) in enumerate(group):
+                req.output.append(int(toks[j]))
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                if tier == "device":
+                    self.state = self._splice_jit(
+                        self.state, sub.per_entry, jnp.int32(j),
+                        jnp.int32(slot), jnp.int32(req.prompt_len))
+                    req.phase = Phase.DECODE_DEVICE
+                else:
+                    self._executor.migrate_prompt(
+                        req.request_id,
+                        self._host_kv_from_sub(sub, j, req.prompt_len))
+                    req.phase = Phase.DECODE_HOST
+
     # --- admission (rule 1: GPU-first) --------------------------------------
     def _admit(self) -> List[Request]:
         """Admit queued requests through the shared AdmissionController:
         KV budgets and engine slot availability are one placement
-        decision.  Returns the requests prefilled this iteration (the
-        scheduler's prefill snapshot)."""
-        admitted: List[Request] = []
+        decision.  Placement reserves slots/budgets first; prefill runs
+        after, so same-bucket admissions batch into one device call on
+        the fast path.  Returns the requests prefilled this iteration
+        (the scheduler's prefill snapshot)."""
+        placements: List[tuple] = []     # (req, tier, slot)
         while self.queue:
             req = self.queue[0]
             reason = self.prompt_reject_reason(req.prompt_len,
@@ -332,11 +439,39 @@ class Engine:
             req.tier = tier
             req.kv_reserved = need
             if tier == "device":
-                self._prefill_into_slot(req, slot)
+                self.slots[slot] = req          # reserve before prefill
+                req.slot = slot
+                placements.append((req, "device", slot))
             else:
-                self._prefill_to_host(req, hslot)
-            admitted.append(req)
-        return admitted
+                # reserve host slot, pool chains and request map now so
+                # later placements in this round see them taken
+                try:
+                    self._executor.pool.allocate(req.request_id,
+                                                 req.prompt_len)
+                except MemoryError:
+                    # can_admit is advisory: an in-flight host job
+                    # extended a chain between the check and this
+                    # reservation — undo the budget claim, retry later
+                    self.admission.release("host", need)
+                    req.tier = None
+                    req.kv_reserved = 0
+                    self.queue.insert(0, req)
+                    break
+                self._host_slot_owner[hslot] = req.request_id
+                self.host_requests[req.request_id] = req
+                req.slot = hslot
+                placements.append((req, "host", hslot))
+        if placements:
+            if self._bucketed_prefill:
+                self._prefill_batched(placements)
+            else:
+                for req, tier, s in placements:
+                    if tier == "device":
+                        self._prefill_into_slot(req, s)
+                    else:
+                        self._prefill_to_host(req, s)
+            self.stats.prefill_compilations = self._prefill_compiles
+        return [p[0] for p in placements]
 
     # --- cohort management ------------------------------------------------
     def _ensure_cohort(self) -> Optional[Cohort]:
@@ -356,17 +491,23 @@ class Engine:
             self._cohort = None
             return None
         bc = self.e.host_slots
-        d = self.cfg.d_model
         emb = self.params.embedding["embed"]
-        x_carry = jnp.zeros((bc, d), emb.dtype)
         positions = np.zeros((bc,), np.int64)
+        last_tokens = np.zeros((bc,), np.int32)
+        valid_mask = np.zeros((bc,), bool)
         for i, rid in enumerate(slot_rids):
             if rid < 0:
                 continue
             r = self.host_requests[rid]
-            x_carry = x_carry.at[i].set(
-                jnp.take(emb, jnp.int32(r.output[-1]), axis=0))
+            last_tokens[i] = r.output[-1]
+            valid_mask[i] = True
             positions[i] = r.total_len - 1
+        # one stacked gather for the whole cohort (a per-row .at[i].set
+        # loop dispatches bc separate device ops); empty rows stay zero
+        x_carry = jnp.where(
+            jnp.asarray(valid_mask)[:, None],
+            jnp.take(emb, jnp.asarray(last_tokens), axis=0),
+            jnp.zeros((), emb.dtype)).astype(emb.dtype)
         self._cohort = Cohort(
             slot_rids=slot_rids, positions=positions, x_carry=x_carry,
             attn_in=jnp.zeros((bc, self.cfg.num_heads,
@@ -469,7 +610,14 @@ class Engine:
         re-check).  ``wait=True`` — Asymmetric Pipelining at engine
         granularity: block until the host result is ready, putting host
         attention between the two device sub-steps (on the critical
-        path) so every cycle advances the cohort one layer."""
+        path) so every cycle advances the cohort one layer.
+
+        The handoff is non-blocking end to end: the host job is
+        submitted with the *device* QKV arrays straight from the jitted
+        step (the device→host transfer happens inside the executor
+        worker, overlapped with this iteration's logits sync and the
+        next device dispatch) — the engine never forces a sync on QKV.
+        """
         ctl = self._overlap
         valid = cohort.valid_slots
         if self._pending_job is not None:
@@ -486,17 +634,19 @@ class Engine:
                 self._commit_device(logits, active_rows)
                 return
             buf = np.zeros(cohort.attn_in.shape, np.float32)
-            for j, i in enumerate(valid):
-                buf[i] = out[j]
+            buf[np.asarray(valid, np.int64)] = out
             cohort.attn_in = jnp.asarray(buf)
+            self._executor.recycle(out)
             self._pending_job = None
-            # host-side calibration: the executor's busy_time advanced
-            # by exactly this job's compute (single worker, in-order)
+            # host-side calibration against the executor's *compute*
+            # time only — the device→host transfer share is accounted
+            # separately so t_catt stays an attention-cost estimate
             if self._calibrator is not None and self._pending_host_pred > 0:
-                observed = self._executor.busy_time - self._host_busy_seen
+                observed = (self._executor.compute_time
+                            - self._host_compute_seen)
                 self._calibrator.observe_host(self._pending_host_pred,
                                               observed)
-            self._host_busy_seen = self._executor.busy_time
+            self._host_compute_seen = self._executor.compute_time
             self._pending_host_pred = 0.0
 
         io = ctl.host_io(cohort)
@@ -504,22 +654,22 @@ class Engine:
         completes = ctl.completes_token(cohort)
         logits, self.state, qkv, x_final = self._decode_overlap_fn(
             self.params, tokens, self.state, io)
-        self._commit_device(logits, active_rows)
-        cohort.x_carry = x_final[self.e.device_slots:]
         if emit_layer >= 0:
+            # submit BEFORE the logits sync in _commit_device: the
+            # worker materializes QKV and computes host attention while
+            # the engine is still waiting on device logits
             job = next(self._job_ids)
             idx = np.asarray(valid, np.int64)
             self._executor.submit(
                 job, emit_layer, cohort.request_ids,
-                np.asarray(qkv.q, np.float32)[idx],
-                np.asarray(qkv.k, np.float32)[idx],
-                np.asarray(qkv.v, np.float32)[idx],
-                cohort.positions[idx])
+                qkv.q, qkv.k, qkv.v, cohort.positions[idx], rows=idx)
             self._pending_job = job
             if self._calibrator is not None:
                 mean_pos = float(np.mean(cohort.positions[idx] + 1))
                 self._pending_host_pred = self._calibrator.t_catt(
                     len(valid), mean_pos, layers=1)
+        self._commit_device(logits, active_rows)
+        cohort.x_carry = x_final[self.e.device_slots:]
         if completes:
             row_idx = [self.e.device_slots + i for i in valid]
             toks = np.asarray(sample(logits[jnp.asarray(row_idx)],
@@ -530,9 +680,11 @@ class Engine:
                 r.output.append(int(toks[j]))
                 self.stats.host_tokens += 1
                 cohort.positions[i] += 1
-                cohort.x_carry = cohort.x_carry.at[i].set(
-                    jnp.take(emb, jnp.int32(toks[j]), axis=0
-                             ).astype(cohort.x_carry.dtype))
+            # one stacked gather+scatter for the cohort's fresh
+            # embeddings (vs bc separate .at[i].set dispatches)
+            cohort.x_carry = cohort.x_carry.at[jnp.asarray(valid)].set(
+                jnp.take(emb, jnp.asarray(toks), axis=0
+                         ).astype(cohort.x_carry.dtype))
             self._executor.advance_token(cohort.request_ids)
             cohort.attn_in = jnp.zeros_like(cohort.attn_in)
         for rid in cohort.request_ids:
@@ -574,6 +726,7 @@ class Engine:
             it += 1
         if self._executor is not None:
             self.stats.host_busy_time = self._executor.busy_time
+            self.stats.host_transfer_time = self._executor.transfer_time
         return self.stats
 
     def shutdown(self) -> None:
