@@ -1,28 +1,35 @@
 """Decode hot-path benchmark: the engine perf numbers each PR is held to.
 
-Measures, on the container's CPU backend in the host-offload config
-(the APEX regime: more requests than device slots, so the host tier
-carries cohorts under ASYNC_OVERLAP):
+Measures, on the container's CPU backend:
 
-  * ``decode_iters_per_s``      — engine iterations per second of a
-    post-warmup serving run (jit compiles excluded by warmup).
-  * ``tokens_per_s``            — device+host tokens over the same run.
-  * ``host_overlap_efficiency`` — host-executor busy time / engine wall
-    time of the timed run.  Higher = the host tier really computes in
-    parallel instead of idling between blocking handoffs.
-  * ``prefill_compilations``    — jit traces taken by the bucketed
-    prefill over a workload with many distinct prompt lengths
-    (pre-bucketing engines report -1: the eager path never compiles).
-  * ``admission_latency_ms``    — mean time-to-first-token of that
-    same multi-length workload (admission + prefill cost per request).
+  * ``decode`` — offload-heavy serving (the APEX regime: more requests
+    than device slots, host tier carrying cohorts): decode iterations/s,
+    tokens/s, host-overlap efficiency (host busy / wall).
+  * ``prefill`` — admission over many distinct prompt lengths: jit
+    compile count (bucketing bounds it), mean admission latency, and
+    p50/p95 time-to-first-token / inter-token latency.
+  * ``long_context`` (full mode) — a long prompt arriving mid-decode:
+    chunked prefill must co-run with decode (``chunk_co_run_iterations``
+    > 0) instead of stalling it; reports decode progress during the
+    prefill window.
+  * ``asym_heavy`` (full mode) — 1 device slot vs a large host cohort
+    at long context: the regime where Algorithm 1 leans hybrid; reports
+    the strategy mix and throughput.
+  * ``arrival_sweep`` (full mode) — open-loop Poisson replay at several
+    arrival rates through ``InferenceServer.serve``; reports TTFT
+    percentiles per rate.
 
 Emits ``BENCH_engine.json`` at the repo root (CI uploads it as an
 artifact so the perf trajectory accumulates per PR).  The JSON carries
-``baseline``: the same scenario measured on the pre-parallel-hot-path
-engine (commit d66a15b) on this container, so ``speedup_vs_baseline``
-is directly the PR-over-PR improvement.
+two reference blocks: ``baseline`` (the pre-parallel-hot-path engine,
+commit d66a15b) and ``pr3_baseline`` (the pre-chunked-prefill engine,
+commit 9154eac) — both measured on this same container in full mode.
 
-    PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] \
+``--check`` (used by CI after ``--smoke``) compares decode iters/s and
+host-overlap efficiency against the committed ``SMOKE_BASELINE`` block
+and exits non-zero on a >30% drop.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] [--check] \
         [--out BENCH_engine.json]
 """
 from __future__ import annotations
@@ -31,6 +38,7 @@ import argparse
 import dataclasses
 import json
 import os
+import sys
 import time
 
 import jax
@@ -52,6 +60,30 @@ PRE_PR_BASELINE = {
     "admission_latency_ms": 17326.0,
 }
 
+# The engine as of PR 3 (parallel host runtime, bucketed prefill, but
+# whole-prompt prefill serialized before decode), full mode, this
+# container — the bar the chunked-prefill work is held to.
+PR3_BASELINE = {
+    "commit": "9154eac",
+    "decode_iters_per_s": 58.96,
+    "tokens_per_s": 117.17,
+    "host_overlap_efficiency": 0.392,
+    "admission_latency_ms": 3352.0,
+    "prefill_wall_s": 6.86,
+}
+
+# Committed smoke-mode numbers on the 2-vCPU reference container: the
+# CI regression gate (--check) fails the job when a fresh --smoke run
+# drops more than REGRESSION_TOLERANCE below these.  decode_iters_per_s
+# is hardware-dependent — if the CI runner class changes, re-record
+# with `--smoke --record-baseline` there and update this block
+# (host_overlap_efficiency is a ratio and travels better).
+SMOKE_BASELINE = {
+    "decode_iters_per_s": 77.6,
+    "host_overlap_efficiency": 0.344,
+}
+REGRESSION_TOLERANCE = 0.30
+
 
 def _engine_config(**kw) -> EngineConfig:
     """Build an EngineConfig from whatever knobs this engine version
@@ -63,6 +95,17 @@ def _engine_config(**kw) -> EngineConfig:
 def _fresh(protos):
     return [Request(prompt=list(r.prompt), max_new_tokens=r.max_new_tokens)
             for r in protos]
+
+
+def _lat(stats, prefix: str = "") -> dict:
+    """Latency-distribution fields (ms), None-safe on old engines.
+    ``prefix`` namespaces them so scenario blocks merged into one
+    payload never clobber each other's distributions."""
+    out = {}
+    for name in ("ttft_p50", "ttft_p95", "itl_p50", "itl_p95"):
+        v = getattr(stats, name, None)
+        out[f"{prefix}{name}_ms"] = None if v is None else 1e3 * v
+    return out
 
 
 def bench_decode(cfg, params, *, smoke: bool, host_workers: int) -> dict:
@@ -90,6 +133,7 @@ def bench_decode(cfg, params, *, smoke: bool, host_workers: int) -> dict:
         host_busy = (eng._executor.busy_time if eng._executor else 0.0) - host0
         toks = (eng.stats.device_tokens + eng.stats.host_tokens) - dev0 - h0
         overlap = eng.stats.strategy_counts.get("async_overlap", 0) - ov0
+        resolved_workers = getattr(eng.stats, "host_workers", host_workers)
     finally:
         eng.shutdown()
     return {
@@ -99,12 +143,14 @@ def bench_decode(cfg, params, *, smoke: bool, host_workers: int) -> dict:
         "iterations": iters,
         "host_tokens": eng.stats.host_tokens - h0,
         "async_overlap_iterations": overlap,
+        "host_workers_resolved": resolved_workers,
+        **_lat(eng.stats, prefix="decode_"),
     }
 
 
 def bench_prefill(cfg, params, *, smoke: bool, host_workers: int) -> dict:
     """Admission/prefill over many distinct prompt lengths: compile
-    count (bucketing bounds it) and mean TTFT."""
+    count (bucketing bounds it) and admission latency distribution."""
     n_req = 8 if smoke else 16
     lengths = list(range(3, 3 + n_req))              # all distinct
     ecfg = _engine_config(device_slots=n_req + 1, host_slots=0,
@@ -128,13 +174,139 @@ def bench_prefill(cfg, params, *, smoke: bool, host_workers: int) -> dict:
         "distinct_prompt_lengths": n_req,
         "admission_latency_ms": 1e3 * float(np.mean(ttfts)) if ttfts else None,
         "prefill_wall_s": wall,
+        **_lat(eng.stats),
     }
+
+
+def bench_long_context(cfg, params, *, host_workers: int) -> dict:
+    """The decode stall chunked prefill kills: long prompts arrive
+    while short requests are decoding.  Reports how far decode advanced
+    during the prefill window and the chunk co-run count."""
+    ecfg = _engine_config(device_slots=4, host_slots=4, cache_len=512,
+                          perf_model="analytic", host_workers=host_workers,
+                          chunk_tokens=32)
+    eng = Engine(cfg, params, ecfg)
+    rng = np.random.default_rng(2)
+    try:
+        short = [make_synthetic_request(rng, prompt_len=8, output_len=64,
+                                        vocab=cfg.vocab_size)
+                 for _ in range(3)]
+        eng.run(short, max_iterations=3)             # shorts decoding
+        longs = [make_synthetic_request(rng, prompt_len=192, output_len=8,
+                                        vocab=cfg.vocab_size)
+                 for _ in range(2)]
+        before = sum(len(r.output) for r in short)
+        it0 = eng.stats.iterations
+        t0 = time.perf_counter()
+        for r in longs:
+            eng.submit(r)
+        while any(r.first_token_time is None for r in longs) \
+                and eng.stats.iterations < it0 + 500:
+            eng.step()
+        prefill_window_s = time.perf_counter() - t0
+        window_iters = eng.stats.iterations - it0
+        decode_tokens_during = sum(len(r.output) for r in short) - before
+        while eng.has_work and eng.stats.iterations < it0 + 2000:
+            eng.step()
+    finally:
+        eng.shutdown()
+    return {
+        "long_prompt_len": 192,
+        "chunk_tokens": getattr(ecfg, "chunk_tokens", 0),
+        "prefill_window_s": prefill_window_s,
+        "prefill_window_iterations": window_iters,
+        "decode_tokens_during_prefill": decode_tokens_during,
+        "chunk_co_run_iterations": getattr(eng.stats,
+                                           "chunk_co_run_iterations", 0),
+        "prefill_chunks": getattr(eng.stats, "prefill_chunks", 0),
+        **_lat(eng.stats),
+    }
+
+
+def bench_asym_heavy(cfg, params, *, host_workers: int) -> dict:
+    """1 device slot vs a large host cohort at long context — the
+    regime where Algorithm 1 leans hybrid.  Reports the strategy mix."""
+    n_host = 8
+    ecfg = _engine_config(device_slots=1, host_slots=n_host, cache_len=256,
+                          page_size=32, host_pool_pages=1024,
+                          perf_model="analytic", host_workers=host_workers)
+    eng = Engine(cfg, params, ecfg)
+    rng = np.random.default_rng(3)
+    reqs = [make_synthetic_request(rng, prompt_len=96, output_len=12,
+                                   vocab=cfg.vocab_size)
+            for _ in range(n_host + 1)]
+    try:
+        t0 = time.perf_counter()
+        stats = eng.run(reqs)
+        wall = time.perf_counter() - t0
+    finally:
+        eng.shutdown()
+    return {
+        "strategy_counts": dict(stats.strategy_counts),
+        "asym_pipeline_iterations": stats.strategy_counts.get(
+            "asym_pipeline", 0),
+        "host_tokens": stats.host_tokens,
+        "tokens_per_s": (stats.device_tokens + stats.host_tokens)
+        / max(wall, 1e-9),
+        **_lat(stats),
+    }
+
+
+def bench_arrival_sweep(cfg, params, *, host_workers: int) -> dict:
+    """Open-loop Poisson replay at increasing arrival rates: TTFT
+    percentiles under real arrival pressure."""
+    from repro.serving.api import InferenceServer, ServerConfig
+    sweep = {}
+    for rate in (4.0, 16.0):
+        scfg = ServerConfig(device_slots=2, host_slots=6, cache_len=128,
+                            perf_model="analytic",
+                            host_workers=host_workers,
+                            num_requests=10, arrival_rate=rate,
+                            prompt_len=12, output_len=12)
+        server = InferenceServer(cfg, params, scfg)
+        try:
+            reqs = scfg.build_requests(vocab=cfg.vocab_size)
+            server.serve(reqs, realtime=True)
+            stats = server.stats
+            sweep[f"rate_{rate:g}"] = {
+                "tokens_per_s": stats.throughput,
+                **_lat(stats),
+            }
+        finally:
+            server.shutdown()
+    return sweep
+
+
+def check_regression(decode: dict) -> int:
+    """CI gate: fail on a >REGRESSION_TOLERANCE drop vs the committed
+    smoke baseline on decode throughput or overlap efficiency."""
+    failures = []
+    for key, base in SMOKE_BASELINE.items():
+        got = decode.get(key)
+        floor = base * (1.0 - REGRESSION_TOLERANCE)
+        if got is None or got < floor:
+            failures.append(f"{key}: {got} < {floor:.3g} "
+                            f"(baseline {base}, tol {REGRESSION_TOLERANCE})")
+    if failures:
+        print("REGRESSION GATE FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"regression gate OK (tolerance {REGRESSION_TOLERANCE:.0%}): "
+          + ", ".join(f"{k}={decode[k]:.3g} vs baseline {v}"
+                      for k, v in SMOKE_BASELINE.items()))
+    return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="small/fast variant for CI (same metrics)")
+                    help="small/fast variant for CI (decode + prefill "
+                         "scenarios only)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on a >30%% drop vs the committed "
+                         "smoke baseline (CI regression gate; requires "
+                         "--smoke — the baseline is smoke-mode)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: BENCH_engine.json at "
                          "the repo root)")
@@ -145,6 +317,9 @@ def main() -> None:
                     help="print the metrics dict for embedding as a "
                          "pre-change baseline instead of writing JSON")
     args = ap.parse_args()
+    if args.check and not args.smoke:
+        ap.error("--check compares against the smoke-mode baseline; "
+                 "run it with --smoke")
 
     cfg = get_config(args.arch).reduced(layers=4, d_model=128, vocab=256)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -153,21 +328,40 @@ def main() -> None:
                           host_workers=args.host_workers)
     prefill = bench_prefill(cfg, params, smoke=args.smoke,
                             host_workers=args.host_workers)
+    scenarios = {}
+    if not args.smoke:
+        scenarios["long_context"] = bench_long_context(
+            cfg, params, host_workers=args.host_workers)
+        scenarios["asym_heavy"] = bench_asym_heavy(
+            cfg, params, host_workers=args.host_workers)
+        scenarios["arrival_sweep"] = bench_arrival_sweep(
+            cfg, params, host_workers=args.host_workers)
 
     payload = {
         "bench": "engine_hot_path",
         "mode": "smoke" if args.smoke else "full",
         "arch": cfg.name,
         "backend": jax.default_backend(),
-        "host_workers": args.host_workers,
+        "host_workers": decode.get("host_workers_resolved",
+                                   args.host_workers),
         **decode,
         **prefill,
         "baseline": PRE_PR_BASELINE,
+        "pr3_baseline": PR3_BASELINE,
     }
-    if not args.smoke and PRE_PR_BASELINE["decode_iters_per_s"]:
+    if scenarios:
+        payload["scenarios"] = scenarios
+    if not args.smoke:
         payload["speedup_vs_baseline"] = (
             decode["decode_iters_per_s"]
             / PRE_PR_BASELINE["decode_iters_per_s"])
+        payload["decode_iters_vs_pr3"] = (
+            decode["decode_iters_per_s"]
+            / PR3_BASELINE["decode_iters_per_s"])
+        if prefill["admission_latency_ms"]:
+            payload["admission_latency_vs_pr3"] = (
+                prefill["admission_latency_ms"]
+                / PR3_BASELINE["admission_latency_ms"])
     if args.record_baseline:
         print(json.dumps({k: decode[k] for k in
                           ("decode_iters_per_s", "tokens_per_s",
@@ -183,11 +377,24 @@ def main() -> None:
     print(f"wrote {out}")
     for k in ("decode_iters_per_s", "tokens_per_s",
               "host_overlap_efficiency", "prefill_compilations",
-              "admission_latency_ms"):
-        print(f"  {k}: {payload[k]}")
+              "admission_latency_ms", "ttft_p50_ms", "ttft_p95_ms"):
+        print(f"  {k}: {payload.get(k)}")
     if "speedup_vs_baseline" in payload:
         print(f"  speedup_vs_baseline: "
               f"{payload['speedup_vs_baseline']:.2f}x")
+    if "decode_iters_vs_pr3" in payload:
+        print(f"  decode_iters_vs_pr3: {payload['decode_iters_vs_pr3']:.2f}x"
+              f" (1.0 = PR-3; within noise expected)")
+    if "admission_latency_vs_pr3" in payload:
+        print(f"  admission_latency_vs_pr3: "
+              f"{payload['admission_latency_vs_pr3']:.2f}x (lower is better)")
+    if scenarios.get("long_context"):
+        lc = scenarios["long_context"]
+        print(f"  long_context: {lc['decode_tokens_during_prefill']} decode "
+              f"tokens during prefill, "
+              f"{lc['chunk_co_run_iterations']} co-run iterations")
+    if args.check:
+        sys.exit(check_regression(decode))
 
 
 if __name__ == "__main__":

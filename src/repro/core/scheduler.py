@@ -50,6 +50,10 @@ class Decision:
     # the engine compares it against the measured wall time to drive
     # the OnlineCalibrator and the EngineStats accuracy metric
     predicted_time: float = 0.0
+    # chunked-prefill plan: prefill tokens granted to this iteration's
+    # fused chunk (0 = no chunk).  The mixed-branch timings above are
+    # evaluated at exactly this share, not the whole prompt backlog.
+    chunk_tokens: int = 0
 
 
 def _progress(req: Any) -> int:
@@ -73,12 +77,22 @@ class ApexScheduler:
 
     def schedule(self, prefill: Sequence[Any], decode_gpu: Sequence[Any],
                  decode_cpu: Sequence[Any], *, mean_context: float,
-                 prefill_tokens: int = 0) -> Decision:
+                 prefill_tokens: int = 0, chunk_backlog_tokens: int = 0,
+                 chunk_tokens_max: int = 0) -> Decision:
         prefill = list(prefill)
         decode_gpu = list(decode_gpu)
         decode_cpu = list(decode_cpu)
 
         batch = max(len(decode_gpu), 1)
+        chunk = 0
+        if chunk_tokens_max > 0 and chunk_backlog_tokens > 0:
+            # Chunked prefill: this iteration's fused chunk budget IS
+            # the mixed branch's prefill share — size it from the perf
+            # model (below) and evaluate rule 3 at that share.
+            chunk = self.chunk_budget(
+                len(decode_gpu), len(decode_cpu), mean_context,
+                backlog=chunk_backlog_tokens, cap=chunk_tokens_max)
+            prefill_tokens = chunk
         t = self.perf_model.timings(batch, mean_context,
                                     prefill_tokens=prefill_tokens)
         mixed = bool(prefill) and t.t_glinear_pref > 0.0
@@ -87,7 +101,8 @@ class ApexScheduler:
         if not decode_cpu:
             return Decision(StrategyKind.GPU_ONLY, prefill, decode_gpu, [],
                             reason="no host-offloaded requests",
-                            predicted_time=self._aligned_time(t, mixed))
+                            predicted_time=self._aligned_time(t, mixed),
+                            chunk_tokens=chunk)
 
         # §4.2 admission threshold: handle too-small cohorts GPU-aligned
         # (deferred synchronization; host rows never stall the device)
@@ -98,27 +113,66 @@ class ApexScheduler:
                 StrategyKind.ASYNC_OVERLAP, prefill, decode_gpu, decode_cpu,
                 reason=f"host cohort {len(decode_cpu)} < host_min_ratio "
                        f"{self.host_min_ratio:g} x batch {batch}",
-                predicted_time=self._aligned_time(t, mixed))
+                predicted_time=self._aligned_time(t, mixed),
+                chunk_tokens=chunk)
 
         if not prefill:
             # Rule 2 — decode-only: Inequality (5).
             if analytical.pipelining_beneficial_decode_only(t):
                 return self._pipeline_decision(prefill, decode_gpu,
                                                decode_cpu, t, mixed,
-                                               reason="Ineq(5) holds")
+                                               reason="Ineq(5) holds",
+                                               chunk=chunk)
             return Decision(StrategyKind.ASYNC_OVERLAP, prefill, decode_gpu,
                             decode_cpu,
                             reason=f"Ineq(6): N_G/N_C={t.n_g / t.n_c:.1f} >= "
                                    f"{analytical.ineq6_threshold(t):.1f}",
-                            predicted_time=self._aligned_time(t, mixed))
+                            predicted_time=self._aligned_time(t, mixed),
+                            chunk_tokens=chunk)
 
         # Rule 3 — mixed: widened host window.
         if analytical.pipelining_beneficial_mixed(t):
             return self._pipeline_decision(prefill, decode_gpu, decode_cpu, t,
-                                           mixed, reason="mixed Ineq holds")
+                                           mixed, reason="mixed Ineq holds",
+                                           chunk=chunk)
         return Decision(StrategyKind.ASYNC_OVERLAP, prefill, decode_gpu,
                         decode_cpu, reason="mixed Ineq fails",
-                        predicted_time=self._aligned_time(t, mixed))
+                        predicted_time=self._aligned_time(t, mixed),
+                        chunk_tokens=chunk)
+
+    # --- chunked-prefill budget ------------------------------------------
+    def chunk_budget(self, n_gpu: int, n_cpu: int, mean_context: float,
+                     *, backlog: int, cap: int) -> int:
+        """Per-iteration prefill chunk budget (tokens).
+
+        With nothing decoding there is nothing to stall: grant the
+        whole backlog (TTFT-optimal, the pre-chunking behaviour).
+        With an active host cohort, pick the *smallest* power-of-two
+        chunk whose predicted mixed-iteration device time
+        (``t_glinear_pref + t_gatt_pref``) still covers the cohort's
+        one-layer host-attention time — the chunk keeps the
+        ASYNC_OVERLAP/ASYM_PIPELINE window wide enough that the host
+        job lands in-iteration (never late), while staying as small as
+        inter-token latency allows.  Device-only decode has no window
+        to protect, so the cap (the ``chunk_tokens`` knob) applies
+        directly.
+        """
+        if n_gpu == 0 and n_cpu == 0:
+            return backlog
+        budget = cap
+        if n_cpu > 0:
+            t_catt = getattr(self.perf_model, "t_catt", None)
+            if t_catt is not None:
+                t_host = t_catt(n_cpu, mean_context, layers=1)
+                c = 1
+                while c < cap:
+                    t = self.perf_model.timings(max(n_gpu, 1), mean_context,
+                                                prefill_tokens=c)
+                    if t.t_glinear_pref + t.t_gatt_pref >= t_host:
+                        break
+                    c <<= 1
+                budget = min(c, cap)
+        return max(1, min(budget, backlog))
 
     # --- predicted iteration times (Eqs. 1/2 + mixed variants) ----------
     @staticmethod
@@ -136,7 +190,8 @@ class ApexScheduler:
         return analytical.t_overlap(t)
 
     def _pipeline_decision(self, prefill, decode_gpu, decode_cpu,
-                           t: Timings, mixed: bool, reason: str) -> Decision:
+                           t: Timings, mixed: bool, reason: str,
+                           chunk: int = 0) -> Decision:
         # Rule 4 — partially processed offloaded requests go first into
         # the CPU-only sub-batch.
         cpu_sorted = sorted(decode_cpu, key=_progress, reverse=True)
@@ -146,7 +201,8 @@ class ApexScheduler:
         return Decision(StrategyKind.ASYM_PIPELINE, prefill, decode_gpu,
                         decode_cpu, sub_batch_1=sb1, sub_batch_2=sb2,
                         reason=reason,
-                        predicted_time=self._pipeline_time(t, mixed))
+                        predicted_time=self._pipeline_time(t, mixed),
+                        chunk_tokens=chunk)
 
 
 @dataclasses.dataclass

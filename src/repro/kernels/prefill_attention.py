@@ -9,7 +9,14 @@ compute via ``pl.when`` (the DMA still runs — on TPU the schedule is
 static; the roofline model in benchmarks/roofline counts causal FLOPs
 at 0.5x accordingly).
 
-Supports prefix-LM masking (PaliGemma) via ``prefix_len``.
+Supports prefix-LM masking (PaliGemma) via ``prefix_len``, and
+*chunked prefill* via ``q_offset``: queries are a T-token chunk whose
+row b starts at absolute position ``q_offset[b]`` while k/v cover the
+whole accumulated cache span (S >= T).  The causal mask compares
+absolute positions (``k_idx <= q_offset[b] + q_idx``), so a chunk
+attends to every prior chunk's KV plus its own causal triangle —
+junk cache columns beyond a row's chunk end are in the strict future
+of all its queries and masked by the same predicate.
 
 VMEM per step at BQ=256, BS=512, D=128, fp32: q 128 KB + k/v 512 KB +
 acc 128 KB + m/l 256 KB ≈ 1 MB.
@@ -27,7 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _prefill_kernel(prefix_ref, q_ref, k_ref, v_ref, o_ref,
+def _prefill_kernel(prefix_ref, qoff_ref, q_ref, k_ref, v_ref, o_ref,
                     m_ref, l_ref, acc_ref, *,
                     block_q: int, block_k: int, scale: float, causal: bool):
     b = pl.program_id(0)
@@ -42,8 +49,10 @@ def _prefill_kernel(prefix_ref, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # tiles strictly in the future of the whole q block are skipped
-    run = jnp.logical_or(jnp.array(not causal),
-                         ki * block_k <= qi * block_q + block_q - 1)
+    # (chunked prefill: the block's absolute positions start at q_offset)
+    run = jnp.logical_or(
+        jnp.array(not causal),
+        ki * block_k <= qoff_ref[b] + qi * block_q + block_q - 1)
 
     @pl.when(run)
     def _body():
@@ -54,7 +63,7 @@ def _prefill_kernel(prefix_ref, q_ref, k_ref, v_ref, o_ref,
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale           # (BQ, BK)
         if causal:
-            q_idx = qi * block_q + jax.lax.broadcasted_iota(
+            q_idx = qoff_ref[b] + qi * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, scores.shape, 0)
             k_idx = ki * block_k + jax.lax.broadcasted_iota(
                 jnp.int32, scores.shape, 1)
@@ -86,27 +95,33 @@ def _prefill_kernel(prefix_ref, q_ref, k_ref, v_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=(
     "block_q", "block_k", "causal", "interpret"))
 def prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                      prefix_len: jnp.ndarray | None = None, *,
+                      prefix_len: jnp.ndarray | None = None,
+                      q_offset: jnp.ndarray | None = None, *,
                       causal: bool = True, block_q: int = 256,
                       block_k: int = 512, interpret: bool = False
                       ) -> jnp.ndarray:
     """Causal (or full) flash attention.
 
-    q: (B, T, H, D); k, v: (B, T, KV, D); prefix_len: (B,) optional
-    prefix-LM boundary.  Returns (B, T, H, D).
+    q: (B, T, H, D); k, v: (B, S, KV, D) with S >= T; prefix_len: (B,)
+    optional prefix-LM boundary; q_offset: (B,) optional absolute
+    position of each row's first query (chunked prefill — k/v then
+    cover the accumulated cache span, causality is enforced on
+    absolute positions).  Returns (B, T, H, D).
     """
     b, t, h, d = q.shape
-    kv = k.shape[2]
+    s, kv = k.shape[1], k.shape[2]
     g = h // kv
     block_q = min(block_q, t)
-    block_k = min(block_k, t)
+    block_k = min(block_k, s)
     tq = -(-t // block_q) * block_q
-    tk = -(-t // block_k) * block_k
+    tk = -(-s // block_k) * block_k
     qp = jnp.pad(q, ((0, 0), (0, tq - t), (0, 0), (0, 0)))
-    kp = jnp.pad(k, ((0, 0), (0, tk - t), (0, 0), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, tk - t), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tk - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tk - s), (0, 0), (0, 0)))
     if prefix_len is None:
         prefix_len = jnp.zeros((b,), jnp.int32)
+    if q_offset is None:
+        q_offset = jnp.zeros((b,), jnp.int32)
     scale = 1.0 / math.sqrt(d)
 
     grid = (b, h, tq // block_q, tk // block_k)
@@ -114,18 +129,18 @@ def prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         functools.partial(_prefill_kernel, block_q=block_q, block_k=block_k,
                           scale=scale, causal=causal),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, block_q, 1, d),
-                             lambda bi, hi, qi, ki, _: (bi, qi, hi, 0)),
+                             lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
                 pl.BlockSpec((1, block_k, 1, d),
-                             lambda bi, hi, qi, ki, _, g_=g: (bi, ki, hi // g_, 0)),
+                             lambda bi, hi, qi, ki, *_, g_=g: (bi, ki, hi // g_, 0)),
                 pl.BlockSpec((1, block_k, 1, d),
-                             lambda bi, hi, qi, ki, _, g_=g: (bi, ki, hi // g_, 0)),
+                             lambda bi, hi, qi, ki, *_, g_=g: (bi, ki, hi // g_, 0)),
             ],
             out_specs=pl.BlockSpec((1, block_q, 1, d),
-                                   lambda bi, hi, qi, ki, _: (bi, qi, hi, 0)),
+                                   lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
             scratch_shapes=[
                 pltpu.VMEM((block_q, 128), jnp.float32),
                 pltpu.VMEM((block_q, 128), jnp.float32),
@@ -134,6 +149,6 @@ def prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         ),
         out_shape=jax.ShapeDtypeStruct((b, tq, h, d), q.dtype),
         interpret=interpret,
-    )(prefix_len, qp, kp, vp)
+    )(prefix_len, q_offset, qp, kp, vp)
     # rows past t attended nothing (l=0, guarded divide) — slice away
     return out[:, :t]

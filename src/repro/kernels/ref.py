@@ -33,21 +33,29 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def prefill_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                          prefix_len: Optional[jnp.ndarray] = None, *,
+                          prefix_len: Optional[jnp.ndarray] = None,
+                          q_offset: Optional[jnp.ndarray] = None, *,
                           causal: bool = True) -> jnp.ndarray:
-    """q: (B, T, H, D); k, v: (B, T, KV, D) -> (B, T, H, D)."""
+    """q: (B, T, H, D); k, v: (B, S, KV, D), S >= T -> (B, T, H, D).
+
+    ``q_offset`` (B,) shifts each row's queries to absolute positions
+    (chunked prefill): query i attends kv positions <= q_offset[b] + i.
+    """
     b, t, h, d = q.shape
-    kv = k.shape[2]
+    s, kv = k.shape[1], k.shape[2]
     g = h // kv
     qg = q.reshape(b, t, kv, g, d).astype(jnp.float32)
     scores = jnp.einsum("btkgd,bskd->btkgs", qg, k.astype(jnp.float32))
     scores = scores / math.sqrt(d)
     if causal:
         qi = jnp.arange(t)[None, :, None]
-        ki = jnp.arange(t)[None, None, :]
-        mask = ki <= qi                                   # (1, T, S)
+        if q_offset is not None:
+            qi = qi + q_offset[:, None, None]
+        ki = jnp.arange(s)[None, None, :]
+        mask = ki <= qi                                   # (B|1, T, S)
         if prefix_len is not None:
             mask = mask | (ki < prefix_len[:, None, None])
+        mask = jnp.broadcast_to(mask, (b, t, s))
         scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
     p = jnp.exp(scores - scores.max(-1, keepdims=True))
     p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)

@@ -60,6 +60,10 @@ def main() -> None:
                          "(0 = auto: cpu_count - 1)")
     ap.add_argument("--no-bucketed-prefill", action="store_true",
                     help="disable the bucketed/batched prefill fast path")
+    ap.add_argument("--chunk-tokens", type=int, default=64,
+                    help="chunked-prefill budget per iteration while "
+                         "decode is active (0 = whole-prompt prefill "
+                         "before decode)")
     ap.add_argument("--no-offload", action="store_true")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress the per-token stream of request 0")
@@ -72,6 +76,7 @@ def main() -> None:
         cache_len=args.cache_len, enable_offload=not args.no_offload,
         host_workers=args.host_workers,
         bucketed_prefill=not args.no_bucketed_prefill,
+        chunk_tokens=args.chunk_tokens,
         platform=args.platform, perf_model=args.perf_model,
         profile_cache=args.profile_cache,
         workload=None if args.workload in (None, "synthetic")
@@ -125,6 +130,17 @@ def main() -> None:
     if lats:
         print(f"avg per-token latency: {np.mean(lats) * 1e3:.1f} ms; "
               f"avg TTFT: {np.mean(ttfts) * 1e3:.1f} ms")
+    if stats.ttft_p50 is not None:
+        itl50 = stats.itl_p50 or 0.0
+        itl95 = stats.itl_p95 or 0.0
+        print(f"TTFT p50/p95: {stats.ttft_p50 * 1e3:.1f}/"
+              f"{stats.ttft_p95 * 1e3:.1f} ms; "
+              f"ITL p50/p95: {itl50 * 1e3:.1f}/{itl95 * 1e3:.1f} ms")
+    if stats.prefill_chunks:
+        print(f"chunked prefill: {stats.prefill_chunks} chunks "
+              f"({stats.chunked_prefill_tokens} tokens), "
+              f"{stats.chunk_co_run_iterations} iterations co-ran "
+              f"with decode")
     if stats.host_busy_time:
         print(f"host attention busy: {stats.host_busy_time:.2f}s "
               f"({100 * stats.host_busy_time / wall:.0f}% of wall — "

@@ -1,13 +1,15 @@
 from repro.models.config import (BlockKind, FFNKind, MambaConfig, MoEConfig,
                                  ModelConfig)
-from repro.models.model import (ModelParams, abstract_params, decode_step,
+from repro.models.model import (ModelParams, abstract_params,
+                                decode_step, decode_with_chunked_prefill,
                                 forward_train, init_decode_state, init_params,
-                                prefill, prefill_bucketed)
+                                prefill, prefill_bucketed, prefill_chunk)
 from repro.models.transformer import HostIO, QKVOut
 
 __all__ = [
     "BlockKind", "FFNKind", "MambaConfig", "MoEConfig", "ModelConfig",
-    "ModelParams", "abstract_params", "decode_step", "forward_train",
-    "init_decode_state", "init_params", "prefill", "prefill_bucketed",
+    "ModelParams", "abstract_params", "decode_step",
+    "decode_with_chunked_prefill", "forward_train", "init_decode_state",
+    "init_params", "prefill", "prefill_bucketed", "prefill_chunk",
     "HostIO", "QKVOut",
 ]

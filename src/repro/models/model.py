@@ -133,6 +133,62 @@ def prefill_bucketed(params: ModelParams, cfg: ModelConfig,
     return logits, new_state
 
 
+def prefill_chunk(params: ModelParams, cfg: ModelConfig,
+                  tokens: jnp.ndarray, chunk_lens: jnp.ndarray,
+                  state: StackState) -> Tuple[jnp.ndarray, StackState]:
+    """Advance a batch of in-progress prefills by one right-padded chunk.
+
+    tokens: (B, C) int32 — row b's next ``chunk_lens[b]`` prompt tokens
+    right-padded to the chunk bucket C (rows with chunk_lens == 0 ride
+    along idle); state: the persistent prefill staging state whose
+    ``lengths`` hold each row's tokens already prefilled.  Queries run
+    at absolute positions ``lengths + i`` against the accumulated KV,
+    so causality makes every padded/idle position invisible — exact
+    for attention-only stacks (the same contract as
+    ``prefill_bucketed``; recurrent state would fold padding in).
+
+    Returns (logits (B, V) of each row's *last real chunk token* — only
+    meaningful for rows whose prompt completes in this chunk — and the
+    new state with ``lengths`` advanced by ``chunk_lens``, not by the
+    padded C: junk KV written past a row's real chunk end sits beyond
+    its corrected length, in the strict causal future of all later
+    queries, and is overwritten as the prefill/decode advances).
+    """
+    b, c = tokens.shape
+    x = embed(params.embedding, tokens)
+    positions = (state.lengths[:, None]
+                 + jnp.arange(c, dtype=jnp.int32)[None, :])
+    x, new_state, _ = transformer.stack_forward(
+        params.blocks, cfg, x, positions, state)
+    x_last = x[jnp.arange(b), jnp.maximum(chunk_lens, 1) - 1]
+    x_last = rmsnorm(params.final_norm, x_last, cfg.norm_eps)
+    logits = unembed(params.embedding, x_last)
+    lengths = state.lengths + chunk_lens.astype(state.lengths.dtype)
+    return logits, StackState(per_entry=new_state.per_entry, lengths=lengths)
+
+
+def decode_with_chunked_prefill(
+        params: ModelParams, cfg: ModelConfig, tokens: jnp.ndarray,
+        state: StackState, host: Optional[HostIO],
+        chunk_tokens: jnp.ndarray, chunk_lens: jnp.ndarray,
+        chunk_state: StackState):
+    """One fused device step: the unified decode iteration AND one
+    token-budgeted prefill chunk, compiled and dispatched as a single
+    program (Algorithm 1's mixed branch made real: decode never stalls
+    behind a long prompt, and the host-attention window of
+    ASYNC_OVERLAP / ASYM_PIPELINE spans the prefill compute too).
+
+    Returns ``(logits, new_state, qkv_out, x_final, chunk_logits,
+    new_chunk_state)`` — the first four exactly as ``decode_step``, the
+    last two exactly as ``prefill_chunk``.
+    """
+    logits, new_state, qkv_out, x_final = decode_step(
+        params, cfg, tokens, state, host)
+    chunk_logits, new_chunk = prefill_chunk(
+        params, cfg, chunk_tokens, chunk_lens, chunk_state)
+    return logits, new_state, qkv_out, x_final, chunk_logits, new_chunk
+
+
 def decode_step(params: ModelParams, cfg: ModelConfig,
                 tokens: jnp.ndarray, state: StackState,
                 host: Optional[HostIO] = None,

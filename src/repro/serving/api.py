@@ -56,6 +56,13 @@ class ServerConfig:
     # EngineConfig; docs/serving_api.md "Performance")
     host_workers: int = 0
     bucketed_prefill: bool = True
+    # chunked prefill co-scheduled with decode: per-iteration prompt
+    # token budget while decode is active (the scheduler may grant
+    # less, sizing the chunk to the host-attention window, or the
+    # whole backlog when nothing decodes); 0 = whole-prompt prefill
+    # before decode (the pre-chunking behaviour).  See
+    # docs/serving_api.md "Chunked prefill".
+    chunk_tokens: int = 64
     # --- Algorithm-1 scheduler ------------------------------------------
     # perf-model spec (repro.core.perf_model.PerfModelProvider):
     # "analytic" | "analytic:<platform>" | "measured" | "file:<path>".

@@ -44,8 +44,9 @@ from repro.core.overlap_engine import Cohort, HostExecutor, OverlapController
 from repro.core.perf_model import OnlineCalibrator, resolve_perf_model
 from repro.core.scheduler import (AdmissionController, ApexScheduler,
                                   Decision, StrategyKind)
-from repro.models import (ModelParams, decode_step, init_decode_state,
-                          prefill, prefill_bucketed)
+from repro.models import (ModelParams, decode_step,
+                          decode_with_chunked_prefill, init_decode_state,
+                          prefill, prefill_bucketed, prefill_chunk)
 from repro.models.config import BlockKind, ModelConfig
 from repro.models.kv_cache import PagedKVPool, StackState
 from repro.serving.request import Phase, Request
@@ -71,6 +72,17 @@ class EngineConfig:
     # call.  Hybrid (recurrent) stacks always take the exact
     # per-request path regardless of this flag.
     bucketed_prefill: bool = True
+    # chunked prefill co-scheduled with decode: prompts advance in
+    # token-budgeted chunks INSIDE the continuous-batching loop (one
+    # fused device step runs the decode batch and one prefill chunk),
+    # so decode never stalls behind a long prompt.  ``chunk_tokens`` is
+    # the per-iteration budget cap while decode is active; the
+    # scheduler may grant less (sizing the chunk to the host-attention
+    # window) or more (the whole backlog when nothing is decoding).
+    # 0 disables chunking (whole-prompt prefill before decode, the
+    # pre-chunking behaviour); hybrid/recurrent stacks and
+    # ``bucketed_prefill=False`` fall back to whole-prompt regardless.
+    chunk_tokens: int = 64
     # offload policy: fraction of device KV that must be claimed before
     # requests go to the host tier (GPU-first rule)
     enable_offload: bool = True
@@ -96,21 +108,64 @@ class EngineConfig:
     host_kv_budget_tokens: Optional[int] = None
 
 
+def _pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (the prefill/chunk bucket rule)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class _InflightPrefill:
+    """One admission advancing chunk-by-chunk through the staging state."""
+
+    req: Request
+    tier: str                        # "device" | "host"
+    slot: int                        # device slot / host slot index
+    consumed: int = 0                # prompt tokens already prefilled
+
+    @property
+    def remaining(self) -> int:
+        return self.req.prompt_len - self.consumed
+
+
+@dataclasses.dataclass
+class _ChunkPlan:
+    """This iteration's chunk assignment over staging rows."""
+
+    rows: List[int]                  # staging rows advancing (FIFO order)
+    lens: List[int]                  # real tokens granted per row
+    tokens: np.ndarray               # (P, C) right-padded chunk tokens
+    clens: np.ndarray                # (P,) per-row chunk length (0 = idle)
+
+
 @dataclasses.dataclass
 class EngineStats:
     device_tokens: int = 0
     host_tokens: int = 0
     iterations: int = 0
     wall_time: float = 0.0
+    # resolved host-tier worker count the HostExecutor actually runs
+    # with (the config knob may be 0 = auto); 0 when offload is off
+    host_workers: int = 0
     # host-executor busy split: compute (KV append + paged attention)
     # vs device->host QKV transfer; busy = compute + transfer.  Only
     # the compute share feeds the calibrator's t_catt correction.
     host_busy_time: float = 0.0
     host_transfer_time: float = 0.0
-    # jit traces taken by the bucketed prefill fast path (bounded by
-    # log2(cache_len) x log2(device_slots) by construction; 0 when the
-    # engine uses the per-request path)
+    # jit traces taken by the bucketed/chunked prefill fast paths
+    # (power-of-two chunk buckets bound them to a few x log2(cache_len)
+    # for the whole serving run; 0 when the engine uses the exact
+    # per-request path)
     prefill_compilations: int = 0
+    # chunked prefill: chunks executed, prompt tokens prefilled through
+    # chunks, and iterations where a chunk co-ran with active decode
+    # work (device rows or a host cohort) in one fused device step
+    prefill_chunks: int = 0
+    chunked_prefill_tokens: int = 0
+    chunk_co_run_iterations: int = 0
+    # latency distributions over retired requests: time-to-first-token
+    # and per-request mean inter-token latency (seconds)
+    ttft_samples: List[float] = dataclasses.field(default_factory=list)
+    itl_samples: List[float] = dataclasses.field(default_factory=list)
     # per-iteration Algorithm-1 outcomes: StrategyKind.value -> count
     strategy_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     last_decision: Optional[Decision] = None
@@ -131,6 +186,28 @@ class EngineStats:
     def throughput(self) -> float:
         return (self.device_tokens + self.host_tokens) / max(self.wall_time,
                                                              1e-9)
+
+    @staticmethod
+    def _pct(samples: List[float], q: float) -> Optional[float]:
+        if not samples:
+            return None
+        return float(np.percentile(np.asarray(samples, float), q))
+
+    @property
+    def ttft_p50(self) -> Optional[float]:
+        return self._pct(self.ttft_samples, 50)
+
+    @property
+    def ttft_p95(self) -> Optional[float]:
+        return self._pct(self.ttft_samples, 95)
+
+    @property
+    def itl_p50(self) -> Optional[float]:
+        return self._pct(self.itl_samples, 50)
+
+    @property
+    def itl_p95(self) -> Optional[float]:
+        return self._pct(self.itl_samples, 95)
 
     @property
     def prediction_error(self) -> Optional[float]:
@@ -164,6 +241,10 @@ class Engine:
         self.stats = EngineStats()
         self.scheduler = scheduler
         self._calibrator: Optional[OnlineCalibrator] = None
+        # injected schedulers predating chunked prefill keep working:
+        # the engine only forwards the chunk kwargs (and trusts
+        # Decision.chunk_tokens) when schedule() accepts them
+        self._sched_chunk_aware = False
         if self.scheduler is None and self.e.use_scheduler:
             base = resolve_perf_model(
                 self.e.perf_model, cfg, platform=self.e.platform,
@@ -175,6 +256,10 @@ class Engine:
                 self._calibrator,
                 host_min_ratio=self.e.host_min_ratio,
                 max_pipeline_sub_batch=self.e.max_pipeline_sub_batch)
+        if self.scheduler is not None:
+            import inspect
+            self._sched_chunk_aware = "chunk_tokens_max" in \
+                inspect.signature(self.scheduler.schedule).parameters
         device_budget = (self.e.device_kv_budget_tokens
                          if self.e.device_kv_budget_tokens is not None
                          else self.e.device_slots * self.e.cache_len)
@@ -196,6 +281,27 @@ class Engine:
         self._prefill_jit = jax.jit(self._prefill_traced)
         self._splice_jit = jax.jit(self._splice_device_row,
                                    donate_argnums=(0,))
+        # chunked prefill co-scheduled with decode: exactness has the
+        # same contract as bucketing (attention-only stacks), so it
+        # shares the gate; chunk_tokens == 0 turns it off explicitly
+        self._chunked = self.e.chunk_tokens > 0 and self._bucketed_prefill
+        self._staging: List[Optional[_InflightPrefill]] = []
+        self._staging_order: List[int] = []      # rows in admission order
+        if self._chunked:
+            # one staging row per admissible request: prompts prefill
+            # here chunk-by-chunk, then splice (device) / finish
+            # streaming to the paged pool (host) on completion
+            n_staging = self.e.device_slots + (
+                self.e.host_slots if self.e.enable_offload else 0)
+            self._staging_state = init_decode_state(
+                cfg, device_batch=n_staging, cache_len=self.e.cache_len)
+            self._staging = [None] * n_staging
+            self._chunk_jit = jax.jit(self._chunk_traced,
+                                      donate_argnums=(3,))
+            self._decode_chunk_jit = jax.jit(self._decode_chunk_traced,
+                                             donate_argnums=(5,))
+            self._decode_overlap_chunk_jit = jax.jit(
+                self._decode_overlap_chunk_traced, donate_argnums=(6,))
         self._overlap = None
         self._executor = None
         if self.e.enable_offload:
@@ -205,6 +311,9 @@ class Engine:
                                cfg.resolved_head_dim)
             self._executor = HostExecutor(cfg, pool,
                                           workers=self.e.host_workers)
+            # the *resolved* worker count (0 = auto expands inside the
+            # executor) — what the host tier actually runs with
+            self.stats.host_workers = self._executor.workers
             self._cohort: Optional[Cohort] = None
             self._host_slot_owner: Dict[int, int] = {}   # slot -> request_id
             self._pending_job: Optional[int] = None
@@ -258,6 +367,23 @@ class Engine:
         return prefill_bucketed(params, self.cfg, tokens, plens,
                                 cache_len=self.e.cache_len)
 
+    # --- chunked prefill (fused with decode) ------------------------------
+    def _chunk_traced(self, params: ModelParams, ctoks, clens, cstate):
+        self._prefill_compiles += 1
+        return prefill_chunk(params, self.cfg, ctoks, clens, cstate)
+
+    def _decode_chunk_traced(self, params: ModelParams, tokens, state,
+                             ctoks, clens, cstate):
+        self._prefill_compiles += 1
+        return decode_with_chunked_prefill(params, self.cfg, tokens, state,
+                                           None, ctoks, clens, cstate)
+
+    def _decode_overlap_chunk_traced(self, params: ModelParams, tokens,
+                                     state, host, ctoks, clens, cstate):
+        self._prefill_compiles += 1
+        return decode_with_chunked_prefill(params, self.cfg, tokens, state,
+                                           host, ctoks, clens, cstate)
+
     def _splice_device_row(self, state: StackState, sub_entries,
                            row, slot, plen) -> StackState:
         """Scatter one prefilled sub-state row into the shared batch
@@ -307,18 +433,22 @@ class Engine:
                 return i
         return None
 
-    def _host_kv_from_sub(self, sub: StackState, row: int, plen: int):
-        """Host (numpy) copies of one prefilled row's attention KV, as
-        the per-attention-layer [(k, v), ...] list ``migrate_prompt``
-        expects, in absolute attention-layer order."""
+    def _host_kv_from_sub(self, sub: StackState, row: int, plen: int,
+                          start: int = 0):
+        """Host (numpy) copies of one prefilled row's attention KV span
+        ``[start, plen)``, as the per-attention-layer [(k, v), ...]
+        list ``migrate_prompt`` expects, in absolute attention-layer
+        order.  ``start > 0`` extracts one chunk of an in-progress
+        prefill (the pool appends it at the request's current
+        length)."""
         per_layer = []
         for j, kind in enumerate(self.cfg.block_pattern):
             if kind != BlockKind.ATTN:
                 continue
-            k = np.asarray(sub.per_entry[j].k[:, row], np.float32)
-            v = np.asarray(sub.per_entry[j].v[:, row], np.float32)
+            k = np.asarray(sub.per_entry[j].k[:, row, start:plen], np.float32)
+            v = np.asarray(sub.per_entry[j].v[:, row, start:plen], np.float32)
             for g in range(self.cfg.num_groups):
-                per_layer.append((k[g, :plen], v[g, :plen]))
+                per_layer.append((k[g], v[g]))
         # per_layer is grouped by entry then g; reorder to absolute
         # attention-layer order
         ordered = [None] * self.cfg.num_attn_layers
@@ -375,11 +505,10 @@ class Engine:
         log2(2*device_slots) shape pairs for the whole serving run."""
         groups: Dict[int, list] = {}
         for p in placements:
-            blen = 1 << max(p[0].prompt_len - 1, 0).bit_length()
-            groups.setdefault(blen, []).append(p)
+            groups.setdefault(_pow2_ceil(p[0].prompt_len), []).append(p)
         for blen in sorted(groups):
             group = groups[blen]
-            bb = 1 << (len(group) - 1).bit_length()
+            bb = _pow2_ceil(len(group))
             tokens = np.zeros((bb, blen), np.int32)
             plens = np.ones((bb,), np.int32)   # padded rows: discarded
             for j, (req, _, _) in enumerate(group):
@@ -462,7 +591,17 @@ class Engine:
                 req.slot = hslot
                 placements.append((req, "host", hslot))
         if placements:
-            if self._bucketed_prefill:
+            if self._chunked:
+                # PREFILL-in-progress: claim a staging row per
+                # admission; chunks advance inside step()'s fused
+                # device call, never blocking the decode batch
+                for req, tier, s in placements:
+                    row = self._staging.index(None)
+                    req.phase = Phase.PREFILL
+                    self._staging[row] = _InflightPrefill(req=req, tier=tier,
+                                                          slot=s)
+                    self._staging_order.append(row)
+            elif self._bucketed_prefill:
                 self._prefill_batched(placements)
             else:
                 for req, tier, s in placements:
@@ -482,8 +621,11 @@ class Engine:
         if c is not None and c.attn_ptr != -1:
             return c
         # done requests (e.g. clamped to one token, satisfied by the
-        # prefill) retire this step — never enroll them in a journey
-        slot_rids = [rid if rid >= 0 and not self.host_requests[rid].done
+        # prefill) retire this step — never enroll them in a journey;
+        # chunked admissions still mid-prefill aren't decoding yet
+        slot_rids = [rid if rid >= 0
+                     and not self.host_requests[rid].done
+                     and self.host_requests[rid].phase is Phase.DECODE_HOST
                      else -1
                      for rid in (self._host_slot_owner.get(i, -1)
                                  for i in range(self.e.host_slots))]
@@ -529,18 +671,140 @@ class Engine:
         decode_gpu = [r for r in (self.slots[i] for i in active_rows)
                       if r.request_id not in new_ids]
         # mirror the dispatch: done host requests retire this step and
-        # never join a cohort, so the decision must not see them either
-        decode_cpu = [r for r in self.host_requests.values() if not r.done]
-        if not (admitted or decode_gpu or decode_cpu):
+        # never join a cohort — and chunked admissions still mid-prefill
+        # aren't decoding — so the decision must not see them either
+        decode_cpu = [r for r in self.host_requests.values()
+                      if not r.done and r.phase is Phase.DECODE_HOST]
+        # the prefill snapshot: chunked = every in-flight prefill (the
+        # scheduler grants this iteration's chunk budget from the
+        # backlog); whole-prompt = this iteration's admissions
+        if self._chunked:
+            inflight = [self._staging[row] for row in self._staging_order]
+            prefill_q = [e.req for e in inflight]
+            backlog = sum(e.remaining for e in inflight)
+            # chunk-aware scheduler: the granted budget IS the mixed
+            # branch's prefill share (computed inside schedule()).  A
+            # legacy injected scheduler never sees the chunk kwargs, so
+            # approximate the share it should price in with the same
+            # fallback budget step() will actually grant — otherwise
+            # predicted_time omits the chunk work and skews the
+            # calibrator low on every staging iteration.
+            prefill_tokens = 0 if self._sched_chunk_aware else (
+                min(backlog, self._fallback_chunk_budget(active_rows))
+                if inflight else 0)
+        else:
+            prefill_q = admitted
+            backlog = 0
+            prefill_tokens = sum(r.prompt_len for r in admitted)
+        if not (prefill_q or decode_gpu or decode_cpu):
             return None                      # idle iteration: nothing to decide
         contexts = [r.total_len for r in decode_gpu + decode_cpu]
         mean_context = float(np.mean(contexts)) if contexts else 1.0
+        kw = {}
+        if self._sched_chunk_aware:
+            kw = dict(chunk_backlog_tokens=backlog,
+                      chunk_tokens_max=(self.e.chunk_tokens
+                                        if self._chunked else 0))
         decision = self.scheduler.schedule(
-            admitted, decode_gpu, decode_cpu,
+            prefill_q, decode_gpu, decode_cpu,
             mean_context=max(mean_context, 1.0),
-            prefill_tokens=sum(r.prompt_len for r in admitted))
+            prefill_tokens=prefill_tokens, **kw)
         self.stats.record_decision(decision)
         return decision
+
+    # --- chunked-prefill planning -------------------------------------------
+    def _fallback_chunk_budget(self, active_rows: List[int]) -> int:
+        """Chunk budget when no scheduler is wired: the whole backlog
+        while nothing decodes, the knob's cap otherwise."""
+        backlog = sum(self._staging[r].remaining for r in self._staging_order)
+        has_cohort = any(not r.done and r.phase is Phase.DECODE_HOST
+                         for r in self.host_requests.values())
+        if not active_rows and not has_cohort:
+            return backlog
+        return self.e.chunk_tokens
+
+    def _plan_chunks(self, budget: int) -> Optional[_ChunkPlan]:
+        """Assign this iteration's chunk budget over in-flight prefills
+        in admission (FIFO) order; the chunk call is one batched device
+        step over all advancing staging rows, its length padded to a
+        power-of-two bucket so jit retraces stay bounded."""
+        if budget <= 0:
+            return None
+        rows: List[int] = []
+        lens: List[int] = []
+        left = budget
+        for row in self._staging_order:
+            if left <= 0:
+                break
+            c = min(self._staging[row].remaining, left)
+            if c <= 0:
+                continue
+            rows.append(row)
+            lens.append(c)
+            left -= c
+        if not rows:
+            return None
+        cbucket = _pow2_ceil(max(lens))
+        p = len(self._staging)
+        toks = np.zeros((p, cbucket), np.int32)
+        clens = np.zeros((p,), np.int32)
+        for row, c in zip(rows, lens):
+            ent = self._staging[row]
+            toks[row, :c] = ent.req.prompt[ent.consumed:ent.consumed + c]
+            clens[row] = c
+        return _ChunkPlan(rows=rows, lens=lens, tokens=toks, clens=clens)
+
+    def _finish_chunks(self, plan: _ChunkPlan, clogits) -> None:
+        """Post-chunk bookkeeping: stream host-tier chunks' KV into the
+        paged pool, and graduate completed prefills — sample the first
+        token, splice device rows into the shared decode state /
+        activate host rows for the next cohort, free the staging row."""
+        done_rows = [row for row, c in zip(plan.rows, plan.lens)
+                     if self._staging[row].consumed + c
+                     >= self._staging[row].req.prompt_len]
+        toks: Dict[int, int] = {}
+        if done_rows:
+            picked = clogits[jnp.asarray(done_rows)]
+            sampled = np.asarray(sample(picked,
+                                        temperature=self.e.temperature))
+            toks = {row: int(t) for row, t in zip(done_rows, sampled)}
+        now = time.perf_counter()
+        freed: List[int] = []
+        for row, c in zip(plan.rows, plan.lens):
+            ent = self._staging[row]
+            start = ent.consumed
+            ent.consumed += c
+            if ent.tier == "host":
+                # KV streams to the paged pool at chunk granularity —
+                # no whole-prompt migration on completion
+                self._executor.migrate_prompt(
+                    ent.req.request_id,
+                    self._host_kv_from_sub(self._staging_state, row,
+                                           ent.consumed, start=start))
+            if ent.consumed >= ent.req.prompt_len:
+                req = ent.req
+                req.output.append(toks[row])
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                if ent.tier == "device":
+                    self.state = self._splice_jit(
+                        self.state, self._staging_state.per_entry,
+                        jnp.int32(row), jnp.int32(ent.slot),
+                        jnp.int32(req.prompt_len))
+                    req.phase = Phase.DECODE_DEVICE
+                else:
+                    req.phase = Phase.DECODE_HOST
+                    # the cohort picks it up at the next token boundary
+                self._staging[row] = None
+                self._staging_order.remove(row)
+                freed.append(row)
+        if freed:
+            # one batched scatter for every graduated row (a per-row
+            # .at[i].set loop dispatches len(freed) device ops)
+            lengths = self._staging_state.lengths.at[
+                jnp.asarray(freed, jnp.int32)].set(0)
+            self._staging_state = StackState(
+                per_entry=self._staging_state.per_entry, lengths=lengths)
 
     # --- one engine iteration ------------------------------------------------
     def step(self) -> None:
@@ -549,10 +813,18 @@ class Engine:
         # rows whose request already reached max_new_tokens (possible
         # straight out of prefill when the clamp left room for exactly
         # one token) must not ride this iteration's decode batch — they
-        # retire at the end of the step without over-generating
+        # retire at the end of the step without over-generating.
+        # Chunked admissions still mid-prefill aren't decoding either.
         active_rows = [i for i, r in enumerate(self.slots)
-                       if r is not None and not r.done]
+                       if r is not None and not r.done
+                       and r.phase is Phase.DECODE_DEVICE]
         decision = self._schedule(admitted, active_rows)
+        plan = None
+        if self._chunked and self._staging_order:
+            budget = (decision.chunk_tokens
+                      if decision is not None and self._sched_chunk_aware
+                      else self._fallback_chunk_budget(active_rows))
+            plan = self._plan_chunks(budget)
         tokens = np.zeros((self.e.device_slots,), np.int32)
         for i in active_rows:
             tokens[i] = self.slots[i].output[-1]
@@ -568,9 +840,15 @@ class Engine:
             wait = (decision is not None
                     and decision.strategy == StrategyKind.ASYM_PIPELINE)
             self._step_overlap(jnp.asarray(tokens), cohort, active_rows,
-                               wait=wait)
-        elif active_rows:
-            self._step_device_only(jnp.asarray(tokens), active_rows)
+                               wait=wait, plan=plan)
+        elif active_rows or plan is not None:
+            self._step_device_only(jnp.asarray(tokens), active_rows, plan)
+        if plan is not None:
+            self.stats.prefill_chunks += len(plan.rows)
+            self.stats.chunked_prefill_tokens += sum(plan.lens)
+            if active_rows or cohort is not None:
+                self.stats.chunk_co_run_iterations += 1
+            self.stats.prefill_compilations = self._prefill_compiles
         self.stats.iterations += 1
         dt = time.perf_counter() - t0
         self.stats.wall_time += dt
@@ -596,13 +874,32 @@ class Engine:
             if r.first_token_time is None:
                 r.first_token_time = now
 
-    def _step_device_only(self, tokens, active_rows) -> None:
-        logits, self.state, _, _ = self._decode_fn(self.params, tokens,
-                                                   self.state)
+    def _step_device_only(self, tokens, active_rows,
+                          plan: Optional[_ChunkPlan] = None) -> None:
+        if plan is None:
+            logits, self.state, _, _ = self._decode_fn(self.params, tokens,
+                                                       self.state)
+            self._commit_device(logits, active_rows)
+            return
+        if not active_rows:
+            clogits, self._staging_state = self._chunk_jit(
+                self.params, jnp.asarray(plan.tokens),
+                jnp.asarray(plan.clens), self._staging_state)
+            self._finish_chunks(plan, clogits)
+            return
+        # fused step: the decode batch and the prefill chunk compile
+        # and dispatch as ONE device program
+        logits, self.state, _, _, clogits, self._staging_state = \
+            self._decode_chunk_jit(self.params, tokens, self.state,
+                                   jnp.asarray(plan.tokens),
+                                   jnp.asarray(plan.clens),
+                                   self._staging_state)
         self._commit_device(logits, active_rows)
+        self._finish_chunks(plan, clogits)
 
     def _step_overlap(self, tokens, cohort: Cohort, active_rows,
-                      *, wait: bool = False) -> None:
+                      *, wait: bool = False,
+                      plan: Optional[_ChunkPlan] = None) -> None:
         """One hybrid iteration (paper §3.3).
 
         ``wait=False`` — Asynchronous Overlap: poll the pending host
@@ -629,9 +926,18 @@ class Engine:
                 host_idle = ctl.host_io(cohort)._replace(
                     consume_layer=jnp.int32(-1), emit_layer=jnp.int32(-1),
                     window_start=jnp.int32(0), window_end=jnp.int32(0))
-                logits, self.state, _, xf = self._decode_overlap_fn(
-                    self.params, tokens, self.state, host_idle)
+                if plan is not None:
+                    logits, self.state, _, xf, clogits, \
+                        self._staging_state = self._decode_overlap_chunk_jit(
+                            self.params, tokens, self.state, host_idle,
+                            jnp.asarray(plan.tokens), jnp.asarray(plan.clens),
+                            self._staging_state)
+                else:
+                    logits, self.state, _, xf = self._decode_overlap_fn(
+                        self.params, tokens, self.state, host_idle)
                 self._commit_device(logits, active_rows)
+                if plan is not None:
+                    self._finish_chunks(plan, clogits)
                 return
             buf = np.zeros(cohort.attn_in.shape, np.float32)
             buf[np.asarray(valid, np.int64)] = out
@@ -652,8 +958,19 @@ class Engine:
         io = ctl.host_io(cohort)
         emit_layer = ctl.emit_layer(cohort)
         completes = ctl.completes_token(cohort)
-        logits, self.state, qkv, x_final = self._decode_overlap_fn(
-            self.params, tokens, self.state, io)
+        clogits = None
+        if plan is not None:
+            # fused: decode batch + host-cohort ride-along + prefill
+            # chunk in ONE device program — host attention overlaps
+            # the chunk's compute too (the widened rule-3 window)
+            logits, self.state, qkv, x_final, clogits, \
+                self._staging_state = self._decode_overlap_chunk_jit(
+                    self.params, tokens, self.state, io,
+                    jnp.asarray(plan.tokens), jnp.asarray(plan.clens),
+                    self._staging_state)
+        else:
+            logits, self.state, qkv, x_final = self._decode_overlap_fn(
+                self.params, tokens, self.state, io)
         if emit_layer >= 0:
             # submit BEFORE the logits sync in _commit_device: the
             # worker materializes QKV and computes host attention while
@@ -690,6 +1007,18 @@ class Engine:
         for rid in cohort.request_ids:
             self.host_requests[rid].layer_progress = ctl.layer_progress(cohort)
         ctl.advance(cohort)
+        if plan is not None:
+            self._finish_chunks(plan, clogits)
+
+    def _latency_sample(self, r: Request) -> None:
+        """Record TTFT and mean inter-token latency of a retiring
+        request into the stats distributions (p50/p95 accessors)."""
+        if r.arrival_time is None or r.first_token_time is None:
+            return
+        self.stats.ttft_samples.append(r.first_token_time - r.arrival_time)
+        if r.finish_time is not None and len(r.output) > 1:
+            self.stats.itl_samples.append(
+                (r.finish_time - r.first_token_time) / (len(r.output) - 1))
 
     def _retire(self) -> None:
         now = time.perf_counter()
@@ -699,6 +1028,7 @@ class Engine:
                 r.finish_time = now
                 self.admission.release("device", r.kv_reserved)
                 self.slots[i] = None
+                self._latency_sample(r)
         done_hosts = [rid for rid, r in self.host_requests.items() if r.done]
         for rid in done_hosts:
             r = self.host_requests.pop(rid)
@@ -707,6 +1037,7 @@ class Engine:
             self.admission.release("host", r.kv_reserved)
             self._executor.free(rid)
             self._host_slot_owner.pop(r.slot, None)
+            self._latency_sample(r)
         # the cohort rebuilds itself at the next token boundary
         # (_ensure_cohort); completions always leave attn_ptr == -1
 

@@ -64,6 +64,33 @@ def test_prefill_attention_matches_ref(b, t, h, kv, d, bq, bk, causal,
                                atol=tol, rtol=tol)
 
 
+CHUNK_SWEEP = [
+    # (B, T_chunk, S_cache, H, KV, D, BQ, BK)
+    (2, 64, 160, 4, 2, 64, 32, 64),
+    (1, 32, 96, 4, 1, 64, 32, 32),        # MQA, offset near cache end
+]
+
+
+@pytest.mark.parametrize("b,t,s,h,kv,d,bq,bk", CHUNK_SWEEP)
+def test_prefill_attention_chunked_offset_matches_ref(b, t, s, h, kv, d,
+                                                      bq, bk, key):
+    """Chunked prefill: a T-token query chunk at per-row absolute
+    offsets against an S-position KV span (S >= T) must match the
+    oracle — causality on absolute positions, junk cache columns
+    beyond a row's chunk end invisible."""
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, t, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    offset = jax.random.randint(ks[3], (b,), 0, s - t + 1)
+    out = prefill_attention(q, k, v, None, offset, block_q=bq, block_k=bk,
+                            interpret=True)
+    expect = ref.prefill_attention_ref(q, k, v, None, offset)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_prefill_prefix_lm_visibility(key):
     """Prefix tokens must see each other bidirectionally."""
     b, t, h, d = 1, 64, 2, 32

@@ -67,6 +67,44 @@ def test_host_min_ratio_above_threshold_still_pipelines():
     assert "host_min_ratio" in d2.reason
 
 
+def test_chunk_budget_idle_grants_whole_backlog(sched):
+    """Nothing decoding => nothing to stall: the whole prompt backlog
+    prefills at once (the TTFT-optimal admission-burst path)."""
+    assert sched.chunk_budget(0, 0, 1024, backlog=777, cap=64) == 777
+
+
+def test_chunk_budget_caps_under_active_decode(sched):
+    """Device-only decode active: the knob's cap bounds the chunk (and
+    the backlog bounds it from below when smaller)."""
+    assert sched.chunk_budget(4, 0, 1024, backlog=10_000, cap=64) == 64
+    assert sched.chunk_budget(4, 0, 1024, backlog=5, cap=64) == 5
+
+
+def test_chunk_budget_targets_host_window(sched):
+    """With a live host cohort the chunk is the smallest power of two
+    whose predicted mixed-iteration device time covers the cohort's
+    one-layer host attention — never above the cap."""
+    c = sched.chunk_budget(4, 8, 1024, backlog=10_000, cap=256)
+    assert 1 <= c <= 256 and (c & (c - 1)) == 0
+    t = sched.perf_model.timings(4, 1024, prefill_tokens=c)
+    t_host = sched.perf_model.t_catt(8, 1024, layers=1)
+    # the window covers the host job (or the cap bound)
+    assert t.t_glinear_pref + t.t_gatt_pref >= t_host or c == 256
+
+
+def test_decision_carries_chunk_tokens(sched):
+    """schedule() with a chunk backlog evaluates the mixed branch at
+    the granted chunk and surfaces it in Decision.chunk_tokens."""
+    d = sched.schedule(["p"], list(range(8)), [], mean_context=256,
+                       chunk_backlog_tokens=500, chunk_tokens_max=32)
+    assert d.chunk_tokens == 32
+    assert d.strategy == StrategyKind.GPU_ONLY     # no host rows
+    # legacy call path keeps chunk_tokens at 0
+    d2 = sched.schedule(["p"], list(range(8)), [], mean_context=256,
+                        prefill_tokens=500)
+    assert d2.chunk_tokens == 0
+
+
 def test_rule4_partial_progress_prioritized(sched):
     class R:
         def __init__(self, p):
