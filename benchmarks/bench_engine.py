@@ -8,9 +8,15 @@ Measures, on the container's CPU backend:
   * ``prefill`` — admission over many distinct prompt lengths: jit
     compile count (bucketing bounds it), mean admission latency, and
     p50/p95 time-to-first-token / inter-token latency.
+  * ``preemption`` (all modes) — mixed-priority arrivals with the host
+    pool too small for the urgent prompt: reports urgent TTFT p95 with
+    and without preemptive admission plus ``deadline_misses`` (the CI
+    smoke gate asserts zero, and >= 1 preemption).
   * ``long_context`` (full mode) — a long prompt arriving mid-decode:
     chunked prefill must co-run with decode (``chunk_co_run_iterations``
-    > 0) instead of stalling it; reports decode progress during the
+    > 0) instead of stalling it, and a host-tier long must migrate to a
+    freed device slot (``migrations`` >= 1, tokens bit-identical to a
+    rebalancing-disabled run); reports decode progress during the
     prefill window.
   * ``asym_heavy`` (full mode) — 1 device slot vs a large host cohort
     at long context: the regime where Algorithm 1 leans hybrid; reports
@@ -113,9 +119,14 @@ def bench_decode(cfg, params, *, smoke: bool, host_workers: int) -> dict:
     the profiler never land in the timed window."""
     n_req = 6 if smoke else 10
     out_len = 8 if smoke else 32
+    # tier_rebalance pinned off: this scenario MEASURES the host tier
+    # (overlap efficiency = host busy / wall), and rebalancing would
+    # deliberately drain host residents into freed device slots —
+    # migration behaviour has its own long_context/preemption metrics
     ecfg = _engine_config(device_slots=2, host_slots=n_req, cache_len=128,
                           page_size=32, host_pool_pages=512,
-                          perf_model="analytic", host_workers=host_workers)
+                          perf_model="analytic", host_workers=host_workers,
+                          tier_rebalance=False)
     eng = Engine(cfg, params, ecfg)
     rng = np.random.default_rng(0)
     protos = [make_synthetic_request(rng, prompt_len=12, output_len=out_len,
@@ -144,6 +155,13 @@ def bench_decode(cfg, params, *, smoke: bool, host_workers: int) -> dict:
         "host_tokens": eng.stats.host_tokens - h0,
         "async_overlap_iterations": overlap,
         "host_workers_resolved": resolved_workers,
+        # lifecycle counters (rebalance pinned off here, so migrations
+        # stay 0 by construction; occupancy is the utilization signal)
+        "migrations": getattr(eng.stats, "migrations", 0),
+        "preemptions": getattr(eng.stats, "preemptions", 0),
+        "deadline_misses": getattr(eng.stats, "deadline_misses", 0),
+        "device_occupancy": getattr(eng.stats, "device_occupancy", None),
+        "host_occupancy": getattr(eng.stats, "host_occupancy", None),
         **_lat(eng.stats, prefix="decode_"),
     }
 
@@ -179,47 +197,149 @@ def bench_prefill(cfg, params, *, smoke: bool, host_workers: int) -> dict:
 
 
 def bench_long_context(cfg, params, *, host_workers: int) -> dict:
-    """The decode stall chunked prefill kills: long prompts arrive
-    while short requests are decoding.  Reports how far decode advanced
+    """The decode stall chunked prefill kills, plus tier rebalancing:
+    long prompts arrive while short requests are decoding; one long
+    lands on the host tier and must visibly migrate to a device slot
+    once the shorts retire (migrations >= 1), with tokens bit-identical
+    to a rebalancing-disabled run.  Reports how far decode advanced
     during the prefill window and the chunk co-run count."""
-    ecfg = _engine_config(device_slots=4, host_slots=4, cache_len=512,
-                          perf_model="analytic", host_workers=host_workers,
-                          chunk_tokens=32)
-    eng = Engine(cfg, params, ecfg)
     rng = np.random.default_rng(2)
-    try:
-        short = [make_synthetic_request(rng, prompt_len=8, output_len=64,
-                                        vocab=cfg.vocab_size)
-                 for _ in range(3)]
-        eng.run(short, max_iterations=3)             # shorts decoding
-        longs = [make_synthetic_request(rng, prompt_len=192, output_len=8,
-                                        vocab=cfg.vocab_size)
-                 for _ in range(2)]
-        before = sum(len(r.output) for r in short)
-        it0 = eng.stats.iterations
-        t0 = time.perf_counter()
-        for r in longs:
-            eng.submit(r)
-        while any(r.first_token_time is None for r in longs) \
-                and eng.stats.iterations < it0 + 500:
-            eng.step()
-        prefill_window_s = time.perf_counter() - t0
-        window_iters = eng.stats.iterations - it0
-        decode_tokens_during = sum(len(r.output) for r in short) - before
-        while eng.has_work and eng.stats.iterations < it0 + 2000:
-            eng.step()
-    finally:
-        eng.shutdown()
+    short_protos = [make_synthetic_request(rng, prompt_len=8, output_len=24,
+                                           vocab=cfg.vocab_size)
+                    for _ in range(3)]
+    long_protos = [make_synthetic_request(rng, prompt_len=192, output_len=48,
+                                          vocab=cfg.vocab_size)
+                   for _ in range(2)]
+
+    def run(rebalance: bool) -> dict:
+        ecfg = _engine_config(device_slots=4, host_slots=4, cache_len=512,
+                              perf_model="analytic",
+                              host_workers=host_workers, chunk_tokens=32,
+                              tier_rebalance=rebalance)
+        eng = Engine(cfg, params, ecfg)
+        try:
+            short = _fresh(short_protos)
+            longs = _fresh(long_protos)
+            eng.run(short, max_iterations=3)         # shorts decoding
+            before = sum(len(r.output) for r in short)
+            it0 = eng.stats.iterations
+            t0 = time.perf_counter()
+            for r in longs:
+                eng.submit(r)
+            while any(r.first_token_time is None for r in longs) \
+                    and eng.stats.iterations < it0 + 500:
+                eng.step()
+            prefill_window_s = time.perf_counter() - t0
+            window_iters = eng.stats.iterations - it0
+            decode_during = sum(len(r.output) for r in short) - before
+            while eng.has_work and eng.stats.iterations < it0 + 4000:
+                eng.step()
+        finally:
+            eng.shutdown()
+        return {
+            "outputs": [list(r.output) for r in short + longs],
+            "prefill_window_s": prefill_window_s,
+            "prefill_window_iterations": window_iters,
+            "decode_tokens_during_prefill": decode_during,
+            "chunk_co_run_iterations": getattr(eng.stats,
+                                               "chunk_co_run_iterations", 0),
+            "prefill_chunks": getattr(eng.stats, "prefill_chunks", 0),
+            "migrations": getattr(eng.stats, "migrations", 0),
+            "lat": _lat(eng.stats),
+        }
+
+    with_rb = run(rebalance=True)
+    without_rb = run(rebalance=False)
     return {
         "long_prompt_len": 192,
-        "chunk_tokens": getattr(ecfg, "chunk_tokens", 0),
-        "prefill_window_s": prefill_window_s,
-        "prefill_window_iterations": window_iters,
-        "decode_tokens_during_prefill": decode_tokens_during,
-        "chunk_co_run_iterations": getattr(eng.stats,
-                                           "chunk_co_run_iterations", 0),
-        "prefill_chunks": getattr(eng.stats, "prefill_chunks", 0),
-        **_lat(eng.stats),
+        "chunk_tokens": 32,
+        "prefill_window_s": with_rb["prefill_window_s"],
+        "prefill_window_iterations": with_rb["prefill_window_iterations"],
+        "decode_tokens_during_prefill":
+            with_rb["decode_tokens_during_prefill"],
+        "chunk_co_run_iterations": with_rb["chunk_co_run_iterations"],
+        "prefill_chunks": with_rb["prefill_chunks"],
+        # tier rebalancing: a host-tier long must migrate to a freed
+        # device slot, and migration must be bit-invisible in tokens
+        "migrations": with_rb["migrations"],
+        "tokens_bit_identical_to_no_rebalance":
+            with_rb["outputs"] == without_rb["outputs"],
+        **with_rb["lat"],
+    }
+
+
+def bench_preemption(cfg, params, *, smoke: bool, host_workers: int) -> dict:
+    """SLO-aware preemptive admission: urgent long-context requests
+    (priority 1, TTFT deadline) arrive while low-priority jobs hold
+    every device slot and the host pool is too small to take the
+    urgent prompt.  Without preemption the urgent request queues until
+    a device resident finishes; with preemption a low-priority
+    resident is demoted to the paged pool and the urgent request takes
+    its slot.  Reports urgent TTFT p95 both ways plus deadline misses
+    (the CI smoke gate asserts zero with preemption on)."""
+    n_low = 2
+    out_low = 16 if smoke else 48
+    n_urgent = 1 if smoke else 2
+    deadline = 60.0
+    rng = np.random.default_rng(5)
+    low_protos = [make_synthetic_request(rng, prompt_len=12,
+                                         output_len=out_low,
+                                         vocab=cfg.vocab_size)
+                  for _ in range(2 * n_low)]
+    urgent_protos = [make_synthetic_request(rng, prompt_len=200,
+                                            output_len=8,
+                                            vocab=cfg.vocab_size,
+                                            deadline=deadline, priority=1)
+                     for _ in range(n_urgent)]
+
+    def run(preemption: bool) -> dict:
+        # pool sized so a low-priority context fits (ceil(28/32) pages
+        # x layers) but the 200-token urgent prompt cannot — the host
+        # tier is no escape hatch, preemption is the only fast path
+        ecfg = _engine_config(device_slots=n_low, host_slots=4,
+                              cache_len=256, page_size=32,
+                              host_pool_pages=16, perf_model="analytic",
+                              host_workers=host_workers,
+                              preemption=preemption)
+        eng = Engine(cfg, params, ecfg)
+        try:
+            outputs = []
+            for phase in ("warmup", "timed"):   # warmup amortizes jit
+                lows = _fresh(low_protos)
+                urgents = [Request(prompt=list(r.prompt),
+                                   max_new_tokens=r.max_new_tokens,
+                                   deadline=r.deadline, priority=r.priority)
+                           for r in urgent_protos]
+                eng.run(lows[:n_low], max_iterations=4)  # lows decoding
+                for r in urgents:
+                    eng.submit(r)
+                eng.run(lows[n_low:], max_iterations=4000)
+                outputs = [list(r.output) for r in lows + urgents]
+            ttfts = [r.first_token_time - r.arrival_time for r in urgents
+                     if r.first_token_time is not None]
+        finally:
+            eng.shutdown()
+        return {
+            "urgent_ttft_p95_ms": (1e3 * float(np.percentile(ttfts, 95))
+                                   if ttfts else None),
+            "urgent_ttft_mean_ms": (1e3 * float(np.mean(ttfts))
+                                    if ttfts else None),
+            "preemptions": getattr(eng.stats, "preemptions", 0),
+            "deadline_misses": getattr(eng.stats, "deadline_misses", 0),
+            "outputs": outputs,
+        }
+
+    on = run(preemption=True)
+    off = run(preemption=False)
+    return {
+        "urgent_requests": n_urgent,
+        "deadline_s": deadline,
+        "urgent_ttft_p95_ms_with_preemption": on["urgent_ttft_p95_ms"],
+        "urgent_ttft_p95_ms_without_preemption": off["urgent_ttft_p95_ms"],
+        "preemptions": on["preemptions"],
+        "deadline_misses": on["deadline_misses"],
+        "tokens_bit_identical_to_no_preemption":
+            on["outputs"] == off["outputs"],
     }
 
 
@@ -227,9 +347,12 @@ def bench_asym_heavy(cfg, params, *, host_workers: int) -> dict:
     """1 device slot vs a large host cohort at long context — the
     regime where Algorithm 1 leans hybrid.  Reports the strategy mix."""
     n_host = 8
+    # rebalance pinned off for the same reason as bench_decode: this
+    # scenario measures the hybrid strategy mix at a fixed cohort
     ecfg = _engine_config(device_slots=1, host_slots=n_host, cache_len=256,
                           page_size=32, host_pool_pages=1024,
-                          perf_model="analytic", host_workers=host_workers)
+                          perf_model="analytic", host_workers=host_workers,
+                          tier_rebalance=False)
     eng = Engine(cfg, params, ecfg)
     rng = np.random.default_rng(3)
     reqs = [make_synthetic_request(rng, prompt_len=96, output_len=12,
@@ -277,9 +400,11 @@ def bench_arrival_sweep(cfg, params, *, host_workers: int) -> dict:
     return sweep
 
 
-def check_regression(decode: dict) -> int:
+def check_regression(decode: dict, preempt: dict) -> int:
     """CI gate: fail on a >REGRESSION_TOLERANCE drop vs the committed
-    smoke baseline on decode throughput or overlap efficiency."""
+    smoke baseline on decode throughput or overlap efficiency, or on
+    any deadline miss in the smoke preemption sub-scenario (urgent
+    requests carry a generous TTFT SLO that preemption must keep)."""
     failures = []
     for key, base in SMOKE_BASELINE.items():
         got = decode.get(key)
@@ -287,6 +412,13 @@ def check_regression(decode: dict) -> int:
         if got is None or got < floor:
             failures.append(f"{key}: {got} < {floor:.3g} "
                             f"(baseline {base}, tol {REGRESSION_TOLERANCE})")
+    misses = preempt.get("deadline_misses")
+    if misses != 0:
+        failures.append(f"deadline_misses: {misses} != 0 in the smoke "
+                        f"preemption sub-scenario")
+    if preempt.get("preemptions", 0) < 1:
+        failures.append("preemptions: expected >= 1 in the smoke "
+                        "preemption sub-scenario")
     if failures:
         print("REGRESSION GATE FAILED:")
         for f in failures:
@@ -294,7 +426,9 @@ def check_regression(decode: dict) -> int:
         return 1
     print(f"regression gate OK (tolerance {REGRESSION_TOLERANCE:.0%}): "
           + ", ".join(f"{k}={decode[k]:.3g} vs baseline {v}"
-                      for k, v in SMOKE_BASELINE.items()))
+                      for k, v in SMOKE_BASELINE.items())
+          + f"; preemption deadline_misses=0 "
+            f"(preemptions={preempt.get('preemptions')})")
     return 0
 
 
@@ -328,7 +462,11 @@ def main() -> None:
                           host_workers=args.host_workers)
     prefill = bench_prefill(cfg, params, smoke=args.smoke,
                             host_workers=args.host_workers)
-    scenarios = {}
+    # the preemption sub-scenario runs in smoke mode too: the CI gate
+    # asserts zero deadline misses (and >= 1 preemption) there
+    preempt = bench_preemption(cfg, params, smoke=args.smoke,
+                               host_workers=args.host_workers)
+    scenarios = {"preemption": preempt}
     if not args.smoke:
         scenarios["long_context"] = bench_long_context(
             cfg, params, host_workers=args.host_workers)
@@ -392,9 +530,18 @@ def main() -> None:
         lc = scenarios["long_context"]
         print(f"  long_context: {lc['decode_tokens_during_prefill']} decode "
               f"tokens during prefill, "
-              f"{lc['chunk_co_run_iterations']} co-run iterations")
+              f"{lc['chunk_co_run_iterations']} co-run iterations, "
+              f"{lc['migrations']} migrations (bit-identical: "
+              f"{lc['tokens_bit_identical_to_no_rebalance']})")
+    def _ms(v):
+        return "n/a" if v is None else f"{v:.0f}ms"
+    print(f"  preemption: urgent TTFT p95 "
+          f"{_ms(preempt['urgent_ttft_p95_ms_with_preemption'])} with vs "
+          f"{_ms(preempt['urgent_ttft_p95_ms_without_preemption'])} "
+          f"without ({preempt['preemptions']} preemptions, "
+          f"{preempt['deadline_misses']} deadline misses)")
     if args.check:
-        sys.exit(check_regression(decode))
+        sys.exit(check_regression(decode, preempt))
 
 
 if __name__ == "__main__":

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import host_paged_attention_numpy
-from repro.models.config import ModelConfig
+from repro.models.config import BlockKind, ModelConfig
 from repro.models.kv_cache import PagedKVPool
 from repro.models.transformer import HostIO
 
@@ -134,6 +134,30 @@ class OverlapController:
         return (a[cohort.attn_ptr + 1]
                 if cohort.attn_ptr + 1 < len(a) else self.num_layers)
 
+    def build_cohort(self, emb: jnp.ndarray, slot_rids: List[int],
+                     last_tokens: Sequence[int],
+                     positions: Sequence[int]) -> Optional[Cohort]:
+        """Assemble a fresh token-boundary cohort from per-slot
+        membership: ``slot_rids[i] = -1`` marks an empty host slot,
+        and ``last_tokens``/``positions`` carry the valid slots'
+        in-flight token state.  Returns None for an all-empty set."""
+        if all(r < 0 for r in slot_rids):
+            return None
+        bc = len(slot_rids)
+        valid_mask = np.asarray([r >= 0 for r in slot_rids], bool)
+        # one stacked gather for the whole cohort (a per-row .at[i].set
+        # loop dispatches bc separate device ops); empty rows stay zero
+        x_carry = jnp.where(
+            jnp.asarray(valid_mask)[:, None],
+            jnp.take(emb, jnp.asarray(np.asarray(last_tokens, np.int32)),
+                     axis=0),
+            jnp.zeros((), emb.dtype)).astype(emb.dtype)
+        return Cohort(
+            slot_rids=list(slot_rids),
+            positions=np.asarray(positions, np.int64), x_carry=x_carry,
+            attn_in=jnp.zeros((bc, self.cfg.num_heads,
+                               self.cfg.resolved_head_dim), jnp.float32))
+
 
 @dataclasses.dataclass
 class _Job:
@@ -145,6 +169,41 @@ class _Job:
     v: Any                           #               happens in the worker
     positions: np.ndarray            # (n,) token positions of valid rows
     rows: Optional[np.ndarray]       # (n,) valid row indices into q/k/v
+
+
+def stack_row_kv_to_pool_layers(cfg: ModelConfig, state: Any, row: int,
+                                plen: int, start: int = 0) -> List[tuple]:
+    """Host (numpy) copies of one state row's attention-KV span
+    ``[start, plen)``, as the per-attention-layer [(k, v), ...] list
+    ``HostExecutor.migrate_prompt`` expects, in absolute
+    attention-layer order.
+
+    ``state`` is any ``StackState``-shaped object (the engine's shared
+    decode state or its chunked-prefill staging state); ``start > 0``
+    extracts one chunk of an in-progress prefill.  This is the gather
+    side of every device→host KV move: post-prefill migration, chunk
+    streaming, and decode-time preemption.
+    """
+    per_layer = []
+    for j, kind in enumerate(cfg.block_pattern):
+        if kind != BlockKind.ATTN:
+            continue
+        k = np.asarray(state.per_entry[j].k[:, row, start:plen], np.float32)
+        v = np.asarray(state.per_entry[j].v[:, row, start:plen], np.float32)
+        for g in range(cfg.num_groups):
+            per_layer.append((k[g], v[g]))
+    # per_layer is grouped by entry then g; reorder to absolute
+    # attention-layer order
+    ordered: List[Any] = [None] * cfg.num_attn_layers
+    idx = 0
+    for j, kind in enumerate(cfg.block_pattern):
+        if kind != BlockKind.ATTN:
+            continue
+        for g in range(cfg.num_groups):
+            abs_layer = g * cfg.pattern_period + j
+            ordered[cfg.attn_layer_indices.index(abs_layer)] = per_layer[idx]
+            idx += 1
+    return ordered
 
 
 def _as_f32(a) -> np.ndarray:
@@ -264,6 +323,15 @@ class HostExecutor:
         for li, (k, v) in enumerate(per_layer_kv):
             self.pool.write_prompt(request_id, li, _as_f32(k), _as_f32(v),
                                    advance=(li == n_layers - 1))
+
+    def gather_request(self, request_id: int) -> List[tuple]:
+        """Materialize a resident request's full per-attention-layer
+        [(K, V), ...] from the paged pool (dense attention-layer
+        order) — the gather side of a host→device migration.  Safe
+        only when no in-flight job can touch this request's chains
+        (the engine migrates at cohort token boundaries)."""
+        return [self.pool.gather(request_id, li)
+                for li in range(self.cfg.num_attn_layers)]
 
     def free(self, request_id: int) -> None:
         self.pool.free(request_id)

@@ -154,6 +154,14 @@ class AnalyticPerfModel:
         p = self.platform
         return n_bytes / p.link_bw + p.link_latency
 
+    def t_migrate(self, n_tokens: int) -> float:
+        """Tier-migration cost: a request's whole cached KV span
+        (every attention layer) crossing the device<->host link once —
+        charged against rebalance/preemption decisions by the
+        ``TierPlacer`` and the simulator alike."""
+        return self.t_transfer(max(n_tokens, 0)
+                               * self.costs.kv_bytes_per_pos)
+
     # --- rates (paper notation) ---------------------------------------------
     def n_g(self, context: float) -> float:
         """Device attention rate: KV positions scanned per second."""
@@ -237,6 +245,10 @@ class TablePerfModel:
 
     def t_transfer(self, n_bytes: float) -> float:
         return self._eval("transfer", n_bytes)
+
+    def t_migrate(self, n_tokens: int) -> float:
+        """Measured-table twin of ``AnalyticPerfModel.t_migrate``."""
+        return self.t_transfer(max(n_tokens, 0) * self.kv_bytes_per_pos)
 
     def t_prefill(self, n_tokens: int, context: float) -> float:
         return self._eval("prefill", n_tokens)

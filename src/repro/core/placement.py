@@ -1,0 +1,97 @@
+"""Tier placement and rebalancing predicates (NEO's load-aware rule).
+
+APEX's premise is that placement across heterogeneous tiers should be
+dynamic: a request parked on the slow host tier should move back when
+a device slot frees up *and the move pays for itself*.  NEO
+(arXiv:2411.01142) frames the rule as drain-time balancing — the slow
+tier must never become the makespan bottleneck — and HeteGen makes the
+same case for dynamic placement under memory pressure.
+
+This module is the ONE home of those predicates.  Both consumers —
+the discrete-event simulator (``repro.serving.simulator``) and the
+real engine's ``TierPlacer`` (``repro.serving.lifecycle``) — call the
+same functions, so the simulator cannot silently drift from what the
+engine actually does.  The functions are pure: callers supply the
+queue depths, headrooms and per-token time estimates (the engine from
+the ``OnlineCalibrator``'s corrected timings, the simulator from its
+analytic platform), and get a decision back.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+
+def _remaining(req: Any) -> int:
+    """Decode tokens a request still owes."""
+    return max(int(req.max_new_tokens) - len(req.output), 0)
+
+
+def should_rebalance_to_device(*, waiting: int, device_slot_free: bool,
+                               device_kv_headroom: int, need_tokens: int,
+                               remaining_tokens: int,
+                               migration_cost: float = 0.0,
+                               device_s_per_token: Optional[float] = None,
+                               host_s_per_token: Optional[float] = None
+                               ) -> bool:
+    """Host→device migration predicate (the simulator's ``rebalance``
+    rule, shared with the engine).
+
+    Structural gate first: the device must have *idle* capacity — a
+    free slot, KV headroom for the request's full demand, and no
+    waiting admissions that would claim it (new arrivals keep the
+    GPU-first right of way).  Then the drain-time model: migrating
+    pays off iff the predicted decode-time saving over the request's
+    remaining tokens exceeds the one-shot KV transfer cost.  Callers
+    without per-token estimates (no perf model wired) fall back to the
+    structural idle-capacity rule alone.
+    """
+    if waiting > 0 or not device_slot_free:
+        return False
+    if need_tokens > device_kv_headroom or remaining_tokens <= 0:
+        return False
+    if device_s_per_token is None or host_s_per_token is None:
+        return True
+    saving = remaining_tokens * (host_s_per_token - device_s_per_token)
+    return saving > migration_cost
+
+
+def pick_rebalance_candidate(host_requests: Sequence[Any]) -> Optional[Any]:
+    """The host resident worth moving first: the one with the most
+    remaining decode tokens (largest stake in the fast tier — the
+    simulator's historical choice, now shared)."""
+    live = [r for r in host_requests if _remaining(r) > 0]
+    if not live:
+        return None
+    return max(live, key=_remaining)
+
+
+def should_preempt(urgent_priority: int, victim_priority: int) -> bool:
+    """Preemption is strictly priority-ordered: an urgent request may
+    displace only a strictly lower-priority resident (equal priorities
+    never churn)."""
+    return urgent_priority > victim_priority
+
+
+def pick_preemption_victim(residents: Sequence[Any], *,
+                           urgent_priority: int) -> Optional[Any]:
+    """The device resident to demote for an urgent admission: lowest
+    priority first, cheapest KV to move (shortest context) on ties.
+    None when no resident is strictly lower-priority."""
+    eligible = [r for r in residents
+                if should_preempt(urgent_priority, getattr(r, "priority", 0))]
+    if not eligible:
+        return None
+    return min(eligible,
+               key=lambda r: (getattr(r, "priority", 0), r.total_len))
+
+
+def deadline_impossible(*, elapsed: float, deadline: Optional[float],
+                        predicted_ttft: float) -> bool:
+    """Admission backpressure: True when a request's TTFT deadline
+    cannot be met even if it were admitted *right now* (time already
+    burned in the queue plus the model-predicted prefill exceeds the
+    SLO).  Rejecting here beats admitting doomed work that would only
+    steal capacity from requests that can still make their deadlines."""
+    if deadline is None:
+        return False
+    return elapsed + predicted_ttft > deadline

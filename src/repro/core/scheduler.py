@@ -88,10 +88,20 @@ class ApexScheduler:
         if chunk_tokens_max > 0 and chunk_backlog_tokens > 0:
             # Chunked prefill: this iteration's fused chunk budget IS
             # the mixed branch's prefill share — size it from the perf
-            # model (below) and evaluate rule 3 at that share.
+            # model (below) and evaluate rule 3 at that share.  An
+            # urgent prefill (elevated priority) takes the TTFT-first
+            # cap instead of the host-window-minimal chunk: shaving
+            # the chunk to the cohort's attention window would stretch
+            # an SLO-bound prompt over backlog/chunk extra iterations.
+            # A deadline alone does NOT trigger this — operators stamp
+            # loose default SLOs on whole workloads, and disabling the
+            # window sizing for all of them would silently cost the
+            # overlap efficiency the chunk rule exists to protect.
+            urgent = any(getattr(r, "priority", 0) > 0 for r in prefill)
             chunk = self.chunk_budget(
                 len(decode_gpu), len(decode_cpu), mean_context,
-                backlog=chunk_backlog_tokens, cap=chunk_tokens_max)
+                backlog=chunk_backlog_tokens, cap=chunk_tokens_max,
+                urgent=urgent)
             prefill_tokens = chunk
         t = self.perf_model.timings(batch, mean_context,
                                     prefill_tokens=prefill_tokens)
@@ -142,7 +152,8 @@ class ApexScheduler:
 
     # --- chunked-prefill budget ------------------------------------------
     def chunk_budget(self, n_gpu: int, n_cpu: int, mean_context: float,
-                     *, backlog: int, cap: int) -> int:
+                     *, backlog: int, cap: int,
+                     urgent: bool = False) -> int:
         """Per-iteration prefill chunk budget (tokens).
 
         With nothing decoding there is nothing to stall: grant the
@@ -160,6 +171,11 @@ class ApexScheduler:
         if n_gpu == 0 and n_cpu == 0:
             return backlog
         budget = cap
+        if urgent:
+            # SLO-bound prefill: the cap (the operator's latency/
+            # throughput trade-off) applies directly — never shave
+            # below it for host-window overlap
+            return max(1, min(budget, backlog))
         if n_cpu > 0:
             t_catt = getattr(self.perf_model, "t_catt", None)
             if t_catt is not None:
@@ -242,3 +258,20 @@ class AdmissionController:
             self.device_used = max(0, self.device_used - tokens)
         elif tier == "host":
             self.host_used = max(0, self.host_used - tokens)
+
+    def headroom(self, tier: str) -> int:
+        """Unclaimed KV budget on a tier — the placement signal the
+        ``TierPlacer`` steers rebalancing/preemption by."""
+        if tier == "device":
+            return self.device_kv_budget_tokens - self.device_used
+        return self.host_kv_budget_tokens - self.host_used
+
+    def transfer(self, src: str, dst: str, tokens: int) -> None:
+        """Move a resident request's claim between tiers (host→device
+        migration / device→host preemption).  Capacity on ``dst`` must
+        be checked by the caller (``headroom``) before the KV move."""
+        self.release(src, tokens)
+        if dst == "device":
+            self.device_used += tokens
+        elif dst == "host":
+            self.host_used += tokens

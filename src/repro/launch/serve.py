@@ -65,6 +65,19 @@ def main() -> None:
                          "decode is active (0 = whole-prompt prefill "
                          "before decode)")
     ap.add_argument("--no-offload", action="store_true")
+    ap.add_argument("--no-tier-rebalance", action="store_true",
+                    help="disable host→device migration when device "
+                         "slots free up (see docs/serving_api.md "
+                         "'Request lifecycle, migration, and SLOs')")
+    ap.add_argument("--no-preemption", action="store_true",
+                    help="disable SLO-aware preemptive admission "
+                         "(urgent requests demoting low-priority "
+                         "device residents to the host tier)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="TTFT deadline (seconds from arrival) stamped "
+                         "on every generated request; impossible "
+                         "deadlines are rejected at admission, late "
+                         "first tokens count as deadline_misses")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress the per-token stream of request 0")
     args = ap.parse_args()
@@ -77,6 +90,8 @@ def main() -> None:
         host_workers=args.host_workers,
         bucketed_prefill=not args.no_bucketed_prefill,
         chunk_tokens=args.chunk_tokens,
+        tier_rebalance=not args.no_tier_rebalance,
+        preemption=not args.no_preemption, deadline=args.deadline,
         platform=args.platform, perf_model=args.perf_model,
         profile_cache=args.profile_cache,
         workload=None if args.workload in (None, "synthetic")
@@ -141,6 +156,14 @@ def main() -> None:
               f"({stats.chunked_prefill_tokens} tokens), "
               f"{stats.chunk_co_run_iterations} iterations co-ran "
               f"with decode")
+    print(f"lifecycle: {stats.migrations} migrations, "
+          f"{stats.preemptions} preemptions; occupancy "
+          f"device={stats.device_occupancy:.2f}/{scfg.device_slots} "
+          f"host={stats.host_occupancy:.2f}/{scfg.host_slots}")
+    if stats.deadline_misses or stats.deadline_rejections:
+        print(f"SLO: {stats.deadline_misses} deadline misses, "
+              f"{stats.deadline_rejections} impossible-deadline "
+              f"rejections")
     if stats.host_busy_time:
         print(f"host attention busy: {stats.host_busy_time:.2f}s "
               f"({100 * stats.host_busy_time / wall:.0f}% of wall — "

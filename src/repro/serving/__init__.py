@@ -1,5 +1,7 @@
 from repro.serving.api import InferenceServer, RequestHandle, ServerConfig
 from repro.serving.engine import Engine, EngineConfig, EngineStats
+from repro.serving.lifecycle import (AdmissionQueue, RequestLifecycle,
+                                     TierPlacer)
 from repro.serving.request import Phase, Request
 from repro.serving.simulator import (ServingSimulator, SimConfig, SimResult,
                                      compare_schedulers)

@@ -63,6 +63,18 @@ class ServerConfig:
     # before decode (the pre-chunking behaviour).  See
     # docs/serving_api.md "Chunked prefill".
     chunk_tokens: int = 64
+    # --- request lifecycle (docs/serving_api.md "Request lifecycle,
+    # migration, and SLOs") -----------------------------------------
+    # host→device migration when a device slot frees and the shared
+    # drain-time predicate (repro.core.placement) says it pays off
+    tier_rebalance: bool = True
+    # SLO-aware preemptive admission: urgent requests may demote a
+    # strictly lower-priority device resident to the host tier
+    preemption: bool = True
+    # default TTFT deadline (seconds from arrival) stamped onto
+    # build_requests() workloads; None = no SLO.  Per-request
+    # deadlines passed to submit() override this.
+    deadline: Optional[float] = None
     # --- Algorithm-1 scheduler ------------------------------------------
     # perf-model spec (repro.core.perf_model.PerfModelProvider):
     # "analytic" | "analytic:<platform>" | "measured" | "file:<path>".
@@ -116,13 +128,20 @@ class ServerConfig:
                     rng, self.arrival_rate, self.num_requests)
                 for r, a in zip(reqs, offsets):
                     r.arrival_time = a
-            return reqs
+            return self._stamp_slo(reqs)
         reqs = workloads.generate(
             self.workload, num_requests=self.num_requests, vocab=vocab,
             arrival_rate=self.arrival_rate, seed=self.seed)
         for r in reqs:   # cap trace lengths to the engine's cache
             r.prompt = r.prompt[:prompt_cap]
             r.max_new_tokens = min(r.max_new_tokens, output_cap)
+        return self._stamp_slo(reqs)
+
+    def _stamp_slo(self, reqs: List[Request]) -> List[Request]:
+        if self.deadline is not None:
+            for r in reqs:
+                if r.deadline is None:
+                    r.deadline = self.deadline
         return reqs
 
 
@@ -210,14 +229,27 @@ class InferenceServer:
 
     # --- submission ----------------------------------------------------------
     def submit(self, request: Union[Request, Sequence[int]],
-               max_new_tokens: Optional[int] = None) -> RequestHandle:
+               max_new_tokens: Optional[int] = None, *,
+               deadline: Optional[float] = None,
+               priority: int = 0) -> RequestHandle:
         """Submit a Request (or a raw token prompt); arrival is stamped
-        now unless the request already carries a wall-clock stamp."""
+        now unless the request already carries a wall-clock stamp.
+
+        ``deadline`` is a TTFT SLO in seconds from arrival (admission
+        rejects it outright when it is already impossible);
+        ``priority`` orders the admission queue and — with
+        ``ServerConfig.preemption`` — lets the request demote a
+        strictly lower-priority device resident.  Both apply only when
+        constructing the request from a raw prompt; a ``Request``
+        instance carries its own."""
         if not isinstance(request, Request):
             request = Request(prompt=[int(t) for t in request],
                               max_new_tokens=(self.config.output_len
                                               if max_new_tokens is None
-                                              else max_new_tokens))
+                                              else max_new_tokens),
+                              deadline=(deadline if deadline is not None
+                                        else self.config.deadline),
+                              priority=priority)
         if request.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {request.max_new_tokens} "

@@ -1,38 +1,40 @@
-"""Online serving engine — real execution of the APEX design.
+"""Online serving engine — execution orchestrator of the APEX design.
 
-Wires together: admission (GPU-first, rule 1, via the shared
-``AdmissionController``), the Algorithm-1 scheduler, the Asynchronous
-Overlap runtime (OverlapController + HostExecutor thread) and the
-jitted model step functions.  On TPU the device tier is the chip mesh;
-on this container it is the jax CPU backend while the host tier is the
-threaded numpy executor — the *structure* (async dispatch of the
-device step overlapping host attention) is identical.
-
-Every iteration snapshots the three queues (prefill admitted this
-step, device decodes, host decodes with rule-4 ``layer_progress``) and
-runs ``ApexScheduler.schedule`` against the profiled performance
-model.  The returned ``Decision`` picks the execution variant:
+The engine owns *execution*: the jitted model step functions, the
+Asynchronous Overlap runtime (OverlapController + HostExecutor), KV
+movement between tiers, and the per-iteration dispatch of the
+Algorithm-1 ``Decision``:
 
   * ``GPU_ONLY``       — device-only decode (no host-designated rows).
-  * ``ASYNC_OVERLAP``  — deferred synchronization: the host job from
-    the previous iteration is *polled*; if late, host rows ride along
-    untouched (the §3.4 GPU re-check) and never stall the device.
-  * ``ASYM_PIPELINE``  — executed at engine granularity as the
-    two-sub-step variant: device sub-step k emits the cohort's QKV,
-    host attention is *synchronized* (blocking) before sub-step k+1
-    consumes it — host attention sits between consecutive device
-    sub-steps, on the critical path, guaranteeing one cohort layer of
-    progress per cycle (the paper's per-layer interleaved variant
-    lives in the simulator).
+  * ``ASYNC_OVERLAP``  — deferred sync: the previous iteration's host
+    job is *polled*; late host rows ride along (the §3.4 re-check).
+  * ``ASYM_PIPELINE``  — two-sub-step variant: host attention is
+    *synchronized* (blocking) between consecutive device sub-steps.
 
-Static-shape discipline: one decode compile per (device_slots,
-host_slots) pair; inactive rows ride along masked.  Both hybrid
-variants are exact — host rows emit bit-identical tokens to a
-device-resident run (tests/test_overlap.py enforces this).
+Everything about *which request is where, and why* lives in
+``repro.serving.lifecycle``: the per-request state machine, the
+priority/EDF admission queue with SLO backpressure, and the
+``TierPlacer`` that re-evaluates placement every iteration.  The
+engine executes the placer's decisions:
+
+  * **host→device migration** — when a device slot frees and the
+    drain-time predicate (shared with the simulator through
+    ``repro.core.placement``) says it pays off, a host resident's
+    paged KV is gathered, uploaded into the freed slot, and decode
+    continues on-device; an in-flight host *prefill* retargets by pure
+    bookkeeping (its KV already lives in the staging state).
+  * **device→host preemption** — an urgent admission may demote a
+    strictly lower-priority device resident: its contiguous KV is
+    demoted to the paged pool and the cohort picks it up at the next
+    token boundary.
+
+Both moves are exact (bit-identical tokens to a never-migrating run,
+tests/test_lifecycle.py) and costed through the perf model's
+``t_migrate`` term.  Static-shape discipline is unchanged: one
+decode compile per (device_slots, host_slots) pair.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional
 
@@ -40,186 +42,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.overlap_engine import Cohort, HostExecutor, OverlapController
+from repro.core.overlap_engine import (Cohort, HostExecutor,
+                                       OverlapController,
+                                       stack_row_kv_to_pool_layers)
 from repro.core.perf_model import OnlineCalibrator, resolve_perf_model
 from repro.core.scheduler import (AdmissionController, ApexScheduler,
                                   Decision, StrategyKind)
-from repro.models import (ModelParams, decode_step,
+from repro.models import (HostIO, ModelParams, decode_step,
                           decode_with_chunked_prefill, init_decode_state,
-                          prefill, prefill_bucketed, prefill_chunk)
+                          prefill_bucketed, prefill_chunk)
 from repro.models.config import BlockKind, ModelConfig
 from repro.models.kv_cache import PagedKVPool, StackState
+from repro.serving.lifecycle import (ChunkPlan, EngineConfig, EngineStats,
+                                     RequestLifecycle, TierPlacer, reject,
+                                     transition)
+from repro.serving.prefill_exec import (finish_chunks, prefill_batched,
+                                        prefill_into_slot, prefill_to_host)
 from repro.serving.request import Phase, Request
 from repro.serving.sampler import sample
+from repro.serving.tiermove import (demote_slot_to_host_row,
+                                    upload_host_kv_to_slot)
 
-
-@dataclasses.dataclass
-class EngineConfig:
-    device_slots: int = 8
-    host_slots: int = 8
-    cache_len: int = 256
-    page_size: int = 32
-    host_pool_pages: int = 512
-    max_queue: int = 1024
-    temperature: float = 0.0
-    # host-tier parallelism: worker threads sharding each host-attention
-    # job's cohort rows (0 = auto: cpu_count - 1, leaving a core for the
-    # device dispatch thread)
-    host_workers: int = 0
-    # bucketed/batched prefill fast path (attention-only stacks): prompt
-    # lengths padded to powers of two so jit retraces stay <=
-    # log2(cache_len), same-bucket admissions prefilled in one device
-    # call.  Hybrid (recurrent) stacks always take the exact
-    # per-request path regardless of this flag.
-    bucketed_prefill: bool = True
-    # chunked prefill co-scheduled with decode: prompts advance in
-    # token-budgeted chunks INSIDE the continuous-batching loop (one
-    # fused device step runs the decode batch and one prefill chunk),
-    # so decode never stalls behind a long prompt.  ``chunk_tokens`` is
-    # the per-iteration budget cap while decode is active; the
-    # scheduler may grant less (sizing the chunk to the host-attention
-    # window) or more (the whole backlog when nothing is decoding).
-    # 0 disables chunking (whole-prompt prefill before decode, the
-    # pre-chunking behaviour); hybrid/recurrent stacks and
-    # ``bucketed_prefill=False`` fall back to whole-prompt regardless.
-    chunk_tokens: int = 64
-    # offload policy: fraction of device KV that must be claimed before
-    # requests go to the host tier (GPU-first rule)
-    enable_offload: bool = True
-    # Algorithm-1 scheduling: the perf-model spec resolved by
-    # PerfModelProvider ("analytic" | "analytic:<platform>" |
-    # "measured" | "file:<path>"), the platform backing the analytic
-    # specs, and the §4.2 knobs passed to ApexScheduler.  "measured"
-    # runs the OfflineProfiler once at engine startup (loading/saving
-    # profile_cache when set); the resolved model is wrapped in an
-    # OnlineCalibrator that refines it from observed iteration timings.
-    perf_model: str = "analytic"
-    profile_cache: Optional[str] = None
-    profile_grid: Optional[Dict[str, tuple]] = None
-    platform: str = "a10"
-    host_min_ratio: float = 0.0
-    max_pipeline_sub_batch: int = 256
-    use_scheduler: bool = True
-    # optional KV-budget overrides for the AdmissionController; None
-    # derives them from slot capacity (then the structural constraints
-    # — free slot, paged pool — bind first).  Set tighter values to
-    # throttle admission below the engine's physical capacity.
-    device_kv_budget_tokens: Optional[int] = None
-    host_kv_budget_tokens: Optional[int] = None
-
-
-def _pow2_ceil(n: int) -> int:
-    """Smallest power of two >= n (the prefill/chunk bucket rule)."""
-    return 1 << max(n - 1, 0).bit_length()
-
-
-@dataclasses.dataclass
-class _InflightPrefill:
-    """One admission advancing chunk-by-chunk through the staging state."""
-
-    req: Request
-    tier: str                        # "device" | "host"
-    slot: int                        # device slot / host slot index
-    consumed: int = 0                # prompt tokens already prefilled
-
-    @property
-    def remaining(self) -> int:
-        return self.req.prompt_len - self.consumed
-
-
-@dataclasses.dataclass
-class _ChunkPlan:
-    """This iteration's chunk assignment over staging rows."""
-
-    rows: List[int]                  # staging rows advancing (FIFO order)
-    lens: List[int]                  # real tokens granted per row
-    tokens: np.ndarray               # (P, C) right-padded chunk tokens
-    clens: np.ndarray                # (P,) per-row chunk length (0 = idle)
-
-
-@dataclasses.dataclass
-class EngineStats:
-    device_tokens: int = 0
-    host_tokens: int = 0
-    iterations: int = 0
-    wall_time: float = 0.0
-    # resolved host-tier worker count the HostExecutor actually runs
-    # with (the config knob may be 0 = auto); 0 when offload is off
-    host_workers: int = 0
-    # host-executor busy split: compute (KV append + paged attention)
-    # vs device->host QKV transfer; busy = compute + transfer.  Only
-    # the compute share feeds the calibrator's t_catt correction.
-    host_busy_time: float = 0.0
-    host_transfer_time: float = 0.0
-    # jit traces taken by the bucketed/chunked prefill fast paths
-    # (power-of-two chunk buckets bound them to a few x log2(cache_len)
-    # for the whole serving run; 0 when the engine uses the exact
-    # per-request path)
-    prefill_compilations: int = 0
-    # chunked prefill: chunks executed, prompt tokens prefilled through
-    # chunks, and iterations where a chunk co-ran with active decode
-    # work (device rows or a host cohort) in one fused device step
-    prefill_chunks: int = 0
-    chunked_prefill_tokens: int = 0
-    chunk_co_run_iterations: int = 0
-    # latency distributions over retired requests: time-to-first-token
-    # and per-request mean inter-token latency (seconds)
-    ttft_samples: List[float] = dataclasses.field(default_factory=list)
-    itl_samples: List[float] = dataclasses.field(default_factory=list)
-    # per-iteration Algorithm-1 outcomes: StrategyKind.value -> count
-    strategy_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
-    last_decision: Optional[Decision] = None
-    # scheduling accuracy: per-iteration model-predicted step times vs
-    # the measured wall time of those same (decided) iterations, plus
-    # the OnlineCalibrator's EWMA of the per-step relative error
-    perf_model_spec: str = ""
-    predicted_time: float = 0.0
-    observed_time: float = 0.0
-    step_error_ewma: Optional[float] = None
-
-    def record_decision(self, decision: Decision) -> None:
-        key = decision.strategy.value
-        self.strategy_counts[key] = self.strategy_counts.get(key, 0) + 1
-        self.last_decision = decision
-
-    @property
-    def throughput(self) -> float:
-        return (self.device_tokens + self.host_tokens) / max(self.wall_time,
-                                                             1e-9)
-
-    @staticmethod
-    def _pct(samples: List[float], q: float) -> Optional[float]:
-        if not samples:
-            return None
-        return float(np.percentile(np.asarray(samples, float), q))
-
-    @property
-    def ttft_p50(self) -> Optional[float]:
-        return self._pct(self.ttft_samples, 50)
-
-    @property
-    def ttft_p95(self) -> Optional[float]:
-        return self._pct(self.ttft_samples, 95)
-
-    @property
-    def itl_p50(self) -> Optional[float]:
-        return self._pct(self.itl_samples, 50)
-
-    @property
-    def itl_p95(self) -> Optional[float]:
-        return self._pct(self.itl_samples, 95)
-
-    @property
-    def prediction_error(self) -> Optional[float]:
-        """Aggregate |predicted - observed| / observed over decided
-        iterations (None until the first decision lands).  Includes
-        one-off jit-compile iterations by construction — it is the true
-        total gap; ``step_error_ewma`` is the outlier-robust view of
-        current scheduling accuracy."""
-        if self.observed_time <= 0.0:
-            return None
-        return abs(self.predicted_time - self.observed_time) \
-            / self.observed_time
+__all__ = ["Engine", "EngineConfig", "EngineStats"]
 
 
 class Engine:
@@ -235,9 +79,6 @@ class Engine:
             cfg, device_batch=self.e.device_slots,
             host_batch=self.e.host_slots if self.e.enable_offload else 0,
             cache_len=self.e.cache_len)
-        self.slots: List[Optional[Request]] = [None] * self.e.device_slots
-        self.queue: List[Request] = []
-        self.host_requests: Dict[int, Request] = {}
         self.stats = EngineStats()
         self.scheduler = scheduler
         self._calibrator: Optional[OnlineCalibrator] = None
@@ -271,12 +112,20 @@ class Engine:
         self.admission = AdmissionController(
             device_kv_budget_tokens=device_budget,
             host_kv_budget_tokens=host_budget)
+        # the request-lifecycle subsystem: state machine, priority/EDF
+        # admission queue, and the per-iteration tier placer steering
+        # migration/preemption off the calibrator's corrected timings
+        placer = TierPlacer(
+            admission=self.admission, perf_model=self._calibrator,
+            iters_per_host_token=cfg.num_attn_layers + 1)
+        self.lc = RequestLifecycle(self.e, stats=self.stats, placer=placer)
         self._decode_fn = jax.jit(
             lambda p, tok, st: decode_step(p, cfg, tok, st))
         # bucketed/batched prefill is exact only when no recurrent state
         # can fold padded positions in (see models.prefill_bucketed)
-        self._bucketed_prefill = self.e.bucketed_prefill and all(
-            kind == BlockKind.ATTN for kind in cfg.block_pattern)
+        self._hybrid = any(kind != BlockKind.ATTN
+                           for kind in cfg.block_pattern)
+        self._bucketed_prefill = self.e.bucketed_prefill and not self._hybrid
         self._prefill_compiles = 0
         self._prefill_jit = jax.jit(self._prefill_traced)
         self._splice_jit = jax.jit(self._splice_device_row,
@@ -285,8 +134,6 @@ class Engine:
         # same contract as bucketing (attention-only stacks), so it
         # shares the gate; chunk_tokens == 0 turns it off explicitly
         self._chunked = self.e.chunk_tokens > 0 and self._bucketed_prefill
-        self._staging: List[Optional[_InflightPrefill]] = []
-        self._staging_order: List[int] = []      # rows in admission order
         if self._chunked:
             # one staging row per admissible request: prompts prefill
             # here chunk-by-chunk, then splice (device) / finish
@@ -295,7 +142,7 @@ class Engine:
                 self.e.host_slots if self.e.enable_offload else 0)
             self._staging_state = init_decode_state(
                 cfg, device_batch=n_staging, cache_len=self.e.cache_len)
-            self._staging = [None] * n_staging
+            self.lc.staging = [None] * n_staging
             self._chunk_jit = jax.jit(self._chunk_traced,
                                       donate_argnums=(3,))
             self._decode_chunk_jit = jax.jit(self._decode_chunk_traced,
@@ -315,7 +162,7 @@ class Engine:
             # executor) — what the host tier actually runs with
             self.stats.host_workers = self._executor.workers
             self._cohort: Optional[Cohort] = None
-            self._host_slot_owner: Dict[int, int] = {}   # slot -> request_id
+            self._idle_io: Optional[HostIO] = None
             self._pending_job: Optional[int] = None
             self._pending_host_pred = 0.0   # predicted time of pending job
             self._host_compute_seen = 0.0   # executor compute_time watermark
@@ -323,20 +170,31 @@ class Engine:
             self._decode_overlap_fn = jax.jit(
                 lambda p, tok, st, host: decode_step(p, cfg, tok, st, host))
 
-    # ------------------------------------------------------------------
+    # --- lifecycle views ---------------------------------------------------
+    @property
+    def queue(self):
+        return self.lc.queue
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        return self.lc.slots
+
+    @property
+    def host_requests(self) -> Dict[int, Request]:
+        return self.lc.host_requests
+
+    @property
+    def has_work(self) -> bool:
+        return self.lc.has_work
+
     def submit(self, request: Request) -> None:
-        if request.arrival_time is None:
-            request.arrival_time = time.perf_counter()
-        request.phase = Phase.QUEUED
-        self.queue.append(request)
+        self.lc.submit(request)
 
     @staticmethod
     def reject(request: Request, reason: str) -> None:
         """Fail a request without admitting it: Phase.FINISHED with
         ``error`` set (surfaced as RequestHandle.failed)."""
-        request.error = reason
-        request.phase = Phase.FINISHED
-        request.finish_time = time.perf_counter()
+        reject(request, reason)
 
     @staticmethod
     def prompt_reject_reason(prompt_len: int,
@@ -351,12 +209,6 @@ class Engine:
             return None
         return (f"prompt of {prompt_len} tokens does not fit "
                 f"cache_len={cache_len} with room to generate")
-
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.slots):
-            if r is None:
-                return i
-        return None
 
     # --- prefill ----------------------------------------------------------
     def _prefill_traced(self, params: ModelParams, tokens, plens):
@@ -401,216 +253,128 @@ class Engine:
             state.lengths, plen.astype(state.lengths.dtype), slot, axis=0)
         return StackState(per_entry=new_entries, lengths=lengths)
 
-    def _prefill_into_slot(self, req: Request, slot: int) -> None:
-        """Per-request prefill on device into this slot of the shared
-        state (the exact path hybrid/recurrent stacks require)."""
-        req.phase = Phase.PREFILL
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        sub = init_decode_state(self.cfg, device_batch=1,
-                                cache_len=self.e.cache_len)
-        logits, sub = prefill(self.params, self.cfg, {"tokens": prompt}, sub)
-        tok = int(sample(logits, temperature=self.e.temperature)[0])
-        req.output.append(tok)
-        if req.first_token_time is None:
-            req.first_token_time = time.perf_counter()
-        # splice the single-row state into the shared batch state — the
-        # same row-assignment works for every entry kind (attention KV
-        # and recurrent states share the batch-axis layout)
-        new_entries = [
-            jax.tree.map(lambda big, small: big.at[:, slot].set(small[:, 0]),
-                         entry, sub.per_entry[j])
-            for j, entry in enumerate(self.state.per_entry)
-        ]
-        lengths = self.state.lengths.at[slot].set(req.prompt_len)
-        self.state = StackState(per_entry=tuple(new_entries), lengths=lengths)
-        self.slots[slot] = req
-        req.slot = slot
-        req.phase = Phase.DECODE_DEVICE
-
-    def _free_host_slot(self) -> Optional[int]:
-        for i in range(self.e.host_slots):
-            if i not in self._host_slot_owner:
-                return i
-        return None
-
-    def _host_kv_from_sub(self, sub: StackState, row: int, plen: int,
-                          start: int = 0):
-        """Host (numpy) copies of one prefilled row's attention KV span
-        ``[start, plen)``, as the per-attention-layer [(k, v), ...]
-        list ``migrate_prompt`` expects, in absolute attention-layer
-        order.  ``start > 0`` extracts one chunk of an in-progress
-        prefill (the pool appends it at the request's current
-        length)."""
-        per_layer = []
-        for j, kind in enumerate(self.cfg.block_pattern):
-            if kind != BlockKind.ATTN:
-                continue
-            k = np.asarray(sub.per_entry[j].k[:, row, start:plen], np.float32)
-            v = np.asarray(sub.per_entry[j].v[:, row, start:plen], np.float32)
-            for g in range(self.cfg.num_groups):
-                per_layer.append((k[g], v[g]))
-        # per_layer is grouped by entry then g; reorder to absolute
-        # attention-layer order
-        ordered = [None] * self.cfg.num_attn_layers
-        idx = 0
-        for j, kind in enumerate(self.cfg.block_pattern):
-            if kind != BlockKind.ATTN:
-                continue
-            for g in range(self.cfg.num_groups):
-                abs_layer = g * self.cfg.pattern_period + j
-                ordered[self.cfg.attn_layer_indices.index(abs_layer)] = \
-                    per_layer[idx]
-                idx += 1
-        return ordered
-
-    def _prefill_to_host(self, req: Request, host_slot: int) -> None:
-        """Per-request prefill on device, migrating attention KV to the
-        host pool (paper §3.1: device prefills; host owns decode
-        attention).  Recurrent (Mamba/xLSTM) states stay ON-DEVICE,
-        spliced into the unified state's host row — only attention
-        stalls on the host."""
-        req.phase = Phase.PREFILL
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        sub = init_decode_state(self.cfg, device_batch=1,
-                                cache_len=self.e.cache_len)
-        logits, sub = prefill(self.params, self.cfg, {"tokens": prompt}, sub)
-        tok = int(sample(logits, temperature=self.e.temperature)[0])
-        req.output.append(tok)
-        if req.first_token_time is None:
-            req.first_token_time = time.perf_counter()
-        row = self.e.device_slots + host_slot
-        new_entries = []
-        for j, entry in enumerate(self.state.per_entry):
-            if self.cfg.block_pattern[j] == BlockKind.ATTN:
-                new_entries.append(entry)   # host rows hold no device KV
-            else:
-                new_entries.append(jax.tree.map(
-                    lambda big, small: big.at[:, row].set(small[:, 0]),
-                    entry, sub.per_entry[j]))
-        self.state = StackState(per_entry=tuple(new_entries),
-                                lengths=self.state.lengths)
-        self._executor.migrate_prompt(
-            req.request_id, self._host_kv_from_sub(sub, 0, req.prompt_len))
-        self.host_requests[req.request_id] = req
-        self._host_slot_owner[host_slot] = req.request_id
-        req.slot = host_slot
-        req.phase = Phase.DECODE_HOST
-        # the cohort picks the new member up at the next token boundary
-
-    def _prefill_batched(self, placements) -> None:
-        """The prefill fast path (attention-only stacks): bucket prompt
-        lengths to powers of two and prefill each bucket's admissions
-        in ONE jitted device call.  Batch sizes are power-of-two padded
-        too, so jit retraces stay bounded by log2(cache_len) x
-        log2(2*device_slots) shape pairs for the whole serving run."""
-        groups: Dict[int, list] = {}
-        for p in placements:
-            groups.setdefault(_pow2_ceil(p[0].prompt_len), []).append(p)
-        for blen in sorted(groups):
-            group = groups[blen]
-            bb = _pow2_ceil(len(group))
-            tokens = np.zeros((bb, blen), np.int32)
-            plens = np.ones((bb,), np.int32)   # padded rows: discarded
-            for j, (req, _, _) in enumerate(group):
-                req.phase = Phase.PREFILL
-                tokens[j, :req.prompt_len] = req.prompt
-                plens[j] = req.prompt_len
-            logits, sub = self._prefill_jit(self.params, jnp.asarray(tokens),
-                                            jnp.asarray(plens))
-            toks = np.asarray(sample(logits, temperature=self.e.temperature))
-            now = time.perf_counter()
-            for j, (req, tier, slot) in enumerate(group):
-                req.output.append(int(toks[j]))
-                if req.first_token_time is None:
-                    req.first_token_time = now
-                if tier == "device":
-                    self.state = self._splice_jit(
-                        self.state, sub.per_entry, jnp.int32(j),
-                        jnp.int32(slot), jnp.int32(req.prompt_len))
-                    req.phase = Phase.DECODE_DEVICE
-                else:
-                    self._executor.migrate_prompt(
-                        req.request_id,
-                        self._host_kv_from_sub(sub, j, req.prompt_len))
-                    req.phase = Phase.DECODE_HOST
-
-    # --- admission (rule 1: GPU-first) --------------------------------------
+    # --- admission (rule 1: GPU-first + SLO backpressure) -------------------
     def _admit(self) -> List[Request]:
-        """Admit queued requests through the shared AdmissionController:
-        KV budgets and engine slot availability are one placement
-        decision.  Placement reserves slots/budgets first; prefill runs
-        after, so same-bucket admissions batch into one device call on
-        the fast path.  Returns the requests prefilled this iteration
-        (the scheduler's prefill snapshot)."""
-        placements: List[tuple] = []     # (req, tier, slot)
-        while self.queue:
-            req = self.queue[0]
-            reason = self.prompt_reject_reason(req.prompt_len,
-                                               self.e.cache_len)
-            if reason is not None:
-                # no room to generate even one token: rejecting here
-                # beats silently admitting degenerate work (a clamp
-                # would yield max_new_tokens <= 0 yet claim a slot)
-                self.reject(self.queue.pop(0), reason)
-                continue
-            if req.prompt_len + req.max_new_tokens >= self.e.cache_len:
-                req.max_new_tokens = self.e.cache_len - req.prompt_len - 1
-            need = req.kv_demand()
-            slot = self._free_slot()
-            hslot = self._free_host_slot() if self.e.enable_offload else None
-            tier = self.admission.place(
-                need, device_ok=slot is not None,
-                host_ok=(hslot is not None
-                         and self._executor.pool.can_admit(need)))
-            if tier is None:
-                break
-            req = self.queue.pop(0)
-            req.tier = tier
-            req.kv_reserved = need
-            if tier == "device":
-                self.slots[slot] = req          # reserve before prefill
-                req.slot = slot
-                placements.append((req, "device", slot))
-            else:
-                # reserve host slot, pool chains and request map now so
-                # later placements in this round see them taken
-                try:
-                    self._executor.pool.allocate(req.request_id,
-                                                 req.prompt_len)
-                except MemoryError:
-                    # can_admit is advisory: an in-flight host job
-                    # extended a chain between the check and this
-                    # reservation — undo the budget claim, retry later
-                    self.admission.release("host", need)
-                    req.tier = None
-                    req.kv_reserved = 0
-                    self.queue.insert(0, req)
-                    break
-                self._host_slot_owner[hslot] = req.request_id
-                self.host_requests[req.request_id] = req
-                req.slot = hslot
-                placements.append((req, "host", hslot))
+        """Admit queued requests through the lifecycle subsystem:
+        KV budgets, slot availability, deadline backpressure and
+        preemption are one placement decision.  Returns the requests
+        placed this iteration (the scheduler's prefill snapshot)."""
+        demote = None
+        if self.e.preemption and self._executor is not None:
+            demote = self._preempt_to_host
+        placements = self.lc.admit(
+            pool=self._executor.pool if self._executor is not None else None,
+            demote=demote, prompt_reject_reason=self.prompt_reject_reason)
         if placements:
             if self._chunked:
-                # PREFILL-in-progress: claim a staging row per
-                # admission; chunks advance inside step()'s fused
-                # device call, never blocking the decode batch
-                for req, tier, s in placements:
-                    row = self._staging.index(None)
-                    req.phase = Phase.PREFILL
-                    self._staging[row] = _InflightPrefill(req=req, tier=tier,
-                                                          slot=s)
-                    self._staging_order.append(row)
+                self.lc.stage(placements)
             elif self._bucketed_prefill:
-                self._prefill_batched(placements)
+                prefill_batched(self, placements)
             else:
                 for req, tier, s in placements:
                     if tier == "device":
-                        self._prefill_into_slot(req, s)
+                        prefill_into_slot(self, req, s)
                     else:
-                        self._prefill_to_host(req, s)
+                        prefill_to_host(self, req, s)
             self.stats.prefill_compilations = self._prefill_compiles
         return [p[0] for p in placements]
+
+    # --- tier moves (the placer decides; the engine moves the KV) ----------
+    def _migrate_host_to_device(self, req: Request, slot: int) -> None:
+        """Promote a host resident into a freed device slot: gather its
+        paged KV through the executor, upload into the slot's
+        contiguous cache, and splice recurrent-state rows (hybrids)
+        from the host row.  Runs only at cohort token boundaries (or
+        for requests outside the in-flight cohort), so no host job can
+        touch the chains mid-gather."""
+        transition(req, Phase.MIGRATING)
+        n = self._executor.pool.lengths[req.request_id]
+        self.state = upload_host_kv_to_slot(
+            self.cfg, self.state, self._executor.gather_request(
+                req.request_id), slot, n,
+            host_row=self.e.device_slots + req.slot)
+        self._executor.free(req.request_id)
+        self.lc.note_migrated(req, slot)
+
+    def _retarget_staging(self, req: Request, slot: int) -> None:
+        """Mid-prefill host→device retarget: the staging row's KV
+        already lives on device, so the move is pure bookkeeping —
+        free the pool chains holding the already-streamed chunks and
+        flip the entry's tier; completion will splice into the device
+        slot instead of activating a host row."""
+        ent = next(self.lc.staging[row] for row in self.lc.staging_order
+                   if self.lc.staging[row].req is req)
+        transition(req, Phase.MIGRATING)
+        self._executor.free(req.request_id)
+        self.lc.note_migrated(req, slot, to_prefill=True)
+        ent.tier = "device"
+        ent.slot = slot
+
+    def _rebalance(self) -> None:
+        """Host→device tier rebalancing (NEO's load-aware rule in the
+        real engine): promote host residents into freed device slots
+        while the shared drain-time predicate says each move pays off.
+        Cohort members move only at token boundaries (mid-journey
+        attention state cannot migrate)."""
+        if not (self.e.tier_rebalance and self._executor is not None):
+            return
+        lc = self.lc
+        while True:
+            slot = lc.free_slot()
+            if slot is None or lc.queue:
+                return
+            boundary = self._cohort is None or self._cohort.attn_ptr == -1
+            mid_journey = (set(self._cohort.slot_rids)
+                           if self._cohort is not None and not boundary
+                           else set())
+            candidates = [r for r in lc.decoding_hosts()
+                          if r.request_id not in mid_journey]
+            if self._chunked:
+                candidates += [lc.staging[row].req
+                               for row in lc.staging_order
+                               if lc.staging[row].tier == "host"]
+            cand = lc.placer.rebalance_candidate(
+                candidates, waiting=len(lc.queue), device_slot_free=True,
+                device_batch=sum(r is not None for r in lc.slots))
+            if cand is None:
+                return
+            if cand.phase is Phase.PREFILL:
+                self._retarget_staging(cand, slot)
+            else:
+                self._migrate_host_to_device(cand, slot)
+
+    def _preempt_to_host(self, urgent: Request) -> Optional[int]:
+        """Demote the placer-chosen lowest-priority device resident to
+        the host tier (the inverse migration: contiguous KV demoted to
+        the paged pool, recurrent state spliced into the host row) and
+        return its freed device slot; None when preemption cannot
+        help the urgent request."""
+        lc = self.lc
+        hslot = lc.free_host_slot()
+        residents = [r for r in lc.slots
+                     if r is not None and not r.done
+                     and r.phase is Phase.DECODE_DEVICE]
+        victim = lc.placer.preemption_victim(
+            residents, urgent=urgent, host_slot_free=hslot is not None,
+            pool_ok=self._executor.pool.can_admit)
+        if victim is None:
+            return None
+        slot = victim.slot
+        n = victim.total_len - 1           # cached positions in the slot
+        try:
+            self._executor.pool.allocate(victim.request_id, n)
+        except MemoryError:
+            return None                    # advisory can_admit lost a race
+        transition(victim, Phase.PREEMPTED)
+        self._executor.migrate_prompt(
+            victim.request_id,
+            stack_row_kv_to_pool_layers(self.cfg, self.state, slot, n))
+        self.state = demote_slot_to_host_row(
+            self.cfg, self.state, slot,
+            host_row=self.e.device_slots + hslot)
+        self.lc.note_preempted(victim, hslot)
+        # the cohort picks the demoted request up at the next boundary
+        return slot
 
     # --- cohort management ------------------------------------------------
     def _ensure_cohort(self) -> Optional[Cohort]:
@@ -623,37 +387,20 @@ class Engine:
         # done requests (e.g. clamped to one token, satisfied by the
         # prefill) retire this step — never enroll them in a journey;
         # chunked admissions still mid-prefill aren't decoding yet
+        hosts = self.lc.host_requests
         slot_rids = [rid if rid >= 0
-                     and not self.host_requests[rid].done
-                     and self.host_requests[rid].phase is Phase.DECODE_HOST
+                     and not hosts[rid].done
+                     and hosts[rid].phase is Phase.DECODE_HOST
                      else -1
-                     for rid in (self._host_slot_owner.get(i, -1)
+                     for rid in (self.lc.host_slot_owner.get(i, -1)
                                  for i in range(self.e.host_slots))]
-        if all(r < 0 for r in slot_rids):
-            self._cohort = None
-            return None
-        bc = self.e.host_slots
-        emb = self.params.embedding["embed"]
-        positions = np.zeros((bc,), np.int64)
-        last_tokens = np.zeros((bc,), np.int32)
-        valid_mask = np.zeros((bc,), bool)
-        for i, rid in enumerate(slot_rids):
-            if rid < 0:
-                continue
-            r = self.host_requests[rid]
-            last_tokens[i] = r.output[-1]
-            valid_mask[i] = True
-            positions[i] = r.total_len - 1
-        # one stacked gather for the whole cohort (a per-row .at[i].set
-        # loop dispatches bc separate device ops); empty rows stay zero
-        x_carry = jnp.where(
-            jnp.asarray(valid_mask)[:, None],
-            jnp.take(emb, jnp.asarray(last_tokens), axis=0),
-            jnp.zeros((), emb.dtype)).astype(emb.dtype)
-        self._cohort = Cohort(
-            slot_rids=slot_rids, positions=positions, x_carry=x_carry,
-            attn_in=jnp.zeros((bc, self.cfg.num_heads,
-                               self.cfg.resolved_head_dim), jnp.float32))
+        last_tokens = [hosts[rid].output[-1] if rid >= 0 else 0
+                       for rid in slot_rids]
+        positions = [hosts[rid].total_len - 1 if rid >= 0 else 0
+                     for rid in slot_rids]
+        self._cohort = self._overlap.build_cohort(
+            self.params.embedding["embed"], slot_rids, last_tokens,
+            positions)
         return self._cohort
 
     # --- Algorithm 1 ---------------------------------------------------------
@@ -662,26 +409,10 @@ class Engine:
         """Build queue snapshots and run Algorithm 1 for this iteration."""
         if self.scheduler is None:
             return None
-        # Device requests admitted this iteration are the prefill
-        # queue, not decodes.  Host requests stay in decode_cpu even
-        # when just admitted: at engine granularity their cohort decode
-        # runs in this same step, and the strategy choice must see them
-        # (decode_cpu empty <=> GPU_ONLY must match the dispatch).
-        new_ids = {r.request_id for r in admitted}
-        decode_gpu = [r for r in (self.slots[i] for i in active_rows)
-                      if r.request_id not in new_ids]
-        # mirror the dispatch: done host requests retire this step and
-        # never join a cohort — and chunked admissions still mid-prefill
-        # aren't decoding — so the decision must not see them either
-        decode_cpu = [r for r in self.host_requests.values()
-                      if not r.done and r.phase is Phase.DECODE_HOST]
-        # the prefill snapshot: chunked = every in-flight prefill (the
-        # scheduler grants this iteration's chunk budget from the
-        # backlog); whole-prompt = this iteration's admissions
+        prefill_q, decode_gpu, decode_cpu, backlog = \
+            self.lc.schedule_snapshots(admitted, active_rows,
+                                       chunked=self._chunked)
         if self._chunked:
-            inflight = [self._staging[row] for row in self._staging_order]
-            prefill_q = [e.req for e in inflight]
-            backlog = sum(e.remaining for e in inflight)
             # chunk-aware scheduler: the granted budget IS the mixed
             # branch's prefill share (computed inside schedule()).  A
             # legacy injected scheduler never sees the chunk kwargs, so
@@ -691,10 +422,8 @@ class Engine:
             # calibrator low on every staging iteration.
             prefill_tokens = 0 if self._sched_chunk_aware else (
                 min(backlog, self._fallback_chunk_budget(active_rows))
-                if inflight else 0)
+                if prefill_q else 0)
         else:
-            prefill_q = admitted
-            backlog = 0
             prefill_tokens = sum(r.prompt_len for r in admitted)
         if not (prefill_q or decode_gpu or decode_cpu):
             return None                      # idle iteration: nothing to decide
@@ -716,118 +445,33 @@ class Engine:
     def _fallback_chunk_budget(self, active_rows: List[int]) -> int:
         """Chunk budget when no scheduler is wired: the whole backlog
         while nothing decodes, the knob's cap otherwise."""
-        backlog = sum(self._staging[r].remaining for r in self._staging_order)
-        has_cohort = any(not r.done and r.phase is Phase.DECODE_HOST
-                         for r in self.host_requests.values())
-        if not active_rows and not has_cohort:
-            return backlog
+        if not active_rows and not self.lc.decoding_hosts():
+            return self.lc.staging_backlog()
         return self.e.chunk_tokens
-
-    def _plan_chunks(self, budget: int) -> Optional[_ChunkPlan]:
-        """Assign this iteration's chunk budget over in-flight prefills
-        in admission (FIFO) order; the chunk call is one batched device
-        step over all advancing staging rows, its length padded to a
-        power-of-two bucket so jit retraces stay bounded."""
-        if budget <= 0:
-            return None
-        rows: List[int] = []
-        lens: List[int] = []
-        left = budget
-        for row in self._staging_order:
-            if left <= 0:
-                break
-            c = min(self._staging[row].remaining, left)
-            if c <= 0:
-                continue
-            rows.append(row)
-            lens.append(c)
-            left -= c
-        if not rows:
-            return None
-        cbucket = _pow2_ceil(max(lens))
-        p = len(self._staging)
-        toks = np.zeros((p, cbucket), np.int32)
-        clens = np.zeros((p,), np.int32)
-        for row, c in zip(rows, lens):
-            ent = self._staging[row]
-            toks[row, :c] = ent.req.prompt[ent.consumed:ent.consumed + c]
-            clens[row] = c
-        return _ChunkPlan(rows=rows, lens=lens, tokens=toks, clens=clens)
-
-    def _finish_chunks(self, plan: _ChunkPlan, clogits) -> None:
-        """Post-chunk bookkeeping: stream host-tier chunks' KV into the
-        paged pool, and graduate completed prefills — sample the first
-        token, splice device rows into the shared decode state /
-        activate host rows for the next cohort, free the staging row."""
-        done_rows = [row for row, c in zip(plan.rows, plan.lens)
-                     if self._staging[row].consumed + c
-                     >= self._staging[row].req.prompt_len]
-        toks: Dict[int, int] = {}
-        if done_rows:
-            picked = clogits[jnp.asarray(done_rows)]
-            sampled = np.asarray(sample(picked,
-                                        temperature=self.e.temperature))
-            toks = {row: int(t) for row, t in zip(done_rows, sampled)}
-        now = time.perf_counter()
-        freed: List[int] = []
-        for row, c in zip(plan.rows, plan.lens):
-            ent = self._staging[row]
-            start = ent.consumed
-            ent.consumed += c
-            if ent.tier == "host":
-                # KV streams to the paged pool at chunk granularity —
-                # no whole-prompt migration on completion
-                self._executor.migrate_prompt(
-                    ent.req.request_id,
-                    self._host_kv_from_sub(self._staging_state, row,
-                                           ent.consumed, start=start))
-            if ent.consumed >= ent.req.prompt_len:
-                req = ent.req
-                req.output.append(toks[row])
-                if req.first_token_time is None:
-                    req.first_token_time = now
-                if ent.tier == "device":
-                    self.state = self._splice_jit(
-                        self.state, self._staging_state.per_entry,
-                        jnp.int32(row), jnp.int32(ent.slot),
-                        jnp.int32(req.prompt_len))
-                    req.phase = Phase.DECODE_DEVICE
-                else:
-                    req.phase = Phase.DECODE_HOST
-                    # the cohort picks it up at the next token boundary
-                self._staging[row] = None
-                self._staging_order.remove(row)
-                freed.append(row)
-        if freed:
-            # one batched scatter for every graduated row (a per-row
-            # .at[i].set loop dispatches len(freed) device ops)
-            lengths = self._staging_state.lengths.at[
-                jnp.asarray(freed, jnp.int32)].set(0)
-            self._staging_state = StackState(
-                per_entry=self._staging_state.per_entry, lengths=lengths)
 
     # --- one engine iteration ------------------------------------------------
     def step(self) -> None:
         t0 = time.perf_counter()
         admitted = self._admit()
+        self._rebalance()
         # rows whose request already reached max_new_tokens (possible
         # straight out of prefill when the clamp left room for exactly
         # one token) must not ride this iteration's decode batch — they
         # retire at the end of the step without over-generating.
         # Chunked admissions still mid-prefill aren't decoding either.
-        active_rows = [i for i, r in enumerate(self.slots)
+        active_rows = [i for i, r in enumerate(self.lc.slots)
                        if r is not None and not r.done
                        and r.phase is Phase.DECODE_DEVICE]
         decision = self._schedule(admitted, active_rows)
         plan = None
-        if self._chunked and self._staging_order:
+        if self._chunked and self.lc.staging_order:
             budget = (decision.chunk_tokens
                       if decision is not None and self._sched_chunk_aware
                       else self._fallback_chunk_budget(active_rows))
-            plan = self._plan_chunks(budget)
+            plan = self.lc.plan_chunks(budget)
         tokens = np.zeros((self.e.device_slots,), np.int32)
         for i in active_rows:
-            tokens[i] = self.slots[i].output[-1]
+            tokens[i] = self.lc.slots[i].output[-1]
         # lengths hygiene for empty slots
         mask = np.zeros((self.e.device_slots,), bool)
         mask[active_rows] = True
@@ -850,6 +494,7 @@ class Engine:
                 self.stats.chunk_co_run_iterations += 1
             self.stats.prefill_compilations = self._prefill_compiles
         self.stats.iterations += 1
+        self.lc.note_iteration()
         dt = time.perf_counter() - t0
         self.stats.wall_time += dt
         predicted = getattr(decision, "predicted_time", 0.0) \
@@ -860,7 +505,11 @@ class Engine:
             if self._calibrator is not None:
                 self._calibrator.observe_step(predicted, dt)
                 self.stats.step_error_ewma = self._calibrator.step_error_ewma
-        self._retire()
+        self.lc.retire(free_host=(self._executor.free
+                                  if self._executor is not None
+                                  else lambda rid: None))
+        # the cohort rebuilds itself at the next token boundary
+        # (_ensure_cohort); completions always leave attn_ptr == -1
 
     def _commit_device(self, logits, active_rows) -> None:
         toks = sample(logits[: self.e.device_slots],
@@ -868,24 +517,48 @@ class Engine:
         toks = np.asarray(toks)
         now = time.perf_counter()
         for i in active_rows:
-            r = self.slots[i]
+            r = self.lc.slots[i]
             r.output.append(int(toks[i]))
             self.stats.device_tokens += 1
             if r.first_token_time is None:
                 r.first_token_time = now
 
+    def _idle_host_io(self):
+        """A no-cohort HostIO (all rows invalid, no emit/consume/commit
+        window): hybrid stacks with offload enabled must decode through
+        the unified overlap step even with no live cohort — their
+        recurrent state spans the host rows, and the host=None path
+        only carries device-batch activations.  Constant per config,
+        so it is built once and cached."""
+        if self._idle_io is None:
+            bc = self.e.host_slots
+            emb = self.params.embedding["embed"]
+            self._idle_io = HostIO(
+                x_carry=jnp.zeros((bc, self.cfg.d_model), emb.dtype),
+                positions=jnp.zeros((bc,), jnp.int32),
+                attn_in=jnp.zeros((bc, self.cfg.num_heads,
+                                   self.cfg.resolved_head_dim), jnp.float32),
+                consume_layer=jnp.int32(-1), emit_layer=jnp.int32(-1),
+                window_start=jnp.int32(0), window_end=jnp.int32(0),
+                row_valid=jnp.zeros((bc,), bool))
+        return self._idle_io
+
     def _step_device_only(self, tokens, active_rows,
-                          plan: Optional[_ChunkPlan] = None) -> None:
+                          plan: Optional[ChunkPlan] = None) -> None:
         if plan is None:
-            logits, self.state, _, _ = self._decode_fn(self.params, tokens,
-                                                       self.state)
+            if self._executor is not None and self._hybrid:
+                logits, self.state, _, _ = self._decode_overlap_fn(
+                    self.params, tokens, self.state, self._idle_host_io())
+            else:
+                logits, self.state, _, _ = self._decode_fn(
+                    self.params, tokens, self.state)
             self._commit_device(logits, active_rows)
             return
         if not active_rows:
             clogits, self._staging_state = self._chunk_jit(
                 self.params, jnp.asarray(plan.tokens),
                 jnp.asarray(plan.clens), self._staging_state)
-            self._finish_chunks(plan, clogits)
+            finish_chunks(self, plan, clogits)
             return
         # fused step: the decode batch and the prefill chunk compile
         # and dispatch as ONE device program
@@ -895,11 +568,11 @@ class Engine:
                                    jnp.asarray(plan.clens),
                                    self._staging_state)
         self._commit_device(logits, active_rows)
-        self._finish_chunks(plan, clogits)
+        finish_chunks(self, plan, clogits)
 
     def _step_overlap(self, tokens, cohort: Cohort, active_rows,
                       *, wait: bool = False,
-                      plan: Optional[_ChunkPlan] = None) -> None:
+                      plan: Optional[ChunkPlan] = None) -> None:
         """One hybrid iteration (paper §3.3).
 
         ``wait=False`` — Asynchronous Overlap: poll the pending host
@@ -937,7 +610,7 @@ class Engine:
                         self.params, tokens, self.state, host_idle)
                 self._commit_device(logits, active_rows)
                 if plan is not None:
-                    self._finish_chunks(plan, clogits)
+                    finish_chunks(self, plan, clogits)
                 return
             buf = np.zeros(cohort.attn_in.shape, np.float32)
             buf[np.asarray(valid, np.int64)] = out
@@ -993,7 +666,7 @@ class Engine:
                                      temperature=self.e.temperature))
             emb = self.params.embedding["embed"]
             for j, i in enumerate(valid):
-                r = self.host_requests[cohort.slot_rids[i]]
+                r = self.lc.host_requests[cohort.slot_rids[i]]
                 r.output.append(int(toks[j]))
                 self.stats.host_tokens += 1
                 cohort.positions[i] += 1
@@ -1005,48 +678,13 @@ class Engine:
             self._executor.advance_token(cohort.request_ids)
             cohort.attn_in = jnp.zeros_like(cohort.attn_in)
         for rid in cohort.request_ids:
-            self.host_requests[rid].layer_progress = ctl.layer_progress(cohort)
+            self.lc.host_requests[rid].layer_progress = \
+                ctl.layer_progress(cohort)
         ctl.advance(cohort)
         if plan is not None:
-            self._finish_chunks(plan, clogits)
-
-    def _latency_sample(self, r: Request) -> None:
-        """Record TTFT and mean inter-token latency of a retiring
-        request into the stats distributions (p50/p95 accessors)."""
-        if r.arrival_time is None or r.first_token_time is None:
-            return
-        self.stats.ttft_samples.append(r.first_token_time - r.arrival_time)
-        if r.finish_time is not None and len(r.output) > 1:
-            self.stats.itl_samples.append(
-                (r.finish_time - r.first_token_time) / (len(r.output) - 1))
-
-    def _retire(self) -> None:
-        now = time.perf_counter()
-        for i, r in enumerate(self.slots):
-            if r is not None and r.done:
-                r.phase = Phase.FINISHED
-                r.finish_time = now
-                self.admission.release("device", r.kv_reserved)
-                self.slots[i] = None
-                self._latency_sample(r)
-        done_hosts = [rid for rid, r in self.host_requests.items() if r.done]
-        for rid in done_hosts:
-            r = self.host_requests.pop(rid)
-            r.phase = Phase.FINISHED
-            r.finish_time = now
-            self.admission.release("host", r.kv_reserved)
-            self._executor.free(rid)
-            self._host_slot_owner.pop(r.slot, None)
-            self._latency_sample(r)
-        # the cohort rebuilds itself at the next token boundary
-        # (_ensure_cohort); completions always leave attn_ptr == -1
+            finish_chunks(self, plan, clogits)
 
     # --- driver -------------------------------------------------------------
-    @property
-    def has_work(self) -> bool:
-        return bool(self.queue or any(r is not None for r in self.slots)
-                    or self.host_requests)
-
     def run(self, requests: List[Request], *, max_iterations: int = 100000
             ) -> EngineStats:
         for r in requests:

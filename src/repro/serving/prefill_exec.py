@@ -1,0 +1,184 @@
+"""Admission-time prefill execution paths (the engine delegates here).
+
+Three ways a placed request's prompt becomes cached state:
+
+  * ``prefill_into_slot`` / ``prefill_to_host`` — the exact
+    per-request paths hybrid/recurrent stacks require (no padding may
+    fold into Mamba/xLSTM state).
+  * ``prefill_batched`` — the fast path for attention-only stacks:
+    prompt lengths bucket to powers of two and same-bucket admissions
+    prefill in ONE jitted device call (jit retraces bounded by
+    log2(cache_len) x log2(2*device_slots) shape pairs).
+
+All three take the engine as their execution context (its jitted
+entry points, shared state and host executor); request state-machine
+edges go through ``lifecycle.transition``.  The chunked-prefill path
+(admissions advancing inside the continuous-batching loop) lives in
+the engine itself — it is fused with decode dispatch.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.overlap_engine import stack_row_kv_to_pool_layers
+from repro.models import init_decode_state, prefill
+from repro.models.config import BlockKind
+from repro.models.kv_cache import StackState
+from repro.serving.lifecycle import pow2_ceil, transition
+from repro.serving.request import Phase, Request
+from repro.serving.sampler import sample
+
+
+def prefill_into_slot(eng, req: Request, slot: int) -> None:
+    """Per-request prefill on device into this slot of the shared
+    state (the exact path hybrid/recurrent stacks require)."""
+    transition(req, Phase.PREFILL)
+    prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+    sub = init_decode_state(eng.cfg, device_batch=1,
+                            cache_len=eng.e.cache_len)
+    logits, sub = prefill(eng.params, eng.cfg, {"tokens": prompt}, sub)
+    tok = int(sample(logits, temperature=eng.e.temperature)[0])
+    req.output.append(tok)
+    if req.first_token_time is None:
+        req.first_token_time = time.perf_counter()
+    # splice the single-row state into the shared batch state — the
+    # same row-assignment works for every entry kind (attention KV
+    # and recurrent states share the batch-axis layout)
+    new_entries = [
+        jax.tree.map(lambda big, small: big.at[:, slot].set(small[:, 0]),
+                     entry, sub.per_entry[j])
+        for j, entry in enumerate(eng.state.per_entry)
+    ]
+    lengths = eng.state.lengths.at[slot].set(req.prompt_len)
+    eng.state = StackState(per_entry=tuple(new_entries), lengths=lengths)
+    eng.lc.slots[slot] = req
+    req.slot = slot
+    transition(req, Phase.DECODE_DEVICE)
+
+
+def prefill_to_host(eng, req: Request, host_slot: int) -> None:
+    """Per-request prefill on device, migrating attention KV to the
+    host pool (paper §3.1: device prefills; host owns decode
+    attention).  Recurrent (Mamba/xLSTM) states stay ON-DEVICE,
+    spliced into the unified state's host row — only attention
+    stalls on the host."""
+    transition(req, Phase.PREFILL)
+    prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+    sub = init_decode_state(eng.cfg, device_batch=1,
+                            cache_len=eng.e.cache_len)
+    logits, sub = prefill(eng.params, eng.cfg, {"tokens": prompt}, sub)
+    tok = int(sample(logits, temperature=eng.e.temperature)[0])
+    req.output.append(tok)
+    if req.first_token_time is None:
+        req.first_token_time = time.perf_counter()
+    row = eng.e.device_slots + host_slot
+    new_entries = []
+    for j, entry in enumerate(eng.state.per_entry):
+        if eng.cfg.block_pattern[j] == BlockKind.ATTN:
+            new_entries.append(entry)   # host rows hold no device KV
+        else:
+            new_entries.append(jax.tree.map(
+                lambda big, small: big.at[:, row].set(small[:, 0]),
+                entry, sub.per_entry[j]))
+    eng.state = StackState(per_entry=tuple(new_entries),
+                           lengths=eng.state.lengths)
+    eng._executor.migrate_prompt(
+        req.request_id,
+        stack_row_kv_to_pool_layers(eng.cfg, sub, 0, req.prompt_len))
+    req.slot = host_slot
+    transition(req, Phase.DECODE_HOST)
+    # the cohort picks the new member up at the next token boundary
+
+
+def finish_chunks(eng, plan, clogits) -> None:
+    """Post-chunk bookkeeping for the chunked-prefill path: stream
+    host-tier chunks' KV into the paged pool, and graduate completed
+    prefills — sample the first token, splice device rows into the
+    shared decode state / activate host rows for the next cohort,
+    free the staging row."""
+    staging = eng.lc.staging
+    done_rows = [row for row, c in zip(plan.rows, plan.lens)
+                 if staging[row].consumed + c >= staging[row].req.prompt_len]
+    toks: Dict[int, int] = {}
+    if done_rows:
+        picked = clogits[jnp.asarray(done_rows)]
+        sampled = np.asarray(sample(picked, temperature=eng.e.temperature))
+        toks = {row: int(t) for row, t in zip(done_rows, sampled)}
+    now = time.perf_counter()
+    freed: List[int] = []
+    for row, c in zip(plan.rows, plan.lens):
+        ent = staging[row]
+        start = ent.consumed
+        ent.consumed += c
+        if ent.tier == "host":
+            # KV streams to the paged pool at chunk granularity — no
+            # whole-prompt migration on completion
+            eng._executor.migrate_prompt(
+                ent.req.request_id,
+                stack_row_kv_to_pool_layers(eng.cfg, eng._staging_state,
+                                            row, ent.consumed, start=start))
+        if ent.consumed >= ent.req.prompt_len:
+            req = ent.req
+            req.output.append(toks[row])
+            if req.first_token_time is None:
+                req.first_token_time = now
+            if ent.tier == "device":
+                eng.state = eng._splice_jit(
+                    eng.state, eng._staging_state.per_entry,
+                    jnp.int32(row), jnp.int32(ent.slot),
+                    jnp.int32(req.prompt_len))
+                transition(req, Phase.DECODE_DEVICE)
+            else:
+                transition(req, Phase.DECODE_HOST)
+                # the cohort picks it up at the next token boundary
+            eng.lc.release_staging_row(row)
+            freed.append(row)
+    if freed:
+        # one batched scatter for every graduated row (a per-row
+        # .at[i].set loop dispatches len(freed) device ops)
+        lengths = eng._staging_state.lengths.at[
+            jnp.asarray(freed, jnp.int32)].set(0)
+        eng._staging_state = StackState(
+            per_entry=eng._staging_state.per_entry, lengths=lengths)
+
+
+def prefill_batched(eng, placements: List[Tuple[Request, str, int]]) -> None:
+    """The prefill fast path (attention-only stacks): bucket prompt
+    lengths to powers of two and prefill each bucket's admissions
+    in ONE jitted device call."""
+    groups: Dict[int, list] = {}
+    for p in placements:
+        groups.setdefault(pow2_ceil(p[0].prompt_len), []).append(p)
+    for blen in sorted(groups):
+        group = groups[blen]
+        bb = pow2_ceil(len(group))
+        tokens = np.zeros((bb, blen), np.int32)
+        plens = np.ones((bb,), np.int32)   # padded rows: discarded
+        for j, (req, _, _) in enumerate(group):
+            transition(req, Phase.PREFILL)
+            tokens[j, :req.prompt_len] = req.prompt
+            plens[j] = req.prompt_len
+        logits, sub = eng._prefill_jit(eng.params, jnp.asarray(tokens),
+                                       jnp.asarray(plens))
+        toks = np.asarray(sample(logits, temperature=eng.e.temperature))
+        now = time.perf_counter()
+        for j, (req, tier, slot) in enumerate(group):
+            req.output.append(int(toks[j]))
+            if req.first_token_time is None:
+                req.first_token_time = now
+            if tier == "device":
+                eng.state = eng._splice_jit(
+                    eng.state, sub.per_entry, jnp.int32(j),
+                    jnp.int32(slot), jnp.int32(req.prompt_len))
+                transition(req, Phase.DECODE_DEVICE)
+            else:
+                eng._executor.migrate_prompt(
+                    req.request_id,
+                    stack_row_kv_to_pool_layers(eng.cfg, sub, j,
+                                                req.prompt_len))
+                transition(req, Phase.DECODE_HOST)

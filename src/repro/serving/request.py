@@ -25,6 +25,11 @@ class Phase(str, enum.Enum):
     PREFILL = "prefill"
     DECODE_DEVICE = "decode_device"
     DECODE_HOST = "decode_host"
+    # transient tier-move states (repro.serving.lifecycle owns the
+    # legal-transition map): MIGRATING = host→device promotion in
+    # flight, PREEMPTED = device→host demotion in flight
+    MIGRATING = "migrating"
+    PREEMPTED = "preempted"
     FINISHED = "finished"
 
 
@@ -47,6 +52,17 @@ class Request:
     # admission (e.g. prompt too long for the KV cache); the request
     # finishes in Phase.FINISHED with failed=True and no output
     error: Optional[str] = None
+    # --- SLO knobs --------------------------------------------------
+    # TTFT deadline in seconds relative to arrival (None = no SLO):
+    # admission rejects the request outright when the deadline cannot
+    # be met even if admitted immediately; a first token landing after
+    # arrival + deadline counts as an EngineStats.deadline_misses
+    deadline: Optional[float] = None
+    # admission priority (higher = more urgent): orders the admission
+    # queue before deadlines do, and — with preemption enabled — lets
+    # an urgent request demote a strictly lower-priority device
+    # resident to the host tier
+    priority: int = 0
 
     @property
     def failed(self) -> bool:
@@ -89,7 +105,10 @@ class Request:
 
 def make_synthetic_request(rng: np.random.Generator, *, prompt_len: int,
                            output_len: int, vocab: int,
-                           arrival: Optional[float] = None) -> Request:
+                           arrival: Optional[float] = None,
+                           deadline: Optional[float] = None,
+                           priority: int = 0) -> Request:
     return Request(
         prompt=list(rng.integers(0, vocab, prompt_len)),
-        max_new_tokens=output_len, arrival_time=arrival)
+        max_new_tokens=output_len, arrival_time=arrival,
+        deadline=deadline, priority=priority)

@@ -26,7 +26,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import analytical
+from repro.core import analytical, placement
 from repro.core.perf_model import AnalyticPerfModel, ModelCosts, PLATFORMS
 from repro.models.config import ModelConfig
 from repro.serving.request import Phase, Request
@@ -196,20 +196,30 @@ class ServingSimulator:
 
         def rebalance() -> float:
             """Migrate host-resident requests back to an idle device
-            (pays one KV transfer per migration).  Returns time spent."""
+            (pays one KV transfer per migration).  Returns time spent.
+            Candidate choice and the pays-off predicate come from
+            ``repro.core.placement`` — the SAME rule the real engine's
+            TierPlacer runs, so sim and engine cannot drift."""
             nonlocal dev_used, host_used
             if not (s.tier_rebalance and hybrid):
                 return 0.0
             spent = 0.0
-            while host and not waiting:
-                # migrate only while the device has spare KV + slots
-                candidates = sorted(
-                    host, key=lambda r: r.max_new_tokens - r.tokens_generated,
-                    reverse=True)
-                r = candidates[0]
+            while host:
+                dev_tps, host_tps, _ = tier_rates()
+                r = placement.pick_rebalance_candidate(host)
+                if r is None:
+                    break
                 need = r.kv_demand()
-                if (dev_used + need > self.device_kv_tokens
-                        or len(dev) >= s.max_device_batch):
+                if not placement.should_rebalance_to_device(
+                        waiting=len(waiting),
+                        device_slot_free=len(dev) < s.max_device_batch,
+                        device_kv_headroom=self.device_kv_tokens - dev_used,
+                        need_tokens=need,
+                        remaining_tokens=(r.max_new_tokens
+                                          - r.tokens_generated),
+                        migration_cost=self.pm.t_migrate(r.total_len),
+                        device_s_per_token=1.0 / max(dev_tps, 1e-9),
+                        host_s_per_token=1.0 / max(host_tps, 1e-9)):
                     break
                 host.remove(r)
                 host_used -= need
@@ -217,8 +227,7 @@ class ServingSimulator:
                 r._host = False  # type: ignore[attr-defined]
                 dev.append(r)
                 r.phase = Phase.DECODE_DEVICE
-                spent += self.pm.t_transfer(
-                    r.total_len * self.costs.kv_bytes_per_pos)
+                spent += self.pm.t_migrate(r.total_len)
             return spent
 
         it = 0

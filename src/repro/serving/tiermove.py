@@ -1,0 +1,70 @@
+"""KV mechanics of the two tier moves (lifecycle decides, this moves).
+
+Host→device **migration**: the request's paged KV (gathered per
+attention layer by ``HostExecutor.gather_request``) is uploaded into a
+freed device slot's contiguous cache; recurrent-state rows (hybrids)
+splice over from the host row the request leaves behind.  Device→host
+**preemption** is the inverse: the slot's contiguous KV is demoted to
+the paged pool (via ``stack_row_kv_to_pool_layers`` +
+``migrate_prompt``) and the recurrent rows splice into the host row.
+
+Both functions are pure ``StackState -> StackState`` transforms and
+exact by construction — they copy cached K/V values bit-for-bit, so a
+migrated request emits the same tokens a never-migrating run would
+(tests/test_lifecycle.py).  They run unjitted: tier moves are rare,
+placer-gated events whose cost the perf model's ``t_migrate`` term
+already charges against the decision.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import BlockKind, ModelConfig
+from repro.models.kv_cache import StackState
+
+
+def upload_host_kv_to_slot(cfg: ModelConfig, state: StackState,
+                           per_layer_kv: List[Tuple], slot: int, n: int,
+                           host_row: int) -> StackState:
+    """Splice a migrating request into device ``slot``: its ``n``
+    cached positions of per-attention-layer (K, V) into the contiguous
+    cache, recurrent entries (hybrids) copied from ``host_row``, and
+    the slot's length set to ``n``."""
+    new_entries = []
+    for j, kind in enumerate(cfg.block_pattern):
+        entry = state.per_entry[j]
+        if kind == BlockKind.ATTN:
+            k, v = entry.k, entry.v
+            for g in range(cfg.num_groups):
+                abs_layer = g * cfg.pattern_period + j
+                li = cfg.attn_layer_indices.index(abs_layer)
+                kk, vv = per_layer_kv[li]
+                k = k.at[g, slot, :n].set(jnp.asarray(kk, k.dtype))
+                v = v.at[g, slot, :n].set(jnp.asarray(vv, v.dtype))
+            new_entries.append(entry._replace(k=k, v=v))
+        else:
+            new_entries.append(jax.tree.map(
+                lambda a: a.at[:, slot].set(a[:, host_row]), entry))
+    lengths = state.lengths.at[slot].set(n)
+    return StackState(per_entry=tuple(new_entries), lengths=lengths)
+
+
+def demote_slot_to_host_row(cfg: ModelConfig, state: StackState, slot: int,
+                            host_row: int) -> StackState:
+    """Vacate device ``slot`` for a preempted request: recurrent
+    entries splice into ``host_row`` (attention KV lives in the paged
+    pool from here on — host rows hold no device KV) and the slot's
+    length zeroes so the stale cache is causally invisible."""
+    new_entries = []
+    for j, kind in enumerate(cfg.block_pattern):
+        entry = state.per_entry[j]
+        if kind == BlockKind.ATTN:
+            new_entries.append(entry)
+        else:
+            new_entries.append(jax.tree.map(
+                lambda a: a.at[:, host_row].set(a[:, slot]), entry))
+    lengths = state.lengths.at[slot].set(0)
+    return StackState(per_entry=tuple(new_entries), lengths=lengths)
