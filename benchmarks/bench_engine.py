@@ -24,6 +24,11 @@ Measures, on the container's CPU backend:
   * ``arrival_sweep`` (full mode) — open-loop Poisson replay at several
     arrival rates through ``InferenceServer.serve``; reports TTFT
     percentiles per rate.
+  * ``http_serving`` (all modes) — end-to-end through the HTTP/SSE
+    gateway over real sockets (2 engine replicas): closed-loop TTFT/ITL
+    percentiles per concurrency level, open-loop Poisson (full mode),
+    and the 429/503 shed rate when a tiny bounded gateway queue is
+    overloaded; the CI gate asserts its smoke flags.
 
 Emits ``BENCH_engine.json`` at the repo root (CI uploads it as an
 artifact so the perf trajectory accumulates per PR).  The JSON carries
@@ -400,7 +405,128 @@ def bench_arrival_sweep(cfg, params, *, host_workers: int) -> dict:
     return sweep
 
 
-def check_regression(decode: dict, preempt: dict) -> int:
+def bench_http_serving(cfg, params, *, smoke: bool, host_workers: int) -> dict:
+    """Serving through the HTTP/SSE gateway over real sockets: a
+    closed-loop concurrency sweep (TTFT/ITL percentiles per level), an
+    open-loop Poisson sweep (full mode), and an overload burst against
+    a tiny bounded queue (429/503 shed rate at the edge).  Smoke mode
+    also reports the pass/fail flags the CI gateway gate asserts."""
+    import threading
+
+    from repro.serving.api import InferenceServer, ServerConfig
+    from repro.serving.gateway import EngineReplicaPool, serve_in_thread
+    from repro.serving.gateway.client import get_json, get_text, sse_chat
+
+    out_len = 6 if smoke else 16
+    scfg = ServerConfig(device_slots=2, host_slots=4, cache_len=128,
+                        perf_model="analytic", host_workers=host_workers,
+                        output_len=out_len)
+
+    def factory():
+        return InferenceServer(cfg, params, dataclasses.replace(scfg))
+
+    rng = np.random.default_rng(7)
+
+    def burst(port, *, clients, per_client, rate=None):
+        """closed loop (each client fires sequentially), or open loop
+        when ``rate`` is set (exponential gaps across all clients)."""
+        results, lock = [], threading.Lock()
+        gaps = (rng.exponential(1.0 / rate, clients * per_client)
+                if rate else None)
+
+        def client(ci):
+            for k in range(per_client):
+                if gaps is not None:
+                    time.sleep(float(gaps[ci * per_client + k]))
+                prompt = [int(t) for t in rng.integers(0, cfg.vocab_size, 8)]
+                r = sse_chat("127.0.0.1", port, prompt,
+                             max_new_tokens=out_len)
+                with lock:
+                    results.append(r)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300.0)
+        wall = time.perf_counter() - t0
+        return results, wall
+
+    def summarize(results, wall):
+        ok = [r for r in results if r["status"] == 200 and not r["error"]]
+        shed = [r for r in results if r["status"] in (429, 503)]
+        ttfts = [r["ttft_s"] for r in ok if r["ttft_s"] is not None]
+        itls = [g for r in ok for g in r["itl_s"]]
+        toks = sum(len(r["tokens"]) for r in ok)
+        pct = lambda xs, q: (1e3 * float(np.percentile(xs, q))  # noqa: E731
+                             if xs else None)
+        return {
+            "requests": len(results), "completed": len(ok),
+            "shed": len(shed),
+            "shed_rate": len(shed) / max(len(results), 1),
+            "tokens_per_s": toks / max(wall, 1e-9),
+            "ttft_p50_ms": pct(ttfts, 50), "ttft_p95_ms": pct(ttfts, 95),
+            "itl_p50_ms": pct(itls, 50), "itl_p95_ms": pct(itls, 95),
+        }
+
+    out = {"replicas": 2, "output_len": out_len}
+    pool = EngineReplicaPool(factory, replicas=2)
+    try:
+        gw, stop = serve_in_thread(pool, port=0, max_queue_depth=64)
+        try:
+            # closed-loop sweep: C concurrent clients, R requests each
+            levels = (1, 4) if smoke else (1, 4, 8)
+            per_client = 2 if smoke else 3
+            closed = {}
+            for c in levels:
+                results, wall = burst(gw.port, clients=c,
+                                      per_client=per_client)
+                closed[f"concurrency_{c}"] = summarize(results, wall)
+            out["closed_loop"] = closed
+            streams_ok = all(s["completed"] == s["requests"]
+                             for s in closed.values())
+            if not smoke:
+                # open-loop Poisson over the same sockets
+                open_loop = {}
+                for rate in (4.0, 16.0):
+                    results, wall = burst(gw.port, clients=4, per_client=3,
+                                          rate=rate)
+                    open_loop[f"rate_{rate:g}"] = summarize(results, wall)
+                out["open_loop"] = open_loop
+            health = get_json("127.0.0.1", gw.port, "/health")
+            metrics = get_text("127.0.0.1", gw.port, "/metrics")
+            health_ok = (health["status"] == 200
+                         and health["body"]["status"] == "ok")
+            metrics_ok = (metrics["status"] == 200
+                          and "apex_replica_up" in metrics["body"]
+                          and "apex_engine_iterations_total"
+                          in metrics["body"])
+        finally:
+            stop()
+
+        # overload burst: bounded queue of 1 — the depth check admits
+        # one stream and sheds the concurrent rest with 503 at the edge
+        gw2, stop2 = serve_in_thread(pool, port=0, max_queue_depth=1)
+        try:
+            results, wall = burst(gw2.port, clients=8, per_client=1)
+            out["overload"] = {"max_queue_depth": 1,
+                               **summarize(results, wall)}
+        finally:
+            stop2()
+    finally:
+        pool.shutdown()
+    out["flags"] = {
+        "sse_streams_nonempty": streams_ok,
+        "health_ok": health_ok,
+        "metrics_parseable": metrics_ok,
+        "overload_shed": out["overload"]["shed"] > 0,
+    }
+    return out
+
+
+def check_regression(decode: dict, preempt: dict, http: dict) -> int:
     """CI gate: fail on a >REGRESSION_TOLERANCE drop vs the committed
     smoke baseline on decode throughput or overlap efficiency, or on
     any deadline miss in the smoke preemption sub-scenario (urgent
@@ -419,6 +545,9 @@ def check_regression(decode: dict, preempt: dict) -> int:
     if preempt.get("preemptions", 0) < 1:
         failures.append("preemptions: expected >= 1 in the smoke "
                         "preemption sub-scenario")
+    for flag, ok in (http.get("flags") or {}).items():
+        if not ok:
+            failures.append(f"http_serving flag {flag} is false")
     if failures:
         print("REGRESSION GATE FAILED:")
         for f in failures:
@@ -428,7 +557,8 @@ def check_regression(decode: dict, preempt: dict) -> int:
           + ", ".join(f"{k}={decode[k]:.3g} vs baseline {v}"
                       for k, v in SMOKE_BASELINE.items())
           + f"; preemption deadline_misses=0 "
-            f"(preemptions={preempt.get('preemptions')})")
+            f"(preemptions={preempt.get('preemptions')}); "
+          + "http_serving flags all green")
     return 0
 
 
@@ -466,7 +596,12 @@ def main() -> None:
     # asserts zero deadline misses (and >= 1 preemption) there
     preempt = bench_preemption(cfg, params, smoke=args.smoke,
                                host_workers=args.host_workers)
-    scenarios = {"preemption": preempt}
+    # gateway serving over real sockets runs in smoke mode too: the CI
+    # gate asserts its pass/fail flags (SSE non-empty, health green,
+    # metrics parseable, overload sheds at the edge)
+    http = bench_http_serving(cfg, params, smoke=args.smoke,
+                              host_workers=args.host_workers)
+    scenarios = {"preemption": preempt, "http_serving": http}
     if not args.smoke:
         scenarios["long_context"] = bench_long_context(
             cfg, params, host_workers=args.host_workers)
@@ -540,8 +675,13 @@ def main() -> None:
           f"{_ms(preempt['urgent_ttft_p95_ms_without_preemption'])} "
           f"without ({preempt['preemptions']} preemptions, "
           f"{preempt['deadline_misses']} deadline misses)")
+    peak = sorted(http["closed_loop"])[-1]
+    hs = http["closed_loop"][peak]
+    print(f"  http_serving: {hs['completed']}/{hs['requests']} streams at "
+          f"{peak}, TTFT p95 {_ms(hs['ttft_p95_ms'])}, overload shed rate "
+          f"{http['overload']['shed_rate']:.0%}, flags {http['flags']}")
     if args.check:
-        sys.exit(check_regression(decode, preempt))
+        sys.exit(check_regression(decode, preempt, http))
 
 
 if __name__ == "__main__":

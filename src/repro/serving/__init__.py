@@ -1,5 +1,7 @@
 from repro.serving.api import InferenceServer, RequestHandle, ServerConfig
 from repro.serving.engine import Engine, EngineConfig, EngineStats
+from repro.serving.gateway import (EngineReplicaPool, HTTPGateway,
+                                   PoolHandle, ReplicaDead)
 from repro.serving.lifecycle import (AdmissionQueue, RequestLifecycle,
                                      TierPlacer)
 from repro.serving.request import Phase, Request

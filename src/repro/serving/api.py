@@ -27,6 +27,7 @@ legacy ``EngineConfig`` remains as the engine-internal subset.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Iterable, Iterator, List, Optional, Sequence, Union
 
@@ -226,6 +227,15 @@ class InferenceServer:
         self.config = config or ServerConfig()
         self.engine = Engine(cfg, params, self.config.engine_config(),
                              scheduler=scheduler)
+        # one engine iteration at a time: the engine's per-iteration
+        # bookkeeping (admission, cohort, staging) is not re-entrant,
+        # but every RequestHandle.tokens() iterator drives step() — two
+        # iterators pulled from different threads used to race the
+        # engine.  submit() shares the lock (it mutates the admission
+        # queue the step reads).  The gateway's replica driver threads
+        # rely on this: they pump step() while gateway worker threads
+        # submit concurrently.
+        self._step_lock = threading.RLock()
 
     # --- submission ----------------------------------------------------------
     def submit(self, request: Union[Request, Sequence[int]],
@@ -266,21 +276,25 @@ class InferenceServer:
                 request.arrival_time = time.perf_counter()
             Engine.reject(request, reason)
             return RequestHandle(self, request)
-        if len(self.engine.queue) >= self.config.max_queue:
-            raise RuntimeError(f"queue full ({self.config.max_queue})")
-        self.engine.submit(request)
+        with self._step_lock:
+            if len(self.engine.queue) >= self.config.max_queue:
+                raise RuntimeError(f"queue full ({self.config.max_queue})")
+            self.engine.submit(request)
         return RequestHandle(self, request)
 
     # --- drivers -------------------------------------------------------------
     def step(self) -> None:
         """One continuous-batching iteration: admit -> Algorithm 1 ->
-        dispatch (GPU_ONLY / ASYNC_OVERLAP / ASYM_PIPELINE) -> retire."""
-        self.engine.step()
+        dispatch (GPU_ONLY / ASYNC_OVERLAP / ASYM_PIPELINE) -> retire.
+        Re-entrant-safe: concurrent callers (interleaved token
+        iterators, a pool driver thread) serialize on the step lock."""
+        with self._step_lock:
+            self.engine.step()
 
     def run_until_idle(self, *, max_iterations: int = 100000) -> EngineStats:
         it = 0
         while self.engine.has_work and it < max_iterations:
-            self.engine.step()
+            self.step()
             it += 1
         return self.stats
 
@@ -316,7 +330,7 @@ class InferenceServer:
                 i += 1
                 now = time.perf_counter() - start
             if self.engine.has_work:
-                self.engine.step()
+                self.step()
                 it += 1
             elif i < len(order):
                 # idle until the next arrival is due

@@ -185,6 +185,12 @@ class EngineStats:
     # device→host demotions executed by the engine
     migrations: int = 0
     preemptions: int = 0
+    # swap-to-queue fallbacks: urgent requests whose preemptive
+    # admission found a strictly lower-priority victim but no host
+    # slot / paged-pool room to demote it into — the urgent request
+    # stays queued at its EDF position and retries as capacity frees
+    # (counted once per request, not once per blocked iteration)
+    preemption_requeues: int = 0
     # TTFT SLO outcomes: first tokens that landed after arrival +
     # deadline, and requests rejected at admission because the
     # deadline was already impossible (backpressure, not a miss)
@@ -249,6 +255,33 @@ class EngineStats:
     @property
     def itl_p95(self) -> Optional[float]:
         return self._pct(self.itl_samples, 95)
+
+    def snapshot(self) -> Dict[str, Optional[float]]:
+        """Flat metric-name → value view of the serving counters — the
+        stats-export surface the gateway's Prometheus ``/metrics``
+        endpoint renders and the HTTP bench embeds.  ``None`` marks a
+        distribution with no samples yet (exporters skip those)."""
+        return {
+            "iterations": float(self.iterations),
+            "device_tokens": float(self.device_tokens),
+            "host_tokens": float(self.host_tokens),
+            "wall_time_seconds": self.wall_time,
+            "decode_iters_per_s": self.iterations / max(self.wall_time,
+                                                        1e-9),
+            "tokens_per_s": self.throughput,
+            "migrations": float(self.migrations),
+            "preemptions": float(self.preemptions),
+            "preemption_requeues": float(self.preemption_requeues),
+            "deadline_misses": float(self.deadline_misses),
+            "deadline_rejections": float(self.deadline_rejections),
+            "device_occupancy": self.device_occupancy,
+            "host_occupancy": self.host_occupancy,
+            "prefill_chunks": float(self.prefill_chunks),
+            "ttft_p50_seconds": self.ttft_p50,
+            "ttft_p95_seconds": self.ttft_p95,
+            "itl_p50_seconds": self.itl_p50,
+            "itl_p95_seconds": self.itl_p95,
+        }
 
     @property
     def prediction_error(self) -> Optional[float]:
@@ -344,6 +377,13 @@ class AdmissionQueue:
     def __iter__(self):
         self._sort()
         return iter(list(self._q))
+
+    def snapshot(self) -> List[Request]:
+        """Point-in-time copy of the queued requests, *without*
+        sorting.  Safe to call from a thread other than the engine
+        driver (the gateway's predicted-wait estimate does): a plain
+        list copy never mutates ordering state under the driver."""
+        return list(self._q)
 
 
 # ---------------------------------------------------------------------------
@@ -495,6 +535,10 @@ class RequestLifecycle:
         # chunked-prefill staging registry (rows claimed by admissions)
         self.staging: List[Optional[InflightPrefill]] = []
         self.staging_order: List[int] = []           # rows in admission order
+        # urgent requests already counted as a swap-to-queue fallback
+        # (preemption attempted, no victim capacity) — dedups the
+        # EngineStats.preemption_requeues counter across retries
+        self._preempt_noted: set = set()
 
     # --- submission ----------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -571,9 +615,11 @@ class RequestLifecycle:
             reason = prompt_reject_reason(req.prompt_len, self.e.cache_len)
             if reason is not None:
                 reject(self.queue.pop(), reason)
+                self._preempt_noted.discard(req.request_id)
                 continue
             if self.placer.deadline_impossible(req, now=now):
                 self.stats.deadline_rejections += 1
+                self._preempt_noted.discard(req.request_id)
                 reject(self.queue.pop(),
                        f"deadline {req.deadline:.3f}s impossible: queue "
                        f"wait + predicted prefill already exceeds it")
@@ -595,9 +641,24 @@ class RequestLifecycle:
                 if slot is not None:
                     tier = self.placer.place(need, device_ok=True,
                                              host_ok=False)
+                elif any(r is not None and not r.done
+                         and r.phase is Phase.DECODE_DEVICE
+                         and r.priority < req.priority
+                         for r in self.slots):
+                    # swap-to-queue fallback: a strictly lower-priority
+                    # victim exists but the demote found no host slot /
+                    # paged-pool room to move it into.  The urgent
+                    # request was only peeked, never popped — it keeps
+                    # its EDF position at the head of the queue and
+                    # retries next iteration when capacity may have
+                    # freed, instead of the demote failing silently.
+                    if req.request_id not in self._preempt_noted:
+                        self._preempt_noted.add(req.request_id)
+                        self.stats.preemption_requeues += 1
             if tier is None:
                 break
             req = self.queue.pop()
+            self._preempt_noted.discard(req.request_id)
             req.tier = tier
             req.kv_reserved = need
             if tier == "device":
