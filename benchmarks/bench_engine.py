@@ -12,6 +12,13 @@ Measures, on the container's CPU backend:
     pool too small for the urgent prompt: reports urgent TTFT p95 with
     and without preemptive admission plus ``deadline_misses`` (the CI
     smoke gate asserts zero, and >= 1 preemption).
+  * ``hybrid_decode`` (all modes) — a hybrid (Mamba+attention) stack on
+    the serving fast paths: cold admission latency over distinct prompt
+    lengths under bucketed+chunked prefill vs the whole-prompt
+    per-request path hybrids used to be gated onto, and decode co-run
+    while a long hybrid prompt is mid-prefill; the CI gate asserts the
+    admission ratio <= HYBRID_ADMISSION_RATIO_MAX and
+    ``chunk_co_run_iterations`` > 0.
   * ``long_context`` (full mode) — a long prompt arriving mid-decode:
     chunked prefill must co-run with decode (``chunk_co_run_iterations``
     > 0) instead of stalling it, and a host-tier long must migrate to a
@@ -94,6 +101,13 @@ SMOKE_BASELINE = {
     "host_overlap_efficiency": 0.344,
 }
 REGRESSION_TOLERANCE = 0.30
+
+# hybrid_decode gate: cold admission under the fast paths must land at
+# or below this fraction of the whole-prompt per-request path's latency
+# (a ratio of two same-process measurements, so it travels across
+# runner classes in a way absolute iters/s numbers don't).
+HYBRID_ADMISSION_RATIO_MAX = 0.6
+HYBRID_ARCH = "jamba-1.5-large-398b"
 
 
 def _engine_config(**kw) -> EngineConfig:
@@ -198,6 +212,93 @@ def bench_prefill(cfg, params, *, smoke: bool, host_workers: int) -> dict:
         "admission_latency_ms": 1e3 * float(np.mean(ttfts)) if ttfts else None,
         "prefill_wall_s": wall,
         **_lat(eng.stats),
+    }
+
+
+def bench_hybrid_decode(*, smoke: bool, host_workers: int) -> dict:
+    """Hybrid stack (Mamba+attention) on the serving fast paths.
+
+    Two measurements on a reduced Jamba period (7 Mamba + 1 attention
+    layer):
+
+      * cold admission over many distinct prompt lengths, fast paths on
+        (bucketed + chunked) vs the whole-prompt per-request path the
+        engine used to force hybrids onto.  Cold on purpose: per-length
+        jit recompiles are a real recurring cost of the whole-prompt
+        path (prompt lengths are unbounded in serving), and bounding
+        them is half of what bucketing buys.  The whole-prompt engine
+        runs second, so shared decode shapes are already compiled for
+        it — the bias runs against the fast path.
+      * a 100-token hybrid prompt landing while two shorts decode:
+        chunked prefill must advance it without stalling their tokens
+        (``chunk_co_run_iterations`` counts the co-runs).
+    """
+    cfg = get_config(HYBRID_ARCH).reduced(layers=8, d_model=128, vocab=256)
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    n_req = 6 if smoke else 12
+    lengths = [5 + 3 * i for i in range(n_req)]          # all distinct
+    rng = np.random.default_rng(5)
+    protos = [Request(prompt=list(rng.integers(1, cfg.vocab_size, n)),
+                      max_new_tokens=2) for n in lengths]
+    base_kw = dict(device_slots=n_req + 1, host_slots=0,
+                   enable_offload=False, cache_len=128,
+                   perf_model="analytic", host_workers=host_workers)
+
+    def admission(**kw):
+        eng = Engine(cfg, params, _engine_config(**base_kw, **kw))
+        reqs = _fresh(protos)
+        try:
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            wall = time.perf_counter() - t0
+        finally:
+            eng.shutdown()
+        ttfts = [r.first_token_time - r.arrival_time for r in reqs
+                 if r.first_token_time is not None]
+        return (1e3 * float(np.mean(ttfts)) if ttfts else None, wall,
+                getattr(eng.stats, "prefill_compilations", -1))
+
+    lat_fast, wall_fast, compiles = admission(chunk_tokens=8)
+    lat_whole, wall_whole, _ = admission(bucketed_prefill=False,
+                                         chunk_tokens=0)
+    ratio = lat_fast / lat_whole if lat_fast and lat_whole else None
+
+    eng = Engine(cfg, params, _engine_config(
+        device_slots=3, cache_len=256, enable_offload=False,
+        chunk_tokens=8, perf_model="analytic", host_workers=host_workers))
+    rng = np.random.default_rng(6)
+    short = [Request(prompt=list(rng.integers(1, cfg.vocab_size, 4)),
+                     max_new_tokens=64) for _ in range(2)]
+    try:
+        for r in short:
+            eng.submit(r)
+        eng.step()                          # prefill the shorts
+        eng.step()                          # they decode
+        long_req = Request(prompt=list(rng.integers(1, cfg.vocab_size, 100)),
+                           max_new_tokens=4)
+        eng.submit(long_req)
+        before = [len(r.output) for r in short]
+        it0 = eng.stats.iterations
+        t0 = time.perf_counter()
+        while long_req.first_token_time is None \
+                and eng.stats.iterations < it0 + 200:
+            eng.step()
+        long_prefill_wall = time.perf_counter() - t0
+        co_run = eng.stats.chunk_co_run_iterations
+        gained = sum(len(r.output) - b for r, b in zip(short, before))
+    finally:
+        eng.shutdown()
+    return {
+        "hybrid_arch": cfg.name,
+        "hybrid_admission_latency_ms": lat_fast,
+        "hybrid_admission_latency_whole_prompt_ms": lat_whole,
+        "hybrid_admission_latency_ratio": ratio,
+        "hybrid_prefill_wall_s": wall_fast,
+        "hybrid_prefill_wall_whole_prompt_s": wall_whole,
+        "hybrid_prefill_compilations": compiles,
+        "hybrid_long_prefill_wall_s": long_prefill_wall,
+        "chunk_co_run_iterations": int(co_run),
+        "decode_tokens_during_prefill": int(gained),
     }
 
 
@@ -526,11 +627,13 @@ def bench_http_serving(cfg, params, *, smoke: bool, host_workers: int) -> dict:
     return out
 
 
-def check_regression(decode: dict, preempt: dict, http: dict) -> int:
+def check_regression(decode: dict, preempt: dict, http: dict,
+                     hybrid: dict) -> int:
     """CI gate: fail on a >REGRESSION_TOLERANCE drop vs the committed
-    smoke baseline on decode throughput or overlap efficiency, or on
-    any deadline miss in the smoke preemption sub-scenario (urgent
-    requests carry a generous TTFT SLO that preemption must keep)."""
+    smoke baseline on decode throughput or overlap efficiency, on any
+    deadline miss in the smoke preemption sub-scenario (urgent requests
+    carry a generous TTFT SLO that preemption must keep), or on the
+    hybrid fast-path guarantees (admission ratio, chunk co-run)."""
     failures = []
     for key, base in SMOKE_BASELINE.items():
         got = decode.get(key)
@@ -548,6 +651,15 @@ def check_regression(decode: dict, preempt: dict, http: dict) -> int:
     for flag, ok in (http.get("flags") or {}).items():
         if not ok:
             failures.append(f"http_serving flag {flag} is false")
+    ratio = hybrid.get("hybrid_admission_latency_ratio")
+    if ratio is None or ratio > HYBRID_ADMISSION_RATIO_MAX:
+        failures.append(f"hybrid_admission_latency_ratio: {ratio} > "
+                        f"{HYBRID_ADMISSION_RATIO_MAX} (fast paths must "
+                        f"beat the whole-prompt hybrid path)")
+    if hybrid.get("chunk_co_run_iterations", 0) < 1:
+        failures.append("chunk_co_run_iterations: expected >= 1 in the "
+                        "hybrid_decode sub-scenario (decode must co-run "
+                        "with hybrid chunked prefill)")
     if failures:
         print("REGRESSION GATE FAILED:")
         for f in failures:
@@ -558,7 +670,10 @@ def check_regression(decode: dict, preempt: dict, http: dict) -> int:
                       for k, v in SMOKE_BASELINE.items())
           + f"; preemption deadline_misses=0 "
             f"(preemptions={preempt.get('preemptions')}); "
-          + "http_serving flags all green")
+          + "http_serving flags all green; "
+          + f"hybrid admission ratio {ratio:.2f} <= "
+            f"{HYBRID_ADMISSION_RATIO_MAX} "
+            f"({hybrid['chunk_co_run_iterations']} co-run iterations)")
     return 0
 
 
@@ -601,7 +716,14 @@ def main() -> None:
     # metrics parseable, overload sheds at the edge)
     http = bench_http_serving(cfg, params, smoke=args.smoke,
                               host_workers=args.host_workers)
-    scenarios = {"preemption": preempt, "http_serving": http}
+    # hybrid stacks ride the same fast paths since the length-masked
+    # scan landed: the gate holds chunked+bucketed hybrid admission to
+    # <= HYBRID_ADMISSION_RATIO_MAX of the old whole-prompt path and
+    # requires decode to co-run with hybrid chunked prefill
+    hybrid = bench_hybrid_decode(smoke=args.smoke,
+                                 host_workers=args.host_workers)
+    scenarios = {"preemption": preempt, "http_serving": http,
+                 "hybrid_decode": hybrid}
     if not args.smoke:
         scenarios["long_context"] = bench_long_context(
             cfg, params, host_workers=args.host_workers)
@@ -680,8 +802,17 @@ def main() -> None:
     print(f"  http_serving: {hs['completed']}/{hs['requests']} streams at "
           f"{peak}, TTFT p95 {_ms(hs['ttft_p95_ms'])}, overload shed rate "
           f"{http['overload']['shed_rate']:.0%}, flags {http['flags']}")
+    ratio = hybrid["hybrid_admission_latency_ratio"]
+    print(f"  hybrid_decode: admission "
+          f"{_ms(hybrid['hybrid_admission_latency_ms'])} fast-path vs "
+          f"{_ms(hybrid['hybrid_admission_latency_whole_prompt_ms'])} "
+          f"whole-prompt (ratio "
+          f"{'n/a' if ratio is None else f'{ratio:.2f}'}), "
+          f"{hybrid['chunk_co_run_iterations']} co-run iterations, "
+          f"{hybrid['decode_tokens_during_prefill']} decode tokens during "
+          f"the long prefill")
     if args.check:
-        sys.exit(check_regression(decode, preempt, http))
+        sys.exit(check_regression(decode, preempt, http, hybrid))
 
 
 if __name__ == "__main__":

@@ -85,6 +85,8 @@ class ModelCosts:
     qkv_transfer_bytes_per_req_layer: int  # Q+K+V shipped per offloaded req/layer
     attn_out_bytes_per_req_layer: int      # attention result shipped back
     bytes_per_param: int = 2
+    state_bytes_per_row: int = 0  # recurrent (SSM/xLSTM) state per request,
+    #                               all layers — 0 for attention-only stacks
 
     @classmethod
     def from_config(cls, cfg: ModelConfig, bytes_per_param: int = 2,
@@ -106,7 +108,33 @@ class ModelCosts:
             qkv_transfer_bytes_per_req_layer=qkv_bytes,
             attn_out_bytes_per_req_layer=out_bytes,
             bytes_per_param=bytes_per_param,
+            state_bytes_per_row=_recurrent_state_bytes(cfg),
         )
+
+
+def _recurrent_state_bytes(cfg: ModelConfig) -> int:
+    """Per-request bytes of recurrent state across the whole stack —
+    what a hybrid migration moves *in addition to* paged KV (the state
+    row shapes mirror ``models.ssm`` init_state: conv windows bf16,
+    scan carries fp32)."""
+    from repro.models.config import BlockKind  # local: avoid import cycle
+    d = cfg.d_model
+    per_entry = 0
+    for kind in cfg.block_pattern:
+        if kind == BlockKind.MAMBA:
+            m = cfg.mamba
+            inner = m.expand * d
+            per_entry += (m.conv_dim - 1) * inner * 2 + inner * m.state_dim * 4
+        elif kind == BlockKind.SLSTM:
+            per_entry += 4 * d * 4                      # c, n, h, m fp32
+        elif kind == BlockKind.MLSTM:
+            inner = 2 * d
+            hd = inner // cfg.num_heads
+            per_entry += (cfg.num_heads * hd * hd * 4   # cmat
+                          + cfg.num_heads * hd * 4      # n
+                          + cfg.num_heads * 4           # m
+                          + 3 * inner * 2)              # conv window bf16
+    return per_entry * cfg.num_groups
 
 
 class AnalyticPerfModel:
@@ -156,19 +184,29 @@ class AnalyticPerfModel:
 
     def t_migrate(self, n_tokens: int) -> float:
         """Tier-migration cost: a request's whole cached KV span
-        (every attention layer) crossing the device<->host link once —
-        charged against rebalance/preemption decisions by the
-        ``TierPlacer`` and the simulator alike."""
+        (every attention layer) plus its recurrent-state row (hybrids)
+        crossing the device<->host link once — charged against
+        rebalance/preemption decisions by the ``TierPlacer`` and the
+        simulator alike."""
         return self.t_transfer(max(n_tokens, 0)
-                               * self.costs.kv_bytes_per_pos)
+                               * self.costs.kv_bytes_per_pos
+                               + self.costs.state_bytes_per_row)
 
     # --- rates (paper notation) ---------------------------------------------
+    # Attention-free stacks (pure SSM/xLSTM, kv_bytes_per_pos == 0) scan
+    # no KV at all — treat a position as one recurrent-state row's bytes
+    # so the rates stay finite and the scheduler's inequalities reduce
+    # to the linear terms instead of dividing by zero.
+    def _bytes_per_pos(self) -> int:
+        return self.costs.kv_bytes_per_pos or max(
+            self.costs.state_bytes_per_row, 1)
+
     def n_g(self, context: float) -> float:
         """Device attention rate: KV positions scanned per second."""
-        return self.platform.device_bw / self.costs.kv_bytes_per_pos
+        return self.platform.device_bw / self._bytes_per_pos()
 
     def n_c(self, context: float) -> float:
-        return self.platform.host_bw / self.costs.kv_bytes_per_pos
+        return self.platform.host_bw / self._bytes_per_pos()
 
     # --- scheduler interface --------------------------------------------------
     def timings(self, decode_batch: int, mean_context: float,
@@ -202,6 +240,7 @@ class TablePerfModel:
 
     def __init__(self, tables: Dict[str, List[Tuple[float, float]]],
                  *, kv_bytes_per_pos: int, num_attn_layers: int,
+                 state_bytes_per_row: int = 0,
                  fingerprint: Optional[str] = None,
                  profile_grid: Optional[Dict[str, List[float]]] = None
                  ) -> None:
@@ -213,6 +252,7 @@ class TablePerfModel:
                 raise ValueError("table x values must be increasing")
         self.kv_bytes_per_pos = kv_bytes_per_pos
         self.num_attn_layers = num_attn_layers
+        self.state_bytes_per_row = state_bytes_per_row
         # which model config the tables were measured for (see
         # model_fingerprint) and at which sample points; None for
         # hand-built tables
@@ -248,7 +288,8 @@ class TablePerfModel:
 
     def t_migrate(self, n_tokens: int) -> float:
         """Measured-table twin of ``AnalyticPerfModel.t_migrate``."""
-        return self.t_transfer(max(n_tokens, 0) * self.kv_bytes_per_pos)
+        return self.t_transfer(max(n_tokens, 0) * self.kv_bytes_per_pos
+                               + self.state_bytes_per_row)
 
     def t_prefill(self, n_tokens: int, context: float) -> float:
         return self._eval("prefill", n_tokens)
@@ -289,6 +330,7 @@ class TablePerfModel:
                        for k, (xs, ys) in self.tables.items()},
             "kv_bytes_per_pos": self.kv_bytes_per_pos,
             "num_attn_layers": self.num_attn_layers,
+            "state_bytes_per_row": self.state_bytes_per_row,
             "fingerprint": self.fingerprint,
             "profile_grid": self.profile_grid,
         }
@@ -303,6 +345,7 @@ class TablePerfModel:
                     for k, v in payload["tables"].items()},
                    kv_bytes_per_pos=payload["kv_bytes_per_pos"],
                    num_attn_layers=payload["num_attn_layers"],
+                   state_bytes_per_row=payload.get("state_bytes_per_row", 0),
                    fingerprint=payload.get("fingerprint"),
                    profile_grid=payload.get("profile_grid"))
 

@@ -176,6 +176,7 @@ class OfflineProfiler:
         return TablePerfModel(tables,
                               kv_bytes_per_pos=self.costs.kv_bytes_per_pos,
                               num_attn_layers=self.costs.num_attn_layers,
+                              state_bytes_per_row=self.costs.state_bytes_per_row,
                               fingerprint=model_fingerprint(self.cfg),
                               profile_grid=dict(
                                   token_counts=list(token_counts),

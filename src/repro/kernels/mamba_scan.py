@@ -8,6 +8,12 @@ and walks the time axis with a ``fori_loop``, so the state never
 round-trips HBM between steps (the whole point of the kernel: the XLA
 scan materializes the carry through the loop boundary every step).
 
+Length masking: a per-batch ``lens`` operand rides the scalar-prefetch
+lane (same idiom as ``q_offset`` in ``kernels/prefill_attention``) and
+freezes the state past each row's true length — ``h`` only advances
+while ``t < lens[b]`` — so right-padded batches carry bit-identical
+final state to unpadded runs.  ``lens=None`` means every token is real.
+
 VMEM at T=4096, BLOCK_I=128, N=16, fp32: dt/x/y 3 x 2 MB + b/c 0.5 MB
 + h 8 KB ≈ 6.6 MB — fits v5e VMEM with double buffering at T <= 4k;
 longer sequences tile T at the ops level.
@@ -22,8 +28,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+def _scan_kernel(lens_ref, dt_ref, x_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
                  y_ref, hT_ref, *, seq_len: int):
+    bi = pl.program_id(0)
+    len_b = lens_ref[bi]
     a = a_ref[...]                       # (BI, N)
     d_skip = d_ref[...]                  # (BI, 1)
     h0 = h0_ref[0]                       # (BI, N)
@@ -34,8 +42,10 @@ def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
         b_t = b_ref[0, t][None, :]       # (1, N)
         c_t = c_ref[0, t][None, :]       # (1, N)
         da = jnp.exp(dt_t * a)           # (BI, N)
-        h = da * h + (dt_t * x_t) * b_t
-        y_t = jnp.sum(h * c_t, axis=-1) + d_skip[:, 0] * x_t[:, 0]
+        h_new = da * h + (dt_t * x_t) * b_t
+        # freeze the carry past this row's true length (padded tokens)
+        h = jnp.where(t < len_b, h_new, h)
+        y_t = jnp.sum(h_new * c_t, axis=-1) + d_skip[:, 0] * x_t[:, 0]
         y_ref[0, t] = y_t.astype(y_ref.dtype)
         return h
 
@@ -43,54 +53,80 @@ def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
     hT_ref[0] = h_final.astype(hT_ref.dtype)
 
 
+def resolve_block_i(inner: int, block_i: int) -> int:
+    """Largest divisor of ``inner`` that is <= ``block_i``.
+
+    Configs whose inner dim doesn't tile by the requested block (e.g.
+    reduced test configs with inner = 96) get the best valid tiling
+    instead of an assertion failure; 1 always divides, so this never
+    fails.
+    """
+    block_i = max(1, min(block_i, inner))
+    while inner % block_i:
+        block_i -= 1
+    return block_i
+
+
 @functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
 def mamba_selective_scan(dt: jnp.ndarray, x: jnp.ndarray, b: jnp.ndarray,
                          c: jnp.ndarray, a_neg: jnp.ndarray,
-                         d_skip: jnp.ndarray, h0: jnp.ndarray, *,
+                         d_skip: jnp.ndarray, h0: jnp.ndarray,
+                         lens: jnp.ndarray | None = None, *,
                          block_i: int = 128, interpret: bool = False):
     """Selective scan.  dt, x: (B, T, I); b, c: (B, T, N);
-    a_neg: (I, N) (already negated); d_skip: (I,); h0: (B, I, N).
+    a_neg: (I, N) (already negated); d_skip: (I,); h0: (B, I, N);
+    lens: optional (B,) int32 per-row valid lengths — state freezes at
+    ``lens[b]`` (None = all T tokens real).
     Returns (y (B, T, I), h_final (B, I, N)), both fp32."""
     bsz, t, inner = dt.shape
     n = b.shape[-1]
-    block_i = min(block_i, inner)
-    assert inner % block_i == 0, "inner dim must tile"
+    block_i = resolve_block_i(inner, block_i)
+    if lens is None:
+        lens = jnp.full((bsz,), t, jnp.int32)
     grid = (bsz, inner // block_i)
     y, h_final = pl.pallas_call(
         functools.partial(_scan_kernel, seq_len=t),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, t, block_i), lambda bi, ii: (bi, 0, ii)),   # dt
-            pl.BlockSpec((1, t, block_i), lambda bi, ii: (bi, 0, ii)),   # x
-            pl.BlockSpec((1, t, n), lambda bi, ii: (bi, 0, 0)),          # b
-            pl.BlockSpec((1, t, n), lambda bi, ii: (bi, 0, 0)),          # c
-            pl.BlockSpec((block_i, n), lambda bi, ii: (ii, 0)),          # A
-            pl.BlockSpec((block_i, 1), lambda bi, ii: (ii, 0)),          # D
-            pl.BlockSpec((1, block_i, n), lambda bi, ii: (bi, ii, 0)),   # h0
-        ],
-        out_specs=[
-            pl.BlockSpec((1, t, block_i), lambda bi, ii: (bi, 0, ii)),
-            pl.BlockSpec((1, block_i, n), lambda bi, ii: (bi, ii, 0)),
-        ],
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, t, block_i), lambda bi, ii, *_: (bi, 0, ii)),   # dt
+                pl.BlockSpec((1, t, block_i), lambda bi, ii, *_: (bi, 0, ii)),   # x
+                pl.BlockSpec((1, t, n), lambda bi, ii, *_: (bi, 0, 0)),          # b
+                pl.BlockSpec((1, t, n), lambda bi, ii, *_: (bi, 0, 0)),          # c
+                pl.BlockSpec((block_i, n), lambda bi, ii, *_: (ii, 0)),          # A
+                pl.BlockSpec((block_i, 1), lambda bi, ii, *_: (ii, 0)),          # D
+                pl.BlockSpec((1, block_i, n), lambda bi, ii, *_: (bi, ii, 0)),   # h0
+            ],
+            out_specs=[
+                pl.BlockSpec((1, t, block_i), lambda bi, ii, *_: (bi, 0, ii)),
+                pl.BlockSpec((1, block_i, n), lambda bi, ii, *_: (bi, ii, 0)),
+            ],
+        ),
         out_shape=[
             jax.ShapeDtypeStruct((bsz, t, inner), jnp.float32),
             jax.ShapeDtypeStruct((bsz, inner, n), jnp.float32),
         ],
         interpret=interpret,
-    )(dt, x, b, c, a_neg, d_skip[:, None], h0)
+    )(lens.astype(jnp.int32), dt, x, b, c, a_neg, d_skip[:, None], h0)
     return y, h_final
 
 
-def mamba_selective_scan_ref(dt, x, b, c, a_neg, d_skip, h0):
+def mamba_selective_scan_ref(dt, x, b, c, a_neg, d_skip, h0, lens=None):
     """Pure-jnp oracle (mirrors repro.models.ssm._mamba_scan_step)."""
+    bsz, t = dt.shape[:2]
+    if lens is None:
+        lens = jnp.full((bsz,), t, jnp.int32)
+
     def step(h, inp):
-        dt_t, x_t, b_t, c_t = inp
+        dt_t, x_t, b_t, c_t, t_idx = inp
         da = jnp.exp(dt_t[..., None] * a_neg[None])
-        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
-        y = jnp.sum(h * c_t[:, None, :], axis=-1) + d_skip * x_t
+        h_new = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h_new * c_t[:, None, :], axis=-1) + d_skip * x_t
+        h = jnp.where((t_idx < lens)[:, None, None], h_new, h)
         return h, y
 
     xs = tuple(jnp.moveaxis(v.astype(jnp.float32), 1, 0)
-               for v in (dt, x, b, c))
+               for v in (dt, x, b, c)) + (jnp.arange(t),)
     h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
     return jnp.moveaxis(ys, 0, 1), h_final

@@ -183,6 +183,18 @@ class ModelConfig:
             for k in self.block_pattern
         )
 
+    @property
+    def has_recurrent(self) -> bool:
+        """True iff any block carries recurrent (SSM/xLSTM) state.
+
+        The single source of truth for "is this a hybrid stack" —
+        serving code must use this instead of re-deriving it from
+        ``block_pattern`` so tier-move/migration special cases cannot
+        drift.  Purely structural (unlike ``supports_long_context_decode``
+        it does not require ``causal``).
+        """
+        return any(k != BlockKind.ATTN for k in self.block_pattern)
+
     # --- parameter counting (used by roofline + DESIGN tables) --------------
     def param_count(self) -> int:
         d, hd = self.d_model, self.resolved_head_dim

@@ -112,12 +112,12 @@ def prefill_bucketed(params: ModelParams, cfg: ModelConfig,
     length T; prompt_lens: (B,) real lengths.  Returns per-row logits
     of each prompt's *last real token* plus the filled decode state.
 
-    Exact only for attention-only stacks: causal masking makes padded
-    positions invisible to every real position, and the junk K/V they
-    leave beyond ``prompt_lens`` is masked (then overwritten) during
-    decode.  Recurrent blocks (Mamba/xLSTM) fold padded steps into
-    their state, so hybrid architectures must take the per-request
-    ``prefill`` path instead — the engine gates on ``block_pattern``.
+    Exact for every stack: causal masking makes padded positions
+    invisible to every real position (junk K/V beyond ``prompt_lens``
+    is masked, then overwritten during decode), and recurrent blocks
+    run the length-masked scan — state updates past ``prompt_lens[b]``
+    are frozen, so hybrid (Mamba/xLSTM) rows carry bit-identical state
+    to unpadded per-request prefills.
     """
     b, t = tokens.shape
     state = init_decode_state(cfg, device_batch=b, cache_len=cache_len,
@@ -126,7 +126,8 @@ def prefill_bucketed(params: ModelParams, cfg: ModelConfig,
     positions = (state.lengths[:, None]
                  + jnp.arange(t, dtype=jnp.int32)[None, :])
     x, new_state, _ = transformer.stack_forward(
-        params.blocks, cfg, x, positions, state)
+        params.blocks, cfg, x, positions, state,
+        valid_lens=prompt_lens.astype(jnp.int32))
     x_last = x[jnp.arange(b), prompt_lens - 1]
     x_last = rmsnorm(params.final_norm, x_last, cfg.norm_eps)
     logits = unembed(params.embedding, x_last)
@@ -143,9 +144,11 @@ def prefill_chunk(params: ModelParams, cfg: ModelConfig,
     along idle); state: the persistent prefill staging state whose
     ``lengths`` hold each row's tokens already prefilled.  Queries run
     at absolute positions ``lengths + i`` against the accumulated KV,
-    so causality makes every padded/idle position invisible — exact
-    for attention-only stacks (the same contract as
-    ``prefill_bucketed``; recurrent state would fold padding in).
+    so causality makes every padded/idle position invisible; recurrent
+    blocks resume their carried state through the length-masked
+    chunk-continuation path, freezing at ``chunk_lens[b]`` — exact for
+    every stack (the same contract as ``prefill_bucketed``), and rows
+    with ``chunk_lens == 0`` keep their state bit-unchanged.
 
     Returns (logits (B, V) of each row's *last real chunk token* — only
     meaningful for rows whose prompt completes in this chunk — and the
@@ -159,7 +162,8 @@ def prefill_chunk(params: ModelParams, cfg: ModelConfig,
     positions = (state.lengths[:, None]
                  + jnp.arange(c, dtype=jnp.int32)[None, :])
     x, new_state, _ = transformer.stack_forward(
-        params.blocks, cfg, x, positions, state)
+        params.blocks, cfg, x, positions, state,
+        valid_lens=chunk_lens.astype(jnp.int32))
     x_last = x[jnp.arange(b), jnp.maximum(chunk_lens, 1) - 1]
     x_last = rmsnorm(params.final_norm, x_last, cfg.norm_eps)
     logits = unembed(params.embedding, x_last)

@@ -11,6 +11,23 @@ All three blocks (Mamba, sLSTM, mLSTM) share one contract:
 HLO), and decode is the same cell applied to T=1.  Decode state is
 O(1) in sequence length — this is what makes these families eligible
 for the ``long_500k`` shape (see DESIGN.md §5).
+
+Length-masked scan: every forward takes an optional ``valid_lens``
+(B,) int32 — the number of *real* tokens in each row of this call's T
+window.  State carries/updates past a row's true length are masked
+(``h = where(t < len_b, h_new, h)``) and the rolling conv window is
+gathered at the row's true end, so a right-padded batch produces
+bit-identical state to unpadded per-request runs.  ``len_b == 0`` rows
+are bit-preserved (no step fires), which is what lets idle staging
+rows ride along in bucketed/chunked prefill batches.
+``valid_lens=None`` keeps the legacy every-token-real behaviour.
+
+The ``*_forward_chunk`` wrappers are the chunk-continuation entry
+points: they resume from carried state at an absolute offset, the
+recurrent analogue of ``q_offset`` in ``kernels/prefill_attention``.
+Recurrent cells are position-invariant given carried state, so the
+offset is accepted for signature parity and the per-row chunk lengths
+do the masking.
 """
 from __future__ import annotations
 
@@ -67,6 +84,24 @@ def mamba_init_state(cfg: MambaConfig, d_model: int, batch: int) -> MambaState:
     )
 
 
+def _gather_conv_window(window: jnp.ndarray, valid_lens: jnp.ndarray,
+                        tail: int) -> jnp.ndarray:
+    """Per-row rolling-conv state after consuming ``valid_lens`` tokens.
+
+    ``window`` is (B, K-1+T, I) = concat([carried conv state, xin]); row
+    b's next conv state is ``window[b, len_b : len_b + K-1]`` — the K-1
+    inputs preceding its true end, NOT the padded buffer end.  len_b == 0
+    returns the carried state unchanged.
+    """
+    idx = valid_lens[:, None] + jnp.arange(tail)[None, :]        # (B, K-1)
+    return jnp.take_along_axis(window, idx[..., None], axis=1)
+
+
+def _keep_mask(valid_lens: jnp.ndarray, t_idx: jnp.ndarray, ndim: int):
+    """(B,) broadcast to rank-``ndim``: True where step t is a real token."""
+    return (t_idx < valid_lens).reshape((-1,) + (1,) * (ndim - 1))
+
+
 def _mamba_scan_step(a_neg, h, dt, bx, cx, x, d_skip):
     """One selective-scan update.  Shapes: h (B,I,N); dt,x (B,I); bx,cx (B,N)."""
     da = jnp.exp(dt[..., None] * a_neg[None])                  # (B, I, N)
@@ -76,8 +111,14 @@ def _mamba_scan_step(a_neg, h, dt, bx, cx, x, d_skip):
 
 
 def mamba_forward(params: Params, cfg: MambaConfig, x: jnp.ndarray,
-                  state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
-    """x: (B, T, d_model).  Returns (y (B,T,d_model), new_state)."""
+                  state: MambaState,
+                  valid_lens: jnp.ndarray | None = None
+                  ) -> Tuple[jnp.ndarray, MambaState]:
+    """x: (B, T, d_model).  Returns (y (B,T,d_model), new_state).
+
+    ``valid_lens`` (B,) masks state updates past each row's true length
+    so padded rows carry bit-identical state to unpadded runs.
+    """
     b, t, d = x.shape
     inner = cfg.expand * d
     dtr = cfg.resolved_dt_rank(d)
@@ -86,7 +127,12 @@ def mamba_forward(params: Params, cfg: MambaConfig, x: jnp.ndarray,
 
     # causal depthwise conv over time, seeded with the rolling state
     window = jnp.concatenate([state.conv.astype(xin.dtype), xin], axis=1)
-    new_conv = window[:, -(cfg.conv_dim - 1):] if cfg.conv_dim > 1 else state.conv
+    if cfg.conv_dim <= 1:
+        new_conv = state.conv
+    elif valid_lens is None:
+        new_conv = window[:, -(cfg.conv_dim - 1):]
+    else:
+        new_conv = _gather_conv_window(window, valid_lens, cfg.conv_dim - 1)
     conv_w = params["conv_w"].astype(jnp.float32)
     stacked = jnp.stack(
         [window[:, i:i + t] for i in range(cfg.conv_dim)], axis=-1)  # (B,T,I,K)
@@ -105,12 +151,15 @@ def mamba_forward(params: Params, cfg: MambaConfig, x: jnp.ndarray,
     cm32 = cmat.astype(jnp.float32)
 
     def step(h, inputs):
-        dt_t, bx_t, cx_t, x_t = inputs
-        h, y = _mamba_scan_step(a_neg, h, dt_t, bx_t, cx_t, x_t, d_skip)
-        return h, y
+        dt_t, bx_t, cx_t, x_t, t_idx = inputs
+        h_new, y = _mamba_scan_step(a_neg, h, dt_t, bx_t, cx_t, x_t, d_skip)
+        if valid_lens is not None:
+            h_new = jnp.where(_keep_mask(valid_lens, t_idx, 3), h_new, h)
+        return h_new, y
 
     xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bm32, 1, 0),
-          jnp.moveaxis(cm32, 1, 0), jnp.moveaxis(xc32, 1, 0))
+          jnp.moveaxis(cm32, 1, 0), jnp.moveaxis(xc32, 1, 0),
+          jnp.arange(t))
     h_final, ys = jax.lax.scan(step, state.ssm, xs)
     y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                   # (B, T, I)
 
@@ -175,16 +224,27 @@ def _slstm_cell(gates_x, params, state: SLSTMState, num_heads: int):
 
 
 def slstm_forward(params: Params, x: jnp.ndarray, state: SLSTMState,
-                  num_heads: int) -> Tuple[jnp.ndarray, SLSTMState]:
-    """x: (B, T, d).  Sequential over T (inherently recurrent)."""
+                  num_heads: int,
+                  valid_lens: jnp.ndarray | None = None
+                  ) -> Tuple[jnp.ndarray, SLSTMState]:
+    """x: (B, T, d).  Sequential over T (inherently recurrent).
+
+    ``valid_lens`` (B,) masks state updates past each row's true length.
+    """
     b, t, d = x.shape
     gates_all = (x @ params["w_gates"]).astype(jnp.float32)      # (B, T, 4d)
 
-    def step(s, g_t):
+    def step(s, inputs):
+        g_t, t_idx = inputs
         s2 = _slstm_cell(g_t, params, s, num_heads)
+        if valid_lens is not None:
+            keep = _keep_mask(valid_lens, t_idx, 3)
+            s2 = SLSTMState(*(jnp.where(keep, new, old)
+                              for new, old in zip(s2, s)))
         return s2, s2.h
 
-    final, hs = jax.lax.scan(step, state, jnp.moveaxis(gates_all, 1, 0))
+    final, hs = jax.lax.scan(step, state,
+                             (jnp.moveaxis(gates_all, 1, 0), jnp.arange(t)))
     y = jnp.moveaxis(hs, 0, 1).reshape(b, t, d).astype(x.dtype)
     return y @ params["down_proj"], final
 
@@ -238,7 +298,8 @@ def _mlstm_cell(inp: _MLSTMInputs, state: MLSTMState
     return MLSTMState(cmat=c_new, n=n_new, m=m_new), h
 
 
-def _mlstm_conv(params: Params, xin: jnp.ndarray, conv_state: jnp.ndarray
+def _mlstm_conv(params: Params, xin: jnp.ndarray, conv_state: jnp.ndarray,
+                valid_lens: jnp.ndarray | None = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Causal depthwise conv(4) with rolling state.  xin: (B, T, I)."""
     kdim = params["conv_w"].shape[-1]
@@ -248,7 +309,11 @@ def _mlstm_conv(params: Params, xin: jnp.ndarray, conv_state: jnp.ndarray
     out = jnp.einsum("btik,ik->bti", stacked.astype(jnp.float32),
                      params["conv_w"].astype(jnp.float32))
     out = jax.nn.silu(out + params["conv_b"].astype(jnp.float32))
-    return out.astype(xin.dtype), window[:, -(kdim - 1):]
+    if valid_lens is None:
+        new_conv = window[:, -(kdim - 1):]
+    else:
+        new_conv = _gather_conv_window(window, valid_lens, kdim - 1)
+    return out.astype(xin.dtype), new_conv
 
 
 class MLSTMBlockState(NamedTuple):
@@ -266,15 +331,20 @@ def mlstm_block_init_state(d_model: int, num_heads: int, batch: int,
 
 
 def mlstm_forward(params: Params, x: jnp.ndarray, state: MLSTMBlockState,
-                  num_heads: int) -> Tuple[jnp.ndarray, MLSTMBlockState]:
-    """Full mLSTM block body (post-norm residual handled by caller)."""
+                  num_heads: int,
+                  valid_lens: jnp.ndarray | None = None
+                  ) -> Tuple[jnp.ndarray, MLSTMBlockState]:
+    """Full mLSTM block body (post-norm residual handled by caller).
+
+    ``valid_lens`` (B,) masks state updates past each row's true length.
+    """
     b, t, d = x.shape
     xz = x @ params["in_proj"]
     xin, z = jnp.split(xz, 2, axis=-1)                           # (B,T,I)
     inner = xin.shape[-1]
     hd = inner // num_heads
 
-    xc, new_conv = _mlstm_conv(params, xin, state.conv)
+    xc, new_conv = _mlstm_conv(params, xin, state.conv, valid_lens=valid_lens)
     qkv = xc @ params["w_qkv"]
     q, k, v = jnp.split(qkv, 3, axis=-1)
     q = q.reshape(b, t, num_heads, hd).astype(jnp.float32)
@@ -286,13 +356,61 @@ def mlstm_forward(params: Params, x: jnp.ndarray, state: MLSTMBlockState,
     f_pre = jax.nn.log_sigmoid(f_pre)
 
     def step(s, inp):
-        s2, h = _mlstm_cell(_MLSTMInputs(*inp), s)
+        *cell_inp, t_idx = inp
+        s2, h = _mlstm_cell(_MLSTMInputs(*cell_inp), s)
+        if valid_lens is not None:
+            s2 = MLSTMState(
+                *(jnp.where(_keep_mask(valid_lens, t_idx, new.ndim), new, old)
+                  for new, old in zip(s2, s)))
         return s2, h
 
-    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre))
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre)
+               ) + (jnp.arange(t),)
     cell_final, hs = jax.lax.scan(step, state.cell, xs)
     h = jnp.moveaxis(hs, 0, 1).reshape(b, t, inner).astype(x.dtype)
     h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     out = h @ params["down_proj"]
     return out, MLSTMBlockState(cell=cell_final,
                                 conv=new_conv.astype(state.conv.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Chunk continuation — the recurrent analogue of attention's ``q_offset``
+# ---------------------------------------------------------------------------
+#
+# Chunked prefill feeds each row a T-token window starting at absolute
+# position ``q_offset[b]``; attention re-derives causality from that
+# offset, while a recurrent cell already holds positions < q_offset[b]
+# *inside* the carried state, so resuming is just "run the same
+# length-masked forward from the carried state".  These wrappers make
+# that contract explicit at the call site (and keep the offset in the
+# signature so the dispatch mirrors ``kernels/prefill_attention``).
+
+
+def mamba_forward_chunk(params: Params, cfg: MambaConfig, x: jnp.ndarray,
+                        state: MambaState, chunk_lens: jnp.ndarray,
+                        q_offset: jnp.ndarray | None = None
+                        ) -> Tuple[jnp.ndarray, MambaState]:
+    """Resume a Mamba scan from carried ``state`` at absolute offset
+    ``q_offset`` and consume ``chunk_lens[b]`` real tokens per row."""
+    del q_offset  # encoded in `state`; recurrence is position-invariant
+    return mamba_forward(params, cfg, x, state, valid_lens=chunk_lens)
+
+
+def slstm_forward_chunk(params: Params, x: jnp.ndarray, state: SLSTMState,
+                        num_heads: int, chunk_lens: jnp.ndarray,
+                        q_offset: jnp.ndarray | None = None
+                        ) -> Tuple[jnp.ndarray, SLSTMState]:
+    """Resume an sLSTM scan from carried ``state`` (see mamba_forward_chunk)."""
+    del q_offset
+    return slstm_forward(params, x, state, num_heads, valid_lens=chunk_lens)
+
+
+def mlstm_forward_chunk(params: Params, x: jnp.ndarray,
+                        state: MLSTMBlockState, num_heads: int,
+                        chunk_lens: jnp.ndarray,
+                        q_offset: jnp.ndarray | None = None
+                        ) -> Tuple[jnp.ndarray, MLSTMBlockState]:
+    """Resume an mLSTM scan from carried ``state`` (see mamba_forward_chunk)."""
+    del q_offset
+    return mlstm_forward(params, x, state, num_heads, valid_lens=chunk_lens)

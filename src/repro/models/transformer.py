@@ -227,8 +227,17 @@ def _attn_full(p: Params, cfg: ModelConfig, x: jnp.ndarray,
 
 def entry_forward_full(p: Params, cfg: ModelConfig, kind: BlockKind,
                        x: jnp.ndarray, positions: jnp.ndarray,
-                       state, lengths, prefix_len, rng):
-    """One block over a full sequence.  Returns (x, new_state, aux)."""
+                       state, lengths, prefix_len, rng,
+                       valid_lens: Optional[jnp.ndarray] = None):
+    """One block over a full sequence.  Returns (x, new_state, aux).
+
+    ``valid_lens`` (B,) — per-row count of real tokens in this T window
+    (length-masked scan).  Attention ignores it: padded/junk positions
+    are already excluded by the absolute-position causal mask, and the
+    per-row KV write offsets come from ``lengths``.  Recurrent blocks
+    route through the chunk-continuation entry points so state freezes
+    at each row's true length.
+    """
     zero = jnp.zeros((), jnp.float32)
     if kind == BlockKind.ATTN:
         return _attn_full(p, cfg, x, positions, state, lengths, prefix_len, rng)
@@ -236,7 +245,11 @@ def entry_forward_full(p: Params, cfg: ModelConfig, kind: BlockKind,
     if kind == BlockKind.MAMBA:
         s = state if state is not None else ssm.mamba_init_state(
             cfg.mamba, cfg.d_model, x.shape[0])
-        y, s_new = ssm.mamba_forward(p["mamba"], cfg.mamba, h, s)
+        if valid_lens is None:
+            y, s_new = ssm.mamba_forward(p["mamba"], cfg.mamba, h, s)
+        else:
+            y, s_new = ssm.mamba_forward_chunk(p["mamba"], cfg.mamba, h, s,
+                                               valid_lens, q_offset=lengths)
         x = x + y
         aux = zero
         if "ffn" in p:
@@ -247,12 +260,20 @@ def entry_forward_full(p: Params, cfg: ModelConfig, kind: BlockKind,
     if kind == BlockKind.SLSTM:
         s = state if state is not None else ssm.slstm_init_state(
             cfg.d_model, cfg.num_heads, x.shape[0])
-        y, s_new = ssm.slstm_forward(p["slstm"], h, s, cfg.num_heads)
+        if valid_lens is None:
+            y, s_new = ssm.slstm_forward(p["slstm"], h, s, cfg.num_heads)
+        else:
+            y, s_new = ssm.slstm_forward_chunk(p["slstm"], h, s, cfg.num_heads,
+                                               valid_lens, q_offset=lengths)
         return x + y, s_new, zero
     if kind == BlockKind.MLSTM:
         s = state if state is not None else ssm.mlstm_block_init_state(
             cfg.d_model, cfg.num_heads, x.shape[0])
-        y, s_new = ssm.mlstm_forward(p["mlstm"], h, s, cfg.num_heads)
+        if valid_lens is None:
+            y, s_new = ssm.mlstm_forward(p["mlstm"], h, s, cfg.num_heads)
+        else:
+            y, s_new = ssm.mlstm_forward_chunk(p["mlstm"], h, s, cfg.num_heads,
+                                               valid_lens, q_offset=lengths)
         return x + y, s_new, zero
     raise ValueError(kind)
 
@@ -262,10 +283,17 @@ def stack_forward(blocks: Tuple[Params, ...], cfg: ModelConfig,
                   state: Optional[StackState] = None, *,
                   prefix_len: Optional[jnp.ndarray] = None,
                   rng: Optional[jax.Array] = None,
-                  remat: bool = False):
+                  remat: bool = False,
+                  valid_lens: Optional[jnp.ndarray] = None):
     """Run the whole stack over a full sequence.
 
     Returns (x, new_state | None, aux_loss).
+
+    ``valid_lens`` (B,) — number of real tokens per row in this call
+    (rest of T is right-padding).  Recurrent state updates past a row's
+    true length are masked so padded batches stay bit-identical to
+    unpadded runs; requires ``state`` (stateless runs have no carries
+    to protect).
     """
     x = constrain(x, "batch", "seq", None)
 
@@ -297,7 +325,7 @@ def stack_forward(blocks: Tuple[Params, ...], cfg: ModelConfig,
                      if rng is not None else None)
             xc, s_new, a = entry_forward_full(
                 params_g[j], cfg, kind, xc, positions, state_g[j],
-                state.lengths, prefix_len, rng_j)
+                state.lengths, prefix_len, rng_j, valid_lens)
             new_states.append(s_new if s_new is not None else state_g[j])
             aux = aux + a
         xc = constrain(xc, "batch", "seq", None)

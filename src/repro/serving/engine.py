@@ -51,7 +51,7 @@ from repro.core.scheduler import (AdmissionController, ApexScheduler,
 from repro.models import (HostIO, ModelParams, decode_step,
                           decode_with_chunked_prefill, init_decode_state,
                           prefill_bucketed, prefill_chunk)
-from repro.models.config import BlockKind, ModelConfig
+from repro.models.config import ModelConfig
 from repro.models.kv_cache import PagedKVPool, StackState
 from repro.serving.lifecycle import (ChunkPlan, EngineConfig, EngineStats,
                                      RequestLifecycle, TierPlacer, reject,
@@ -61,7 +61,8 @@ from repro.serving.prefill_exec import (finish_chunks, prefill_batched,
 from repro.serving.request import Phase, Request
 from repro.serving.sampler import sample
 from repro.serving.tiermove import (demote_slot_to_host_row,
-                                    upload_host_kv_to_slot)
+                                    upload_host_kv_to_slot,
+                                    zero_recurrent_rows)
 
 __all__ = ["Engine", "EngineConfig", "EngineStats"]
 
@@ -121,18 +122,18 @@ class Engine:
         self.lc = RequestLifecycle(self.e, stats=self.stats, placer=placer)
         self._decode_fn = jax.jit(
             lambda p, tok, st: decode_step(p, cfg, tok, st))
-        # bucketed/batched prefill is exact only when no recurrent state
-        # can fold padded positions in (see models.prefill_bucketed)
-        self._hybrid = any(kind != BlockKind.ATTN
-                           for kind in cfg.block_pattern)
-        self._bucketed_prefill = self.e.bucketed_prefill and not self._hybrid
+        # hybrid (recurrent-state) stacks ride the same fast paths as
+        # attention-only stacks: the length-masked scan (models.ssm)
+        # freezes state past each row's true length, so bucketed and
+        # chunked prefill stay exact for every architecture
+        self._hybrid = cfg.has_recurrent
+        self._bucketed_prefill = self.e.bucketed_prefill
         self._prefill_compiles = 0
         self._prefill_jit = jax.jit(self._prefill_traced)
         self._splice_jit = jax.jit(self._splice_device_row,
                                    donate_argnums=(0,))
-        # chunked prefill co-scheduled with decode: exactness has the
-        # same contract as bucketing (attention-only stacks), so it
-        # shares the gate; chunk_tokens == 0 turns it off explicitly
+        # chunked prefill co-scheduled with decode rides on bucketing;
+        # chunk_tokens == 0 turns it off explicitly
         self._chunked = self.e.chunk_tokens > 0 and self._bucketed_prefill
         if self._chunked:
             # one staging row per admissible request: prompts prefill
@@ -267,7 +268,13 @@ class Engine:
             demote=demote, prompt_reject_reason=self.prompt_reject_reason)
         if placements:
             if self._chunked:
-                self.lc.stage(placements)
+                rows = self.lc.stage(placements)
+                if self._hybrid:
+                    # recycled staging rows still hold the previous
+                    # occupant's recurrent carry; stale KV is masked by
+                    # length, but a chunk continuation would resume it
+                    self._staging_state = zero_recurrent_rows(
+                        self.cfg, self._staging_state, rows)
             elif self._bucketed_prefill:
                 prefill_batched(self, placements)
             else:
@@ -562,11 +569,21 @@ class Engine:
             return
         # fused step: the decode batch and the prefill chunk compile
         # and dispatch as ONE device program
-        logits, self.state, _, _, clogits, self._staging_state = \
-            self._decode_chunk_jit(self.params, tokens, self.state,
-                                   jnp.asarray(plan.tokens),
-                                   jnp.asarray(plan.clens),
-                                   self._staging_state)
+        if self._executor is not None and self._hybrid:
+            # same routing as the plan-less branch: recurrent state
+            # spans the host rows, so decode must take the unified
+            # overlap step even with no live cohort
+            logits, self.state, _, _, clogits, self._staging_state = \
+                self._decode_overlap_chunk_jit(
+                    self.params, tokens, self.state, self._idle_host_io(),
+                    jnp.asarray(plan.tokens), jnp.asarray(plan.clens),
+                    self._staging_state)
+        else:
+            logits, self.state, _, _, clogits, self._staging_state = \
+                self._decode_chunk_jit(self.params, tokens, self.state,
+                                       jnp.asarray(plan.tokens),
+                                       jnp.asarray(plan.clens),
+                                       self._staging_state)
         self._commit_device(logits, active_rows)
         finish_chunks(self, plan, clogits)
 

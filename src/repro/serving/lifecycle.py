@@ -72,18 +72,17 @@ class EngineConfig:
     # job's cohort rows (0 = auto: cpu_count - 1, leaving a core for the
     # device dispatch thread)
     host_workers: int = 0
-    # bucketed/batched prefill fast path (attention-only stacks): prompt
-    # lengths padded to powers of two so jit retraces stay <=
-    # log2(cache_len), same-bucket admissions prefilled in one device
-    # call.  Hybrid (recurrent) stacks always take the exact
-    # per-request path regardless of this flag.
+    # bucketed/batched prefill fast path (every stack): prompt lengths
+    # padded to powers of two so jit retraces stay <= log2(cache_len),
+    # same-bucket admissions prefilled in one device call.  Exact for
+    # hybrid (recurrent) stacks too — the length-masked scan freezes
+    # state past each row's true length.
     bucketed_prefill: bool = True
     # chunked prefill co-scheduled with decode: prompts advance in
     # token-budgeted chunks INSIDE the continuous-batching loop (one
     # fused device step runs the decode batch and one prefill chunk).
     # 0 disables chunking (whole-prompt prefill before decode);
-    # hybrid/recurrent stacks and ``bucketed_prefill=False`` fall back
-    # to whole-prompt regardless.
+    # ``bucketed_prefill=False`` also falls back to whole-prompt.
     chunk_tokens: int = 64
     # offload policy: fraction of device KV that must be claimed before
     # requests go to the host tier (GPU-first rule)
@@ -686,14 +685,19 @@ class RequestLifecycle:
         return placements
 
     # --- chunked-prefill staging ----------------------------------------
-    def stage(self, placements: List[Tuple[Request, str, int]]) -> None:
+    def stage(self, placements: List[Tuple[Request, str, int]]) -> List[int]:
         """Claim a staging row per admission: prompts prefill there
-        chunk-by-chunk inside the engine's fused device step."""
+        chunk-by-chunk inside the engine's fused device step.  Returns
+        the claimed rows — recycled rows carry the previous occupant's
+        recurrent state, which the engine must re-zero for hybrids."""
+        rows: List[int] = []
         for req, tier, s in placements:
             row = self.staging.index(None)
             transition(req, Phase.PREFILL)
             self.staging[row] = InflightPrefill(req=req, tier=tier, slot=s)
             self.staging_order.append(row)
+            rows.append(row)
+        return rows
 
     def staging_backlog(self) -> int:
         return sum(self.staging[r].remaining for r in self.staging_order)

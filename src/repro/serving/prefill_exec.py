@@ -3,12 +3,14 @@
 Three ways a placed request's prompt becomes cached state:
 
   * ``prefill_into_slot`` / ``prefill_to_host`` — the exact
-    per-request paths hybrid/recurrent stacks require (no padding may
-    fold into Mamba/xLSTM state).
-  * ``prefill_batched`` — the fast path for attention-only stacks:
-    prompt lengths bucket to powers of two and same-bucket admissions
+    per-request reference paths (also what runs when bucketing is
+    disabled in config).
+  * ``prefill_batched`` — the fast path for every stack: prompt
+    lengths bucket to powers of two and same-bucket admissions
     prefill in ONE jitted device call (jit retraces bounded by
-    log2(cache_len) x log2(2*device_slots) shape pairs).
+    log2(cache_len) x log2(2*device_slots) shape pairs).  Hybrid
+    (Mamba/xLSTM) rows are exact here too: the length-masked scan
+    freezes recurrent state past each row's true length.
 
 All three take the engine as their execution context (its jitted
 entry points, shared state and host executor); request state-machine
@@ -27,16 +29,16 @@ import numpy as np
 
 from repro.core.overlap_engine import stack_row_kv_to_pool_layers
 from repro.models import init_decode_state, prefill
-from repro.models.config import BlockKind
 from repro.models.kv_cache import StackState
 from repro.serving.lifecycle import pow2_ceil, transition
 from repro.serving.request import Phase, Request
 from repro.serving.sampler import sample
+from repro.serving.tiermove import splice_recurrent_rows
 
 
 def prefill_into_slot(eng, req: Request, slot: int) -> None:
     """Per-request prefill on device into this slot of the shared
-    state (the exact path hybrid/recurrent stacks require)."""
+    state (the exact reference path)."""
     transition(req, Phase.PREFILL)
     prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
     sub = init_decode_state(eng.cfg, device_batch=1,
@@ -77,16 +79,8 @@ def prefill_to_host(eng, req: Request, host_slot: int) -> None:
     if req.first_token_time is None:
         req.first_token_time = time.perf_counter()
     row = eng.e.device_slots + host_slot
-    new_entries = []
-    for j, entry in enumerate(eng.state.per_entry):
-        if eng.cfg.block_pattern[j] == BlockKind.ATTN:
-            new_entries.append(entry)   # host rows hold no device KV
-        else:
-            new_entries.append(jax.tree.map(
-                lambda big, small: big.at[:, row].set(small[:, 0]),
-                entry, sub.per_entry[j]))
-    eng.state = StackState(per_entry=tuple(new_entries),
-                           lengths=eng.state.lengths)
+    eng.state = splice_recurrent_rows(eng.cfg, eng.state, sub.per_entry,
+                                      0, row)
     eng._executor.migrate_prompt(
         req.request_id,
         stack_row_kv_to_pool_layers(eng.cfg, sub, 0, req.prompt_len))
@@ -134,6 +128,12 @@ def finish_chunks(eng, plan, clogits) -> None:
                     jnp.int32(req.prompt_len))
                 transition(req, Phase.DECODE_DEVICE)
             else:
+                if eng._hybrid:
+                    # recurrent state stays on-device in the unified
+                    # host row; only attention KV lives in the pool
+                    eng.state = splice_recurrent_rows(
+                        eng.cfg, eng.state, eng._staging_state.per_entry,
+                        row, eng.e.device_slots + ent.slot)
                 transition(req, Phase.DECODE_HOST)
                 # the cohort picks it up at the next token boundary
             eng.lc.release_staging_row(row)
@@ -148,9 +148,9 @@ def finish_chunks(eng, plan, clogits) -> None:
 
 
 def prefill_batched(eng, placements: List[Tuple[Request, str, int]]) -> None:
-    """The prefill fast path (attention-only stacks): bucket prompt
-    lengths to powers of two and prefill each bucket's admissions
-    in ONE jitted device call."""
+    """The prefill fast path (every stack — padding is length-masked):
+    bucket prompt lengths to powers of two and prefill each bucket's
+    admissions in ONE jitted device call."""
     groups: Dict[int, list] = {}
     for p in placements:
         groups.setdefault(pow2_ceil(p[0].prompt_len), []).append(p)
@@ -177,6 +177,10 @@ def prefill_batched(eng, placements: List[Tuple[Request, str, int]]) -> None:
                     jnp.int32(slot), jnp.int32(req.prompt_len))
                 transition(req, Phase.DECODE_DEVICE)
             else:
+                if eng._hybrid:
+                    eng.state = splice_recurrent_rows(
+                        eng.cfg, eng.state, sub.per_entry, j,
+                        eng.e.device_slots + slot)
                 eng._executor.migrate_prompt(
                     req.request_id,
                     stack_row_kv_to_pool_layers(eng.cfg, sub, j,

@@ -26,6 +26,46 @@ from repro.models.config import BlockKind, ModelConfig
 from repro.models.kv_cache import StackState
 
 
+def splice_recurrent_rows(cfg: ModelConfig, state: StackState, src_entries,
+                          src_row: int, dst_row: int) -> StackState:
+    """Copy row ``src_row`` of every recurrent (non-ATTN) entry in
+    ``src_entries`` into row ``dst_row`` of ``state`` — the shared
+    primitive behind every cross-row recurrent-state move (host-tier
+    graduation from bucketed/chunked prefill, preemption, migration).
+    Attention entries are untouched: host rows hold no device KV.
+    """
+    new_entries = []
+    for j, kind in enumerate(cfg.block_pattern):
+        entry = state.per_entry[j]
+        if kind == BlockKind.ATTN:
+            new_entries.append(entry)
+        else:
+            new_entries.append(jax.tree.map(
+                lambda big, small: big.at[:, dst_row].set(
+                    small[:, src_row].astype(big.dtype)),
+                entry, src_entries[j]))
+    return StackState(per_entry=tuple(new_entries), lengths=state.lengths)
+
+
+def zero_recurrent_rows(cfg: ModelConfig, state: StackState,
+                        rows: List[int]) -> StackState:
+    """Reset ``rows`` of every recurrent (non-ATTN) entry to the zero
+    carry ``state_init`` hands a fresh prefill.  Recycled staging rows
+    need this: a previous occupant's stale attention KV is masked out
+    by length, but a chunk continuation resumes whatever carry sits in
+    the row, so the recurrent state must be re-zeroed on claim."""
+    idx = jnp.asarray(rows, jnp.int32)
+    new_entries = []
+    for j, kind in enumerate(cfg.block_pattern):
+        entry = state.per_entry[j]
+        if kind == BlockKind.ATTN:
+            new_entries.append(entry)
+        else:
+            new_entries.append(jax.tree.map(
+                lambda a: a.at[:, idx].set(jnp.zeros((), a.dtype)), entry))
+    return StackState(per_entry=tuple(new_entries), lengths=state.lengths)
+
+
 def upload_host_kv_to_slot(cfg: ModelConfig, state: StackState,
                            per_layer_kv: List[Tuple], slot: int, n: int,
                            host_row: int) -> StackState:
@@ -33,6 +73,8 @@ def upload_host_kv_to_slot(cfg: ModelConfig, state: StackState,
     cached positions of per-attention-layer (K, V) into the contiguous
     cache, recurrent entries (hybrids) copied from ``host_row``, and
     the slot's length set to ``n``."""
+    state = splice_recurrent_rows(cfg, state, state.per_entry,
+                                  host_row, slot)
     new_entries = []
     for j, kind in enumerate(cfg.block_pattern):
         entry = state.per_entry[j]
@@ -46,8 +88,7 @@ def upload_host_kv_to_slot(cfg: ModelConfig, state: StackState,
                 v = v.at[g, slot, :n].set(jnp.asarray(vv, v.dtype))
             new_entries.append(entry._replace(k=k, v=v))
         else:
-            new_entries.append(jax.tree.map(
-                lambda a: a.at[:, slot].set(a[:, host_row]), entry))
+            new_entries.append(entry)
     lengths = state.lengths.at[slot].set(n)
     return StackState(per_entry=tuple(new_entries), lengths=lengths)
 
@@ -58,13 +99,7 @@ def demote_slot_to_host_row(cfg: ModelConfig, state: StackState, slot: int,
     entries splice into ``host_row`` (attention KV lives in the paged
     pool from here on — host rows hold no device KV) and the slot's
     length zeroes so the stale cache is causally invisible."""
-    new_entries = []
-    for j, kind in enumerate(cfg.block_pattern):
-        entry = state.per_entry[j]
-        if kind == BlockKind.ATTN:
-            new_entries.append(entry)
-        else:
-            new_entries.append(jax.tree.map(
-                lambda a: a.at[:, host_row].set(a[:, slot]), entry))
+    state = splice_recurrent_rows(cfg, state, state.per_entry,
+                                  slot, host_row)
     lengths = state.lengths.at[slot].set(0)
-    return StackState(per_entry=tuple(new_entries), lengths=lengths)
+    return StackState(per_entry=state.per_entry, lengths=lengths)

@@ -139,15 +139,17 @@ def test_chunked_engine_tokens_identical_host_tier():
         assert x.output == y.output
 
 
-def test_recurrent_archs_gate_off_chunked_prefill():
-    """Hybrid stacks take the exact whole-prompt path: chunk padding
-    would fold into recurrent state (same contract as bucketing)."""
+def test_recurrent_archs_ride_chunked_prefill():
+    """Hybrid stacks advance chunk-by-chunk like everyone else: the
+    chunk-continuation path resumes carried recurrent state and the
+    length-masked scan keeps padding out of it (bit-identity:
+    tests/test_hybrid_fastpath.py)."""
     cfg = get_config("jamba-1.5-large-398b").reduced(layers=None, d_model=64,
                                                      vocab=64)
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, EngineConfig(device_slots=2, cache_len=64,
                                            chunk_tokens=16))
-    assert eng._chunked is False
+    assert eng._chunked is True
     eng.shutdown()
 
 

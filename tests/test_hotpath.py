@@ -258,14 +258,16 @@ def test_bucketed_prefill_tokens_identical_to_per_request():
         assert x.output == y.output
 
 
-def test_recurrent_archs_gate_off_bucketed_prefill():
-    """Hybrid (recurrent) stacks must take the exact per-request path:
-    padded positions would fold into Mamba/xLSTM state."""
+def test_recurrent_archs_ride_bucketed_prefill():
+    """Hybrid (recurrent) stacks ride the bucketed fast path: the
+    length-masked scan freezes state past each row's true length, so
+    padding can no longer fold into Mamba/xLSTM state
+    (bit-identity: tests/test_hybrid_fastpath.py)."""
     cfg = get_config("jamba-1.5-large-398b").reduced(layers=None, d_model=64,
                                                      vocab=64)
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, EngineConfig(device_slots=2, cache_len=64))
-    assert eng._bucketed_prefill is False
+    assert eng._bucketed_prefill is True
     eng.shutdown()
 
 

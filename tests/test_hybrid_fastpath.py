@@ -1,0 +1,251 @@
+"""Hybrid (recurrent) stacks on the serving fast paths: bit-identity.
+
+The length-masked scan (models/ssm.py) is what lets Jamba/xLSTM-family
+stacks ride bucketed prefill, chunked prefill co-scheduled with decode,
+tier migration and preemption — the contract everywhere is *exactness*:
+the fast paths must emit token-for-token what the per-request
+whole-prompt reference path (``bucketed_prefill=False, chunk_tokens=0``)
+emits, on both tiers.  Each test pins one cell of that matrix.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request
+
+ARCHS = ["jamba-1.5-large-398b", "xlstm-125m"]
+
+
+def _hybrid_cfg(arch):
+    return get_config(arch).reduced(layers=None, d_model=64, vocab=64)
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def hybrid(request):
+    cfg = _hybrid_cfg(request.param)
+    assert cfg.has_recurrent
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _requests(rng, lengths, out_len=6, vocab=64):
+    return [Request(request_id=i, prompt=list(rng.integers(1, vocab, (L,))),
+                    max_new_tokens=out_len)
+            for i, L in enumerate(lengths)]
+
+
+def _clone(reqs):
+    return [Request(request_id=r.request_id, prompt=list(r.prompt),
+                    max_new_tokens=r.max_new_tokens, deadline=r.deadline,
+                    priority=r.priority) for r in reqs]
+
+
+def _run(cfg, params, protos, **overrides):
+    eng = Engine(cfg, params, EngineConfig(**overrides))
+    reqs = _clone(protos)
+    stats = eng.run(reqs)
+    eng.shutdown()
+    return reqs, stats, eng
+
+
+def _exact_reference(cfg, params, protos, **overrides):
+    """The per-request whole-prompt path every fast path must match."""
+    reqs, stats, _ = _run(cfg, params, protos, bucketed_prefill=False,
+                          chunk_tokens=0, **overrides)
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Matrix: {bucketed, chunk 1 / 16 / whole} x {device tier, host tier}
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_prefill_bit_identical_device_tier(hybrid):
+    """Mixed-length admissions share one right-padded bucketed prefill
+    call; every padded lane must leave recurrent state untouched."""
+    cfg, params = hybrid
+    rng = np.random.default_rng(0)
+    protos = _requests(rng, [5, 11, 3, 17, 8])
+    ref = _exact_reference(cfg, params, protos, device_slots=5, cache_len=64,
+                           enable_offload=False)
+    fast, _, eng = _run(cfg, params, protos, device_slots=5, cache_len=64,
+                        enable_offload=False, chunk_tokens=0)
+    assert eng._bucketed_prefill is True
+    for x, y in zip(ref, fast):
+        assert x.output == y.output
+
+
+def test_bucketed_prefill_bit_identical_host_tier(hybrid):
+    """Host-tier admissions ride the same bucketed call; the staging
+    row's recurrent state splices into the unified host row.  A pure
+    recurrent stack (xLSTM: no attention layers) has nothing to offload
+    — the placer keeps it on device — so the host-activity counter only
+    applies to attention-carrying hybrids; exactness applies to both.
+    """
+    cfg, params = hybrid
+    rng = np.random.default_rng(1)
+    protos = _requests(rng, [5, 11, 3, 17])
+    kw = dict(device_slots=2, host_slots=4, cache_len=64,
+              tier_rebalance=False, preemption=False)
+    ref = _exact_reference(cfg, params, protos, **kw)
+    fast, stats, _ = _run(cfg, params, protos, chunk_tokens=0, **kw)
+    if cfg.num_attn_layers > 0:
+        assert stats.host_tokens > 0
+    for x, y in zip(ref, fast):
+        assert x.output == y.output
+
+
+@pytest.mark.parametrize("chunk", [1, 16, 64])
+def test_chunked_prefill_bit_identical_both_tiers(hybrid, chunk):
+    """Chunk sizes 1 (every token a chunk), 16 (mid-prompt splits) and
+    64 (whole prompt in one chunk) all resume carried recurrent state
+    exactly, on device and host tiers."""
+    cfg, params = hybrid
+    rng = np.random.default_rng(2)
+    protos = _requests(rng, [5, 11, 3, 17])
+    kw = dict(device_slots=2, host_slots=4, cache_len=64,
+              tier_rebalance=False, preemption=False)
+    ref = _exact_reference(cfg, params, protos, **kw)
+    fast, stats, eng = _run(cfg, params, protos, chunk_tokens=chunk, **kw)
+    assert eng._chunked is True
+    if cfg.num_attn_layers > 0:
+        assert stats.host_tokens > 0
+    for x, y in zip(ref, fast):
+        assert x.output == y.output
+
+
+def test_staging_row_reuse_bit_identical(hybrid):
+    """Staging rows recycle as admissions stream through a small slot
+    pool (lowest free index first, so every sequential admission reuses
+    a row).  A recycled row's stale attention KV is masked by length,
+    but its recurrent carry must be re-zeroed on claim — this pins the
+    reuse path for both archs with more requests than device slots."""
+    cfg, params = hybrid
+    rng = np.random.default_rng(5)
+    protos = _requests(rng, [7, 9, 5, 12, 6, 10])
+    kw = dict(device_slots=2, cache_len=64, enable_offload=False)
+    ref = _exact_reference(cfg, params, protos, **kw)
+    fast, _, _ = _run(cfg, params, protos, chunk_tokens=8, **kw)
+    for x, y in zip(ref, fast):
+        assert x.output == y.output
+
+
+# ---------------------------------------------------------------------------
+# Matrix: migration and preemption under the fast paths
+# ---------------------------------------------------------------------------
+
+
+def test_migration_bit_identical_under_fast_paths(hybrid):
+    """A host resident admitted through chunked prefill promotes into a
+    freed device slot — recurrent row spliced alongside paged KV — with
+    tokens identical to the exact never-migrating reference."""
+    cfg, params = hybrid
+    rng = np.random.default_rng(3)
+    protos = _requests(rng, [5, 5, 5], out_len=2)
+    protos[1].max_new_tokens = 12
+    protos[2].max_new_tokens = 12
+    kw = dict(device_slots=1, host_slots=2, cache_len=64, preemption=False)
+    ref = _exact_reference(cfg, params, protos, tier_rebalance=False, **kw)
+    fast, stats, _ = _run(cfg, params, protos, chunk_tokens=4,
+                          tier_rebalance=True, **kw)
+    if cfg.num_attn_layers > 0:       # attention-free: no host residency
+        assert stats.migrations >= 1
+    for x, y in zip(ref, fast):
+        assert x.output == y.output
+
+
+def test_preemption_bit_identical_under_fast_paths(hybrid):
+    """An urgent request preempts a hybrid device resident to the host
+    tier mid-decode; its demoted recurrent state must continue exactly
+    (reference: preemption disabled, so the urgent request queues)."""
+    cfg, params = hybrid
+    rng = np.random.default_rng(4)
+    lows = _requests(rng, [8, 8], out_len=20)
+    urgent = Request(request_id=99, prompt=list(rng.integers(1, 64, (30,))),
+                     max_new_tokens=5, priority=1, deadline=120.0)
+
+    def run(preemption):
+        # pool pages are charged per attention layer (2 in reduced
+        # jamba): the urgent (35 positions = 2 pages x 2 layers = 4)
+        # overflows the 2-page pool so it can never host-admit, while
+        # a demoted low (28 positions = 1 page x 2 layers = 2) fits —
+        # preemption is the urgent request's only way in
+        eng = Engine(cfg, params, EngineConfig(
+            device_slots=2, host_slots=4, cache_len=64, page_size=32,
+            host_pool_pages=2, chunk_tokens=8, preemption=preemption))
+        ls, u = _clone(lows), _clone([urgent])[0]
+        try:
+            eng.run(ls, max_iterations=4)
+            eng.submit(u)
+            it = 0
+            while eng.has_work and it < 3000:
+                eng.step()
+                it += 1
+        finally:
+            eng.shutdown()
+        return ls, u, eng.stats
+
+    ls_a, u_a, st_a = run(preemption=True)
+    ls_b, u_b, st_b = run(preemption=False)
+    if cfg.num_attn_layers > 0:       # attention-free: no host residency
+        assert st_a.preemptions >= 1
+    assert st_b.preemptions == 0
+    for x, y in zip(ls_a + [u_a], ls_b + [u_b]):
+        assert x.output == y.output
+
+
+# ---------------------------------------------------------------------------
+# Non-starvation (the PR-4 guarantee, now for hybrids)
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid_decode_not_starved_by_long_prefill():
+    """Decode must advance every iteration a hybrid 100-token prompt is
+    mid-prefill — the stall the whole-prompt fallback used to cause."""
+    cfg = _hybrid_cfg("jamba-1.5-large-398b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    eng = Engine(cfg, params, EngineConfig(
+        device_slots=3, cache_len=256, enable_offload=False, chunk_tokens=8))
+    short = [Request(prompt=list(rng.integers(1, cfg.vocab_size, (4,))),
+                     max_new_tokens=64) for _ in range(2)]
+    try:
+        for r in short:
+            eng.submit(r)
+        eng.step()                          # prefill the shorts
+        eng.step()                          # they decode
+        long_req = Request(prompt=list(rng.integers(1, cfg.vocab_size, (100,))),
+                           max_new_tokens=4)
+        eng.submit(long_req)
+        before = [len(r.output) for r in short]
+        it0 = eng.stats.iterations
+        while long_req.first_token_time is None \
+                and eng.stats.iterations < it0 + 100:
+            eng.step()
+        prefill_iters = eng.stats.iterations - it0
+        gained = [len(r.output) - b for r, b in zip(short, before)]
+        assert prefill_iters >= 100 // 8
+        assert all(g >= prefill_iters - 1 for g in gained), \
+            (gained, prefill_iters)
+        assert eng.stats.chunk_co_run_iterations >= prefill_iters - 1
+    finally:
+        eng.shutdown()
+
+
+def test_attention_only_results_unchanged():
+    """The valid_lens plumbing must be a no-op for dense stacks: fast
+    path still matches the exact path (guards against regressions in
+    the shared dispatch)."""
+    cfg = get_config("internlm2-1.8b").reduced(layers=4, d_model=64, vocab=64)
+    assert not cfg.has_recurrent
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(8)
+    protos = _requests(rng, [5, 11, 3, 17])
+    kw = dict(device_slots=2, host_slots=4, cache_len=64,
+              tier_rebalance=False, preemption=False)
+    ref = _exact_reference(cfg, params, protos, **kw)
+    fast, _, _ = _run(cfg, params, protos, chunk_tokens=8, **kw)
+    for x, y in zip(ref, fast):
+        assert x.output == y.output
