@@ -162,6 +162,21 @@ class AnalyticPerfModel:
                       * (self.costs.kv_bytes_per_pos / 2) * 2)
         return linear + attn_flops / p.device_flops + p.kernel_overhead
 
+    def t_prefill_suffix(self, n_new: int, total_context: float) -> float:
+        """Prefill compute for the last ``n_new`` tokens of a
+        ``total_context``-long prompt — the prefix-cache continuation
+        cost: linear work scales with the suffix only, while each
+        suffix query attends to the full cached context.  Equals
+        ``t_prefill(T, T)`` when n_new == total_context (mean attended
+        context T/2), so pricing degrades exactly to the cold path on
+        a cache miss."""
+        p = self.platform
+        linear = self.costs.linear_flops_per_token * n_new / p.device_flops
+        mean_ctx = max(total_context - n_new / 2.0, 1.0)
+        attn_flops = 2.0 * n_new * mean_ctx * (self.costs.kv_bytes_per_pos
+                                               / 2) * 2
+        return linear + attn_flops / p.device_flops + p.kernel_overhead
+
     def t_gatt(self, batch: int, context: float) -> float:
         """Device decode attention: KV-bandwidth bound."""
         p = self.platform
@@ -293,6 +308,14 @@ class TablePerfModel:
 
     def t_prefill(self, n_tokens: int, context: float) -> float:
         return self._eval("prefill", n_tokens)
+
+    def t_prefill_suffix(self, n_new: int, total_context: float) -> float:
+        """Prefix-cache continuation cost under measured tables: the
+        table is keyed by token count alone, so charge the suffix's
+        token count (the dominant linear term) — conservative on the
+        attention share but monotone in cached length, which is what
+        admission backpressure needs."""
+        return self._eval("prefill", n_new)
 
     def n_g(self, context: float) -> float:
         """Device attention rate in KV positions/s, measured at the

@@ -85,6 +85,36 @@ def pick_preemption_victim(residents: Sequence[Any], *,
                key=lambda r: (getattr(r, "priority", 0), r.total_len))
 
 
+def longest_common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
+    """Length of the shared leading run of two token sequences — the
+    match rule of the cross-request prefix cache (engine) and of the
+    simulator's cache model.  One definition so the two cannot
+    disagree on what counts as a hit."""
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+def chargeable_prefill_tokens(prompt_len: int, cached_prefix: int) -> int:
+    """Prompt tokens an admission must actually prefill given a cached
+    prefix of ``cached_prefix`` tokens — THE shared pricing predicate
+    between the engine (chunk backlog, deadline backpressure) and the
+    simulator's admission model, so sim and engine cannot drift on
+    cache-aware admission.
+
+    The usable prefix is capped at ``prompt_len - 1``: at least one
+    suffix token always runs through prefill so the first output
+    token's logits are computed fresh (an exact-hit prompt still
+    prefills its final token).  A non-positive match charges the whole
+    prompt."""
+    if prompt_len <= 0:
+        return 0
+    usable = min(max(cached_prefix, 0), prompt_len - 1)
+    return prompt_len - usable
+
+
 def deadline_impossible(*, elapsed: float, deadline: Optional[float],
                         predicted_ttft: float) -> bool:
     """Admission backpressure: True when a request's TTFT deadline

@@ -68,6 +68,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="default TTFT SLO stamped on requests that "
                          "omit one")
     ap.add_argument("--no-offload", action="store_true")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable each replica's cross-request prefix "
+                         "cache (session_id routing still works, it "
+                         "just stops paying off)")
+    ap.add_argument("--prefix-cache-slots", type=int, default=2,
+                    help="device-resident prefix-cache entries per "
+                         "replica (0 = host-pool-only caching)")
     ap.add_argument("--smoke-test", action="store_true",
                     help="start the gateway, run a closed-loop client "
                          "burst, assert SSE/health/metrics, exit")
@@ -84,6 +91,8 @@ def build_pool(args: argparse.Namespace) -> EngineReplicaPool:
         host_workers=args.host_workers, chunk_tokens=args.chunk_tokens,
         platform=args.platform, perf_model=args.perf_model,
         profile_cache=args.profile_cache, deadline=args.deadline,
+        prefix_cache=not args.no_prefix_cache,
+        prefix_cache_slots=args.prefix_cache_slots,
         output_len=args.output_len)
     print(f"gateway model {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
           f"{args.replicas} replicas x (device_slots={scfg.device_slots} "

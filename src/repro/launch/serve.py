@@ -65,6 +65,13 @@ def main() -> None:
                          "decode is active (0 = whole-prompt prefill "
                          "before decode)")
     ap.add_argument("--no-offload", action="store_true")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the cross-request prefix cache "
+                         "(docs/serving_api.md 'Prefix cache'); tokens "
+                         "are bit-identical either way")
+    ap.add_argument("--prefix-cache-slots", type=int, default=2,
+                    help="device-resident prefix-cache entries (0 = "
+                         "host-pool-only caching)")
     ap.add_argument("--no-tier-rebalance", action="store_true",
                     help="disable host→device migration when device "
                          "slots free up (see docs/serving_api.md "
@@ -90,6 +97,8 @@ def main() -> None:
         host_workers=args.host_workers,
         bucketed_prefill=not args.no_bucketed_prefill,
         chunk_tokens=args.chunk_tokens,
+        prefix_cache=not args.no_prefix_cache,
+        prefix_cache_slots=args.prefix_cache_slots,
         tier_rebalance=not args.no_tier_rebalance,
         preemption=not args.no_preemption, deadline=args.deadline,
         platform=args.platform, perf_model=args.perf_model,

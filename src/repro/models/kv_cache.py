@@ -93,6 +93,16 @@ class PagedKVPool:
     a chain concurrently.  ``can_admit`` stays an advisory lock-free
     read — callers must tolerate ``allocate`` raising ``MemoryError``
     if a concurrent extension consumed the pages in between.
+
+    Pages are **refcounted**: ``fork`` aliases the leading pages of one
+    owner's chains into a new owner (the prefix cache sharing a cached
+    prefix with an admission — zero copies), and every write path is
+    copy-on-write — a page with refcount > 1 is copied to a fresh page
+    before mutation, so shared prefix KV is never clobbered in place.
+    Owners registered via ``mark_evictable`` (prefix-cache entries, not
+    live requests) form an LRU: ``allocate``/``extend``/COW reclaim
+    them automatically under memory pressure, notifying ``on_evict`` so
+    the cache index can drop the entry.
     """
 
     def __init__(self, num_pages: int, page_size: int, num_layers: int,
@@ -106,6 +116,15 @@ class PagedKVPool:
         self.page_tables: Dict[Tuple[int, int], List[int]] = {}
         # request_id -> token count (same across layers)
         self.lengths: Dict[int, int] = {}
+        # physical page -> owners referencing it (absent == free)
+        self.page_refs: Dict[int, int] = {}
+        # LRU registry of owners the pool may reclaim under pressure
+        self._evictable: Dict[int, int] = {}
+        self._tick = 0
+        self.evictions = 0
+        # callback(owner_id) fired after an LRU eviction (outside the
+        # allocation lock) so the index holding the owner can forget it
+        self.on_evict: Optional[Any] = None
         self._alloc_lock = threading.Lock()
 
     @property
@@ -118,33 +137,160 @@ class PagedKVPool:
         ``extend`` and the bulk/streaming write paths."""
         return max(0, -(-total_tokens // self.page_size) - chain_len)
 
+    def reclaimable_pages(self) -> int:
+        """Advisory count of pages LRU eviction could free right now:
+        exclusively-owned (refcount 1) pages of evictable owners."""
+        total = 0
+        for owner in list(self._evictable):
+            for layer in range(self.num_layers):
+                total += sum(1 for p in self.page_tables.get((owner, layer),
+                                                             [])
+                             if self.page_refs.get(p, 1) <= 1)
+        return total
+
     def can_admit(self, tokens: int) -> bool:
         per_layer = -(-tokens // self.page_size)
-        return self.num_free >= per_layer * self.num_layers
+        return (self.num_free + self.reclaimable_pages()
+                >= per_layer * self.num_layers)
+
+    # --- internal helpers (call with ``_alloc_lock`` held) ----------------
+    def _free_locked(self, owner: int) -> None:
+        for layer in range(self.num_layers):
+            for p in self.page_tables.pop((owner, layer), []):
+                r = self.page_refs.get(p, 1) - 1
+                if r <= 0:
+                    self.page_refs.pop(p, None)
+                    self.free_pages.append(p)
+                else:
+                    self.page_refs[p] = r
+        self.lengths.pop(owner, None)
+        self._evictable.pop(owner, None)
+
+    def _reclaim_locked(self, need: int) -> List[int]:
+        """Evict least-recently-used evictable owners until ``need``
+        free pages exist (or none are left).  Returns the evicted
+        owners; the caller fires ``on_evict`` after releasing the
+        lock."""
+        evicted: List[int] = []
+        while len(self.free_pages) < need and self._evictable:
+            owner = min(self._evictable, key=self._evictable.get)
+            self._free_locked(owner)
+            evicted.append(owner)
+            self.evictions += 1
+        return evicted
+
+    def _notify(self, evicted: List[int]) -> None:
+        if self.on_evict is not None:
+            for owner in evicted:
+                self.on_evict(owner)
 
     def allocate(self, request_id: int, tokens: int) -> None:
         """Reserve page chains for a new request with `tokens` capacity."""
         per_layer = -(-tokens // self.page_size)
-        with self._alloc_lock:
-            if self.num_free < per_layer * self.num_layers:
-                raise MemoryError("paged pool exhausted")
-            for layer in range(self.num_layers):
-                self.page_tables[(request_id, layer)] = [
-                    self.free_pages.pop() for _ in range(per_layer)]
-            self.lengths[request_id] = 0
+        need = per_layer * self.num_layers
+        evicted: List[int] = []
+        try:
+            with self._alloc_lock:
+                evicted = self._reclaim_locked(need)
+                if self.num_free < need:
+                    raise MemoryError("paged pool exhausted")
+                for layer in range(self.num_layers):
+                    chain = [self.free_pages.pop() for _ in range(per_layer)]
+                    for p in chain:
+                        self.page_refs[p] = 1
+                    self.page_tables[(request_id, layer)] = chain
+                self.lengths[request_id] = 0
+        finally:
+            self._notify(evicted)
 
     def extend(self, request_id: int, extra_tokens: int) -> None:
         """Grow every layer's chain to hold lengths + extra_tokens."""
         cur = self.lengths[request_id]
+        evicted: List[int] = []
+        try:
+            with self._alloc_lock:
+                chain_len = len(self.page_tables[(request_id, 0)])
+                need = self.pages_short(cur + extra_tokens, chain_len)
+                evicted = self._reclaim_locked(need * self.num_layers)
+                if need * self.num_layers > self.num_free:
+                    raise MemoryError("paged pool exhausted on extend")
+                if need:
+                    for layer in range(self.num_layers):
+                        grown = [self.free_pages.pop() for _ in range(need)]
+                        for p in grown:
+                            self.page_refs[p] = 1
+                        self.page_tables[(request_id, layer)].extend(grown)
+        finally:
+            self._notify(evicted)
+
+    # --- prefix-cache surface: sharing, adoption, LRU ---------------------
+    def fork(self, src_owner: int, dst_id: int, tokens: int) -> None:
+        """Alias the pages holding ``src_owner``'s first ``tokens``
+        positions into new owner ``dst_id`` (refcount++, zero copies).
+        The new owner starts at length ``tokens``; any write it later
+        lands in a shared page goes through copy-on-write, so the
+        source's cached KV is never mutated in place."""
+        per_layer = -(-tokens // self.page_size)
         with self._alloc_lock:
-            chain_len = len(self.page_tables[(request_id, 0)])
-            need = self.pages_short(cur + extra_tokens, chain_len)
-            if need * self.num_layers > self.num_free:
-                raise MemoryError("paged pool exhausted on extend")
-            if need:
-                for layer in range(self.num_layers):
-                    self.page_tables[(request_id, layer)].extend(
-                        self.free_pages.pop() for _ in range(need))
+            for layer in range(self.num_layers):
+                shared = self.page_tables[(src_owner, layer)][:per_layer]
+                self.page_tables[(dst_id, layer)] = list(shared)
+                for p in shared:
+                    self.page_refs[p] = self.page_refs.get(p, 1) + 1
+            self.lengths[dst_id] = tokens
+
+    def mark_evictable(self, owner: int) -> None:
+        """Register ``owner`` with the LRU — the pool may reclaim its
+        exclusively-owned pages under allocation pressure."""
+        with self._alloc_lock:
+            self._tick += 1
+            self._evictable[owner] = self._tick
+
+    def touch(self, owner: int) -> None:
+        """Refresh ``owner``'s LRU position (a cache hit)."""
+        with self._alloc_lock:
+            if owner in self._evictable:
+                self._tick += 1
+                self._evictable[owner] = self._tick
+
+    def owner_pages(self, owner: int) -> int:
+        """Pages referenced by ``owner`` across all layer chains."""
+        return sum(len(self.page_tables.get((owner, layer), []))
+                   for layer in range(self.num_layers))
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes of one physical page (K + V)."""
+        return int(self.pages[0, 0].nbytes) * 2
+
+    def _writable_page(self, request_id: int, layer: int,
+                       page_idx: int) -> int:
+        """The physical page backing ``chain[page_idx]``, copied to a
+        fresh exclusively-owned page first when shared (copy-on-write).
+        Every write path funnels through here so refcount-shared pages
+        are never mutated in place."""
+        chain = self.page_tables[(request_id, layer)]
+        page = chain[page_idx]
+        if self.page_refs.get(page, 1) <= 1:
+            return page
+        evicted: List[int] = []
+        try:
+            with self._alloc_lock:
+                if self.page_refs.get(page, 1) <= 1:
+                    return page           # lost the race: now exclusive
+                evicted = self._reclaim_locked(1)
+                if not self.free_pages:
+                    raise MemoryError("paged pool exhausted on copy-on-write")
+                if self.page_refs.get(page, 1) <= 1:
+                    return page           # reclaim released the sharer
+                fresh = self.free_pages.pop()
+                self.pages[:, fresh] = self.pages[:, page]
+                self.page_refs[fresh] = 1
+                self.page_refs[page] -= 1
+                chain[page_idx] = fresh
+                return fresh
+        finally:
+            self._notify(evicted)
 
     def append(self, request_id: int, layer: int, k: np.ndarray,
                v: np.ndarray, advance: bool) -> None:
@@ -158,8 +304,7 @@ class PagedKVPool:
         page_idx = pos // self.page_size
         if page_idx >= len(chain):
             self.extend(request_id, 1)
-            chain = self.page_tables[(request_id, layer)]
-        page = chain[page_idx]
+        page = self._writable_page(request_id, layer, page_idx)
         slot = pos % self.page_size
         self.pages[0, page, slot] = k
         self.pages[1, page, slot] = v
@@ -175,11 +320,11 @@ class PagedKVPool:
         chain = self.page_tables[(request_id, layer)]
         if self.pages_short(start + t, len(chain)):
             self.extend(request_id, t)
-            chain = self.page_tables[(request_id, layer)]
         off = 0
         while off < t:
             pos = start + off
-            page = chain[pos // self.page_size]
+            page = self._writable_page(request_id, layer,
+                                       pos // self.page_size)
             slot = pos % self.page_size
             span = min(self.page_size - slot, t - off)
             self.pages[0, page, slot:slot + span] = k[off:off + span]
@@ -207,15 +352,17 @@ class PagedKVPool:
             page_idx = int(positions[i]) // ps
             if page_idx >= len(chain):
                 self.extend(rid, int(positions[i]) + 1 - self.lengths[rid])
-                chain = self.page_tables[(rid, layer)]
-            pages[i] = chain[page_idx]
+            pages[i] = self._writable_page(rid, layer, page_idx)
         self.pages[0, pages, positions % ps] = k
         self.pages[1, pages, positions % ps] = v
 
-    def gather(self, request_id: int, layer: int
-               ) -> Tuple[np.ndarray, np.ndarray]:
-        """Materialize (K, V) of shape (len, kv_heads, head_dim)."""
-        n = self.lengths[request_id]
+    def gather(self, request_id: int, layer: int,
+               n: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize (K, V) of shape (len, kv_heads, head_dim) —
+        optionally only the first ``n`` positions (a truncated
+        prefix-cache hit)."""
+        total = self.lengths[request_id]
+        n = total if n is None else min(n, total)
         chain = self.page_tables[(request_id, layer)]
         full = n // self.page_size
         parts_k, parts_v = [], []
@@ -233,8 +380,8 @@ class PagedKVPool:
         return np.concatenate(parts_k, 0), np.concatenate(parts_v, 0)
 
     def free(self, request_id: int) -> None:
+        """Drop an owner: refcounts decrement, exclusively-owned pages
+        return to the free list (pages still shared with another owner
+        survive — no double free by construction)."""
         with self._alloc_lock:
-            for layer in range(self.num_layers):
-                chain = self.page_tables.pop((request_id, layer), [])
-                self.free_pages.extend(chain)
-            self.lengths.pop(request_id, None)
+            self._free_locked(request_id)

@@ -95,6 +95,11 @@ class ServerConfig:
     # admission-throttling overrides (None = derive from capacity)
     device_kv_budget_tokens: Optional[int] = None
     host_kv_budget_tokens: Optional[int] = None
+    # cross-request prefix cache (docs/serving_api.md "Prefix cache"):
+    # retired prompts publish their KV across both tiers; admissions
+    # matching a cached prefix prefill only the suffix
+    prefix_cache: bool = True
+    prefix_cache_slots: int = 2
     # --- workload --------------------------------------------------------
     workload: Optional[str] = None   # azure-conv | livebench | dolphin-r1 | osc
     num_requests: int = 12

@@ -57,7 +57,9 @@ from repro.serving.lifecycle import (ChunkPlan, EngineConfig, EngineStats,
                                      RequestLifecycle, TierPlacer, reject,
                                      transition)
 from repro.serving.prefill_exec import (finish_chunks, prefill_batched,
-                                        prefill_into_slot, prefill_to_host)
+                                        prefill_into_slot, prefill_to_host,
+                                        seed_prefix_hits)
+from repro.serving.prefix_cache import PrefixCache, publish_retired
 from repro.serving.request import Phase, Request
 from repro.serving.sampler import sample
 from repro.serving.tiermove import (demote_slot_to_host_row,
@@ -170,6 +172,27 @@ class Engine:
             self._job_ids = iter(range(1, 1 << 30))
             self._decode_overlap_fn = jax.jit(
                 lambda p, tok, st, host: decode_step(p, cfg, tok, st, host))
+        # cross-request prefix cache: retired requests publish their KV
+        # (device cache rows, overflowing to the paged host pool) and
+        # admissions matching a cached prefix resume chunked prefill at
+        # the uncached suffix.  Rides the chunked path — without it
+        # there is no mid-prompt continuation to resume.
+        self._prefix: Optional[PrefixCache] = None
+        self._prefix_state: Optional[StackState] = None
+        if self.e.prefix_cache and self._chunked:
+            n_rows = max(self.e.prefix_cache_slots, 0)
+            self._prefix = PrefixCache(device_rows=n_rows,
+                                       hybrid=self._hybrid)
+            if n_rows > 0:
+                # a DEDICATED state for cached rows: decode_step writes
+                # K/V at position ``lengths`` for every row each step,
+                # so cached prefixes must live where decode never runs
+                self._prefix_state = init_decode_state(
+                    cfg, device_batch=n_rows, cache_len=self.e.cache_len)
+            placer.cached_prefix_probe = self._prefix.match_len
+            if self._executor is not None:
+                self._executor.pool.on_evict = \
+                    lambda owner: self._prefix.forget_owner(owner, self.stats)
 
     # --- lifecycle views ---------------------------------------------------
     @property
@@ -275,6 +298,8 @@ class Engine:
                     # length, but a chunk continuation would resume it
                     self._staging_state = zero_recurrent_rows(
                         self.cfg, self._staging_state, rows)
+                if self._prefix is not None:
+                    seed_prefix_hits(self, placements, rows)
             elif self._bucketed_prefill:
                 prefill_batched(self, placements)
             else:
@@ -382,6 +407,15 @@ class Engine:
         self.lc.note_preempted(victim, hslot)
         # the cohort picks the demoted request up at the next boundary
         return slot
+
+    def _refresh_prefix_gauges(self) -> None:
+        """Resident-byte gauges of the prefix cache, per tier — kept
+        current on every cache mutation (publish/seed/evict/demote) so
+        snapshot() never walks the cache itself."""
+        if self._prefix is None:
+            return
+        self.stats.prefix_device_bytes = self._prefix.device_bytes(self)
+        self.stats.prefix_host_bytes = self._prefix.host_bytes(self)
 
     # --- cohort management ------------------------------------------------
     def _ensure_cohort(self) -> Optional[Cohort]:
@@ -514,7 +548,9 @@ class Engine:
                 self.stats.step_error_ewma = self._calibrator.step_error_ewma
         self.lc.retire(free_host=(self._executor.free
                                   if self._executor is not None
-                                  else lambda rid: None))
+                                  else lambda rid: None),
+                       publish=((lambda r: publish_retired(self, r))
+                                if self._prefix is not None else None))
         # the cohort rebuilds itself at the next token boundary
         # (_ensure_cohort); completions always leave attn_ptr == -1
 

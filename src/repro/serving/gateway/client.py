@@ -45,6 +45,7 @@ def get_text(host: str, port: int, path: str, *,
 def sse_chat(host: str, port: int, prompt: List[int], *,
              max_new_tokens: Optional[int] = None,
              deadline: Optional[float] = None, priority: int = 0,
+             session_id: Optional[str] = None,
              timeout: float = 120.0) -> Dict[str, Any]:
     """POST /v1/chat and consume the SSE stream to completion.
 
@@ -64,6 +65,8 @@ def sse_chat(host: str, port: int, prompt: List[int], *,
         payload["deadline"] = deadline
     if priority:
         payload["priority"] = priority
+    if session_id is not None:
+        payload["session_id"] = session_id
     conn = http.client.HTTPConnection(host, port, timeout=timeout)
     try:
         t0 = time.perf_counter()

@@ -9,7 +9,12 @@ the gateway runs anywhere the engine does.  Three endpoints:
         {"prompt": [1, 2, 3],        # token ids (required)
          "max_new_tokens": 16,       # optional
          "deadline": 0.5,            # optional TTFT SLO, seconds
-         "priority": 1}              # optional admission priority
+         "priority": 1,              # optional admission priority
+         "session_id": "conv-42"}    # optional session affinity
+
+    ``session_id`` pins the conversation to the replica that served
+    its first turn, so follow-up prompts hit that engine's prefix
+    cache; a dead pin falls back to least-loaded routing.
 
     Response is ``text/event-stream``: one ``data: {"token": t,
     "index": i}`` event per token, then a terminal ``data: {"done":
@@ -177,6 +182,9 @@ class HTTPGateway:
         max_new = payload.get("max_new_tokens")
         deadline = payload.get("deadline")
         priority = int(payload.get("priority", 0))
+        session_id = payload.get("session_id")
+        if session_id is not None:
+            session_id = str(session_id)
 
         # --- edge backpressure (before any engine state is touched) ---
         depth = self.pool.depth()
@@ -205,7 +213,8 @@ class HTTPGateway:
 
         try:
             handle = self.pool.submit(prompt, max_new,
-                                      deadline=deadline, priority=priority)
+                                      deadline=deadline, priority=priority,
+                                      session_id=session_id)
         except ReplicaDead as exc:
             self.counters["shed_503"] += 1
             await self._respond_json(writer, 503, {"error": str(exc)})

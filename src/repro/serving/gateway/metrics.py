@@ -46,6 +46,25 @@ _ENGINE_METRICS: Dict[str, Tuple[str, str, str, Dict[str, str]]] = {
                        "Mean occupied host slots per iteration", {}),
     "prefill_chunks": ("prefill_chunks_total", "counter",
                        "Chunked-prefill chunks executed", {}),
+    "prefix_lookups": ("prefix_cache_lookups_total", "counter",
+                       "Prefix-cache admission lookups", {}),
+    "prefix_hits": ("prefix_cache_hits_total", "counter",
+                    "Admissions that matched a cached prefix", {}),
+    "prefix_hit_tokens": ("prefix_cache_hit_tokens_total", "counter",
+                          "Prompt tokens served from the prefix cache "
+                          "(prefill work skipped)", {}),
+    "prefix_evictions": ("prefix_cache_evictions_total", "counter",
+                         "Prefix-cache entries evicted (LRU drops and "
+                         "pool reclaims)", {}),
+    "prefix_demotions": ("prefix_cache_demotions_total", "counter",
+                         "Prefix-cache entries demoted device-to-host",
+                         {}),
+    "prefix_device_bytes": ("prefix_cache_resident_bytes", "gauge",
+                            "Cached prefix KV bytes resident per tier",
+                            {"tier": "device"}),
+    "prefix_host_bytes": ("prefix_cache_resident_bytes", "gauge",
+                          "Cached prefix KV bytes resident per tier",
+                          {"tier": "host"}),
     "ttft_p50_seconds": ("ttft_seconds", "gauge",
                          "Time to first token", {"quantile": "0.5"}),
     "ttft_p95_seconds": ("ttft_seconds", "gauge",

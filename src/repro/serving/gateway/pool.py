@@ -19,6 +19,11 @@ Contracts:
     replica with the fewest in-flight streams; ``acquire``/``release``
     (or the ``checkout()`` context manager) pin a replica for session
     use — a lease counts toward its load so routing steers around it.
+  * **Session affinity.** ``submit(..., session_id=...)`` pins the
+    session to the replica that served its first turn, so follow-up
+    turns land where the engine's prefix cache already holds the
+    conversation's KV.  A dead or respawned pin (generation mismatch)
+    falls back to least-loaded routing and re-pins there.
   * **Crash containment + respawn.** A driver exception marks the
     replica dead, fails every in-flight request on it (the error lands
     on ``Request.error`` / the stream's terminal event — other
@@ -324,6 +329,10 @@ class EngineReplicaPool:
     ``factory`` builds one configured ``InferenceServer`` (replicas
     typically share the model params — they are read-only)."""
 
+    # sticky-session table bound: oldest pins fall off first (a pin is
+    # only a routing hint — losing one degrades to least-loaded)
+    _SESSION_CAP = 4096
+
     def __init__(self, factory: Callable[[], InferenceServer], *,
                  replicas: int = 2, auto_respawn: bool = True) -> None:
         if replicas < 1:
@@ -332,6 +341,9 @@ class EngineReplicaPool:
         self._auto_respawn = auto_respawn
         self._lock = threading.Lock()
         self._closing = False
+        # session_id -> (replica index, generation): follow-up turns
+        # route to the replica whose prefix cache holds the session
+        self._sessions: Dict[str, Tuple[int, int]] = {}
         self.respawns = 0
         self.replicas: List[Replica] = [Replica(i, factory)
                                         for i in range(replicas)]
@@ -369,6 +381,30 @@ class EngineReplicaPool:
             raise ReplicaDead("no live replicas in the pool")
         return min(live, key=lambda r: (r.load, r.index))
 
+    def route(self, session_id: Optional[str] = None) -> Replica:
+        """The replica a submission should land on: the session's
+        pinned replica while it is still the same live incarnation
+        (its prefix cache holds the conversation), else least-loaded —
+        re-pinning the session there.  Raises ``ReplicaDead`` only
+        when NO live replica exists."""
+        if session_id is not None:
+            with self._lock:
+                pin = self._sessions.get(session_id)
+            if pin is not None:
+                idx, gen = pin
+                if idx < len(self.replicas):
+                    rep = self.replicas[idx]
+                    if rep.alive and rep.generation == gen:
+                        return rep
+        rep = self.least_loaded()
+        if session_id is not None:
+            with self._lock:
+                self._sessions.pop(session_id, None)
+                self._sessions[session_id] = (rep.index, rep.generation)
+                while len(self._sessions) > self._SESSION_CAP:
+                    self._sessions.pop(next(iter(self._sessions)))
+        return rep
+
     def acquire(self) -> Replica:
         """Lease the least-loaded live replica (its load rises so
         routing steers around it until ``release``)."""
@@ -393,8 +429,9 @@ class EngineReplicaPool:
     def submit(self, request: Union[Request, Sequence[int]],
                max_new_tokens: Optional[int] = None, *,
                deadline: Optional[float] = None,
-               priority: int = 0) -> PoolHandle:
-        rep = self.least_loaded()
+               priority: int = 0,
+               session_id: Optional[str] = None) -> PoolHandle:
+        rep = self.route(session_id)
         if not isinstance(request, Request):
             request = Request(
                 prompt=[int(t) for t in request],

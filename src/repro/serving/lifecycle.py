@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -117,6 +117,16 @@ class EngineConfig:
     # throttle admission below the engine's physical capacity.
     device_kv_budget_tokens: Optional[int] = None
     host_kv_budget_tokens: Optional[int] = None
+    # cross-request prefix cache (repro.serving.prefix_cache): retired
+    # requests publish their KV, admissions matching a cached prefix
+    # resume chunked prefill at the uncached suffix.  Bit-identical
+    # tokens either way; rides the chunked-prefill path, so
+    # chunk_tokens == 0 or bucketed_prefill=False disables it too.
+    prefix_cache: bool = True
+    # device-resident cache entries (dedicated StackState rows); hot
+    # prefixes hit from here without touching the host pool.  0 keeps
+    # the cache host-pool-only (still exact, one upload per hit).
+    prefix_cache_slots: int = 2
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +209,19 @@ class EngineStats:
     # iteration (mean occupancy = counter / iterations)
     device_slot_iterations: int = 0
     host_slot_iterations: int = 0
+    # --- cross-request prefix cache ---------------------------------
+    # admission-time lookups, hits, and prompt tokens served from the
+    # cache (skipped prefill work); evictions count entries leaving
+    # the index (LRU drops, pool reclaims, supersessions) while
+    # demotions count device→host tier moves (the entry survives).
+    # The byte gauges track resident cached KV per tier.
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_evictions: int = 0
+    prefix_demotions: int = 0
+    prefix_device_bytes: int = 0
+    prefix_host_bytes: int = 0
     # latency distributions over retired requests: time-to-first-token
     # and per-request mean inter-token latency (seconds)
     ttft_samples: List[float] = dataclasses.field(default_factory=list)
@@ -276,6 +299,13 @@ class EngineStats:
             "device_occupancy": self.device_occupancy,
             "host_occupancy": self.host_occupancy,
             "prefill_chunks": float(self.prefill_chunks),
+            "prefix_lookups": float(self.prefix_lookups),
+            "prefix_hits": float(self.prefix_hits),
+            "prefix_hit_tokens": float(self.prefix_hit_tokens),
+            "prefix_evictions": float(self.prefix_evictions),
+            "prefix_demotions": float(self.prefix_demotions),
+            "prefix_device_bytes": float(self.prefix_device_bytes),
+            "prefix_host_bytes": float(self.prefix_host_bytes),
             "ttft_p50_seconds": self.ttft_p50,
             "ttft_p95_seconds": self.ttft_p95,
             "itl_p50_seconds": self.itl_p50,
@@ -404,6 +434,11 @@ class TierPlacer:
     admission: AdmissionController
     perf_model: Any = None
     iters_per_host_token: int = 1    # num_attn_layers + 1 under overlap
+    # prefix-cache probe: prompt -> cached-prefix length (0 = miss).
+    # The engine wires ``PrefixCache.match_len`` here so deadline
+    # backpressure prices only the uncached suffix — a long prompt
+    # whose prefix is cached is NOT impossible.
+    cached_prefix_probe: Optional[Callable[[Sequence[int]], int]] = None
 
     # --- admission-time placement (rule 1) ----------------------------
     def place(self, need_tokens: int, *, device_ok: bool,
@@ -500,8 +535,16 @@ class TierPlacer:
                    if req.arrival_time is not None else 0.0)
         predicted = 0.0
         if self.perf_model is not None:
-            predicted = float(self.perf_model.t_prefill(req.prompt_len,
-                                                        req.prompt_len))
+            cached = (self.cached_prefix_probe(req.prompt)
+                      if self.cached_prefix_probe is not None else 0)
+            charge = placement.chargeable_prefill_tokens(
+                req.prompt_len, cached)
+            suffix = getattr(self.perf_model, "t_prefill_suffix", None)
+            if suffix is not None and charge < req.prompt_len:
+                predicted = float(suffix(charge, req.prompt_len))
+            else:
+                predicted = float(self.perf_model.t_prefill(
+                    charge, req.prompt_len))
         return placement.deadline_impossible(
             elapsed=elapsed, deadline=req.deadline, predicted_ttft=predicted)
 
@@ -708,8 +751,14 @@ class RequestLifecycle:
         preempted its way in must not starve behind an earlier-staged
         low-priority backlog), admission (FIFO) order within a class.
         The chunk call is one batched device step over all advancing
-        staging rows, its length padded to a power-of-two bucket so
-        jit retraces stay bounded."""
+        staging rows.  Every grant is capped at ``chunk_tokens`` and
+        the token buffer is always ``pow2_ceil(chunk_tokens)`` wide:
+        XLA specializes reduction order to buffer shape, so a
+        variable-width buffer would make a token's KV depend on how
+        the prompt happened to be chunked — the prefix cache's
+        exactness bar needs one program geometry for every chunk call
+        (a 29-token and a 39-token prompt must produce bit-identical
+        KV for their shared prefix)."""
         if budget <= 0:
             return None
         rows: List[int] = []
@@ -720,7 +769,7 @@ class RequestLifecycle:
         for row in order:
             if left <= 0:
                 break
-            c = min(self.staging[row].remaining, left)
+            c = min(self.staging[row].remaining, left, self.e.chunk_tokens)
             if c <= 0:
                 continue
             rows.append(row)
@@ -728,7 +777,7 @@ class RequestLifecycle:
             left -= c
         if not rows:
             return None
-        cbucket = pow2_ceil(max(lens))
+        cbucket = pow2_ceil(self.e.chunk_tokens)
         p = len(self.staging)
         toks = np.zeros((p, cbucket), np.int32)
         clens = np.zeros((p,), np.int32)
@@ -788,12 +837,18 @@ class RequestLifecycle:
             self.stats.itl_samples.append(
                 (r.finish_time - r.first_token_time) / (len(r.output) - 1))
 
-    def retire(self, *, free_host: Callable[[int], None]) -> None:
+    def retire(self, *, free_host: Callable[[int], None],
+               publish: Optional[Callable[[Request], bool]] = None) -> None:
         """Scan both tiers for done requests: finish them, release
-        budgets/slots, sample latencies and SLO outcomes."""
+        budgets/slots, sample latencies and SLO outcomes.  ``publish``
+        (the prefix cache's retirement hook) sees each request while
+        its KV is still live; a True return means the cache ADOPTED a
+        host retiree's pool chains, so ``free_host`` is skipped."""
         now = time.perf_counter()
         for i, r in enumerate(self.slots):
             if r is not None and r.done:
+                if publish is not None:
+                    publish(r)         # device slots always still free
                 transition(r, Phase.FINISHED)
                 r.finish_time = now
                 self.admission.release("device", r.kv_reserved)
@@ -802,9 +857,11 @@ class RequestLifecycle:
         done_hosts = [rid for rid, r in self.host_requests.items() if r.done]
         for rid in done_hosts:
             r = self.host_requests.pop(rid)
+            adopted = publish(r) if publish is not None else False
             transition(r, Phase.FINISHED)
             r.finish_time = now
             self.admission.release("host", r.kv_reserved)
-            free_host(rid)
+            if not adopted:
+                free_host(rid)
             self.host_slot_owner.pop(r.slot, None)
             self._latency_sample(r)

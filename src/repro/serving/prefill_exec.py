@@ -33,7 +33,80 @@ from repro.models.kv_cache import StackState
 from repro.serving.lifecycle import pow2_ceil, transition
 from repro.serving.request import Phase, Request
 from repro.serving.sampler import sample
-from repro.serving.tiermove import splice_recurrent_rows
+from repro.serving.tiermove import (copy_state_row, set_recurrent_row,
+                                    snapshot_recurrent_row,
+                                    splice_recurrent_rows,
+                                    write_prefix_into_row)
+
+
+def seed_prefix_hits(eng, placements: List[Tuple[Request, str, int]],
+                     rows: List[int]) -> None:
+    """Prefix-cache admission matching for freshly staged requests:
+    find the longest cached prefix of each prompt, seed the staging
+    row with its KV (and recurrent carry for hybrids), and advance
+    ``InflightPrefill.consumed`` to the hit length — chunked prefill
+    then resumes at the suffix (``prefill_chunk`` queries at absolute
+    position ``lengths``), and the scheduler's chunk backlog prices
+    only the uncached tokens.  Host-tier placements additionally get
+    the prefix into their pool chains: a fork (refcount++, zero
+    copies) when the entry is host-resident, a device→pool write when
+    it is not.  Every move is bit-exact, so tokens match a cache-off
+    run exactly."""
+    cache = eng._prefix
+    for (req, tier, slot), row in zip(placements, rows):
+        eng.stats.prefix_lookups += 1
+        hit = cache.match(req.prompt)
+        if hit is None:
+            continue
+        entry, n = hit
+        pool = eng._executor.pool if eng._executor is not None else None
+        if entry.tier == "host":
+            # fallible pool reads FIRST: the pool's LRU may reclaim the
+            # entry from the host-executor thread between match and
+            # here — bail before touching any staging state and the
+            # admission degrades to a plain miss
+            try:
+                per_layer = [pool.gather(entry.owner, li, n)
+                             for li in range(eng.cfg.num_attn_layers)]
+                pool.touch(entry.owner)
+            except KeyError:
+                continue
+            eng._staging_state = write_prefix_into_row(
+                eng.cfg, eng._staging_state, per_layer, row, n)
+            if eng._hybrid and entry.carry is not None:
+                eng._staging_state = set_recurrent_row(
+                    eng.cfg, eng._staging_state, row, entry.carry)
+        else:
+            eng._staging_state = copy_state_row(
+                eng.cfg, eng._staging_state, eng._prefix_state,
+                entry.row, row, n)
+        if tier == "host":
+            # the request's chains must hold the prefix too (host
+            # decode gathers the full sequence from the pool): drop the
+            # admission-time reservation, then fork the cached chains
+            # (host entry) or write the device rows out (device entry)
+            pool.free(req.request_id)
+            if entry.tier == "host":
+                try:
+                    pool.fork(entry.owner, req.request_id, n)
+                except KeyError:
+                    # entry evicted between gather and fork: rebuild
+                    # chains from the gathered arrays (pages we just
+                    # freed more than cover the prefix)
+                    pool.allocate(req.request_id, req.prompt_len)
+                    for li, (kk, vv) in enumerate(per_layer):
+                        pool.write_prompt(
+                            req.request_id, li, kk, vv,
+                            advance=(li == eng.cfg.num_attn_layers - 1))
+            else:
+                eng._executor.migrate_prompt(
+                    req.request_id,
+                    stack_row_kv_to_pool_layers(eng.cfg, eng._prefix_state,
+                                                entry.row, n))
+        eng.lc.staging[row].consumed = n
+        eng.stats.prefix_hits += 1
+        eng.stats.prefix_hit_tokens += n
+    eng._refresh_prefix_gauges()
 
 
 def prefill_into_slot(eng, req: Request, slot: int) -> None:
@@ -118,6 +191,14 @@ def finish_chunks(eng, plan, clogits) -> None:
                                             row, ent.consumed, start=start))
         if ent.consumed >= ent.req.prompt_len:
             req = ent.req
+            if eng._prefix is not None and eng._hybrid:
+                # the staging row's carry right now is the prompt-end
+                # carry — the only moment it exists before decode
+                # advances it; prefix-cache publication needs it to
+                # stay bit-exact (decode and prefill kernels reduce
+                # floats in different orders)
+                req._prefix_carry = snapshot_recurrent_row(
+                    eng.cfg, eng._staging_state, row)
             req.output.append(toks[row])
             if req.first_token_time is None:
                 req.first_token_time = now

@@ -1,0 +1,300 @@
+"""Cross-request prefix cache spanning both KV tiers.
+
+Chat and CoT workloads share long system prompts and conversation
+histories; re-prefilling them from token zero on every admission is
+the single biggest TTFT lever left in the stack (ROADMAP item 1, NEO's
+host-resident-KV argument).  This module is the cache's index and
+policy; the KV mechanics live in the existing primitives:
+
+  * **Device tier** — hot prefixes stay resident in dedicated cache
+    rows of a small ``StackState`` (``EngineConfig.prefix_cache_slots``
+    rows, separate from the decode state so decode-step writes can
+    never touch position 0 of a cached row).  Publication and seeding
+    are both ``tiermove.copy_state_row`` — one bit-exact full-row copy
+    each way, recurrent carry (hybrids) included.
+  * **Host tier** — overflow demotes to the ``PagedKVPool``: entries
+    own refcounted page chains under negative owner ids (request ids
+    are non-negative, so the namespaces cannot collide), registered
+    with the pool's LRU so allocation pressure reclaims them
+    automatically.  A host-tier admission hitting a host entry FORKS
+    the chains (refcount++, zero copies); copy-on-write protects the
+    shared pages when the request writes past the prefix boundary.
+
+Match semantics: longest common prefix over whole entries, capped at
+``prompt_len - 1`` (at least one suffix token always prefills, so the
+first output token's logits are computed fresh — the exactness bar).
+Attention-only stacks may truncate an entry to the common prefix;
+hybrid (recurrent) stacks require the FULL entry to match, because a
+running carry exists only at the entry's snapshot boundary — a shorter
+match is simply a miss, which is always exact.
+
+At retire, a request's PROMPT span is published back: device if a
+cache row is free (LRU-demoting a colder entry to the host pool when
+not), else straight to the pool — a host-tier retiree's chains are
+*forked* (refcount++, zero copies).  Only the prompt: its KV was
+computed by (chunked) prefill, and chunk boundaries are causally
+inert, so cached positions are bit-identical to what a cold prefill
+of any extending prompt would produce.  Decode-written KV is NOT
+published — the sequential decode kernels are a different float
+reduction order than the prefill scan, so reusing them would break
+the exactness bar (a turn's outputs still reach the cache one turn
+later, through the next prompt's prefill).  For hybrids the carry is
+snapshotted at prefill *graduation* (position ``prompt_len``), before
+decode advances it.  Chunked prefill then resumes at the suffix:
+admission
+seeds the staging row, sets ``InflightPrefill.consumed`` to the hit
+length, and the scheduler's chunk backlog prices only the uncached
+suffix (``repro.core.placement.chargeable_prefill_tokens`` — the same
+predicate the simulator runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import placement
+from repro.core.overlap_engine import stack_row_kv_to_pool_layers
+from repro.models.config import BlockKind
+from repro.serving.tiermove import (copy_state_row, set_recurrent_row,
+                                    snapshot_recurrent_row)
+
+__all__ = ["PrefixCache", "PrefixEntry", "publish_retired"]
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached prefix.  ``tokens`` is the cached prompt span;
+    device entries live in ``row`` of the engine's prefix state, host
+    entries own pool chains under owner id ``-entry_id`` (with the
+    recurrent carry, if any, snapshotted to host numpy — paged KV
+    cannot represent a running carry)."""
+
+    entry_id: int
+    tokens: Tuple[int, ...]
+    tier: str                          # "device" | "host"
+    row: Optional[int] = None          # prefix-state row (device tier)
+    carry: Optional[List] = None       # recurrent snapshot (host tier)
+    last_use: int = 0
+
+    @property
+    def owner(self) -> int:
+        """Pool owner id of the host-tier chains."""
+        return -self.entry_id
+
+
+class PrefixCache:
+    """The index: longest-prefix match, LRU ordering, device-row
+    accounting, eviction/demotion policy.  The engine executes the KV
+    moves; entry state transitions happen here."""
+
+    def __init__(self, *, device_rows: int, hybrid: bool,
+                 max_entries: int = 64) -> None:
+        self.hybrid = hybrid
+        self.max_entries = max_entries
+        self.entries: Dict[int, PrefixEntry] = {}
+        self._free_rows: List[int] = list(range(device_rows))
+        self._ids = itertools.count(1)
+        self._tick = 0
+
+    def _touch(self, e: PrefixEntry) -> None:
+        self._tick += 1
+        e.last_use = self._tick
+
+    # --- matching ------------------------------------------------------
+    def _usable(self, e: PrefixEntry, prompt: Sequence[int]) -> int:
+        """Usable hit length of ``e`` against ``prompt`` (0 = miss)."""
+        raw = placement.longest_common_prefix(e.tokens, prompt)
+        if self.hybrid and raw < len(e.tokens):
+            return 0                   # no carry exists mid-entry
+        cap = len(prompt) - placement.chargeable_prefill_tokens(
+            len(prompt), raw)
+        if self.hybrid and cap < len(e.tokens):
+            return 0                   # full entry would not fit the cap
+        return cap
+
+    def match(self, prompt: Sequence[int]
+              ) -> Optional[Tuple[PrefixEntry, int]]:
+        """Longest usable cached prefix of ``prompt`` (ties prefer the
+        device tier — cheaper to seed), refreshing the winner's LRU
+        position.  None on a miss."""
+        best: Optional[PrefixEntry] = None
+        best_n = 0
+        # list() everywhere entries are walked: the pool's on_evict may
+        # pop an entry from the host-executor thread mid-iteration
+        for e in list(self.entries.values()):
+            n = self._usable(e, prompt)
+            if n > best_n or (n == best_n and n > 0 and best is not None
+                              and best.tier == "host"
+                              and e.tier == "device"):
+                best, best_n = e, n
+        if best is None or best_n <= 0:
+            return None
+        self._touch(best)
+        return best, best_n
+
+    def match_len(self, prompt: Sequence[int]) -> int:
+        """Pure probe (no LRU touch, no stats) — the TierPlacer's
+        deadline backpressure prices the uncached suffix with this."""
+        return max((self._usable(e, prompt)
+                    for e in list(self.entries.values())), default=0)
+
+    # --- eviction ------------------------------------------------------
+    def forget_owner(self, owner: int, stats) -> None:
+        """Pool-initiated LRU eviction: the pool reclaimed a host
+        entry's pages under allocation pressure — drop the index entry
+        (may fire from the host-executor thread)."""
+        e = self.entries.pop(-owner, None)
+        if e is not None:
+            stats.prefix_evictions += 1
+
+    def drop(self, eng, e: PrefixEntry) -> None:
+        """Remove an entry outright, releasing its storage."""
+        self.entries.pop(e.entry_id, None)
+        if e.tier == "device":
+            self._free_rows.append(e.row)
+        elif eng._executor is not None:
+            eng._executor.pool.free(e.owner)
+        eng.stats.prefix_evictions += 1
+
+    def _demote_or_drop(self, eng, e: PrefixEntry) -> None:
+        """Evict a device entry: demote its KV (and hybrid carry
+        snapshot) to the paged host pool when there is room, else drop
+        it.  Either way its device row frees."""
+        pool = eng._executor.pool if eng._executor is not None else None
+        n = len(e.tokens)
+        if pool is not None and pool.can_admit(n):
+            try:
+                eng._executor.migrate_prompt(
+                    e.owner, stack_row_kv_to_pool_layers(
+                        eng.cfg, eng._prefix_state, e.row, n))
+            except MemoryError:
+                self.drop(eng, e)
+                return
+            if self.hybrid:
+                e.carry = snapshot_recurrent_row(eng.cfg, eng._prefix_state,
+                                                 e.row)
+            self._free_rows.append(e.row)
+            e.tier, e.row = "host", None
+            pool.mark_evictable(e.owner)
+            eng.stats.prefix_demotions += 1
+        else:
+            self.drop(eng, e)
+
+    def _claim_row(self, eng) -> Optional[int]:
+        """A free device cache row, LRU-demoting the coldest device
+        entry when all rows are held.  None when the cache has no
+        device rows at all."""
+        if self._free_rows:
+            return self._free_rows.pop()
+        dev = [e for e in list(self.entries.values())
+               if e.tier == "device"]
+        if not dev:
+            return None
+        self._demote_or_drop(eng, min(dev, key=lambda e: e.last_use))
+        return self._free_rows.pop() if self._free_rows else None
+
+    # --- device/host resident-byte gauges ------------------------------
+    def device_bytes(self, eng) -> int:
+        per_tok = 0
+        if eng._prefix_state is not None:
+            for j, kind in enumerate(eng.cfg.block_pattern):
+                if kind == BlockKind.ATTN:
+                    k = eng._prefix_state.per_entry[j].k   # (G,B,S,KV,D)
+                    per_tok += 2 * k.shape[0] * k.shape[3] * k.shape[4] \
+                        * k.dtype.itemsize
+        return sum(len(e.tokens) for e in list(self.entries.values())
+                   if e.tier == "device") * per_tok
+
+    def host_bytes(self, eng) -> int:
+        if eng._executor is None:
+            return 0
+        pool = eng._executor.pool
+        return sum(pool.owner_pages(e.owner)
+                   for e in list(self.entries.values())
+                   if e.tier == "host") * pool.page_bytes
+
+
+def publish_retired(eng, req) -> bool:
+    """Publish a retiring request's PROMPT span back to the cache
+    instead of freeing it.  Returns True when the request's host pool
+    chains were ADOPTED by the cache — the caller must then skip
+    ``free_host`` (the fork path below shares pages instead, so it
+    returns False and lets the normal free drop the request's refs).
+    Only prompt positions are cached: they are prefill-computed, the
+    exactness invariant (see module docstring) — for hybrids the
+    position-``prompt_len`` carry was snapshotted at graduation
+    (``Request._prefix_carry``)."""
+    cache = eng._prefix
+    if cache is None or req.error is not None:
+        return False
+    n = req.prompt_len
+    if n < 2:
+        return False
+    carry = getattr(req, "_prefix_carry", None)
+    if cache.hybrid and carry is None:
+        return False                   # no graduation snapshot: skip
+    tokens = tuple(req.prompt)[:n]
+    for e in list(cache.entries.values()):
+        if len(e.tokens) >= n and e.tokens[:n] == tokens:
+            cache._touch(e)            # already covered by a hot entry
+            return False
+        if tokens[:len(e.tokens)] == e.tokens:
+            cache.drop(eng, e)         # strictly extended: supersede
+    while len(cache.entries) >= cache.max_entries:
+        cache.drop(eng, min(list(cache.entries.values()),
+                            key=lambda e: e.last_use))
+    eid = next(cache._ids)
+    pool = eng._executor.pool if eng._executor is not None else None
+    if req.tier == "device":
+        row = cache._claim_row(eng)
+        if row is not None:
+            # the slot's first n positions are prefill-produced (decode
+            # only appends past them); the row's recurrent state is
+            # overwritten with the graduation carry — the slot's own
+            # carry has decode steps folded in
+            eng._prefix_state = copy_state_row(
+                eng.cfg, eng._prefix_state, eng.state, req.slot, row, n)
+            if cache.hybrid:
+                eng._prefix_state = set_recurrent_row(
+                    eng.cfg, eng._prefix_state, row, carry)
+            e = PrefixEntry(entry_id=eid, tokens=tokens, tier="device",
+                            row=row)
+        elif pool is not None and pool.can_admit(n):
+            # no device headroom: demote straight from the slot
+            e = PrefixEntry(entry_id=eid, tokens=tokens, tier="host")
+            try:
+                eng._executor.migrate_prompt(
+                    e.owner, stack_row_kv_to_pool_layers(
+                        eng.cfg, eng.state, req.slot, n))
+            except MemoryError:
+                eng._refresh_prefix_gauges()
+                return False
+            if cache.hybrid:
+                e.carry = carry
+            pool.mark_evictable(e.owner)
+        else:
+            return False
+        cache.entries[eid] = e
+        cache._touch(e)
+        eng._refresh_prefix_gauges()
+        return False                   # the slot itself still frees
+    if pool is None:
+        return False
+    # host tier: fork the request's chains (refcount++, zero copies) —
+    # the prompt pages are shared, the retire-time free then drops the
+    # request's own references.  The last forked page may also hold
+    # decode-written positions past n; the entry's length hides them.
+    e = PrefixEntry(entry_id=eid, tokens=tokens, tier="host")
+    try:
+        pool.fork(req.request_id, e.owner, n)
+    except KeyError:
+        eng._refresh_prefix_gauges()
+        return False
+    if cache.hybrid:
+        e.carry = carry
+    pool.mark_evictable(e.owner)
+    cache.entries[eid] = e
+    cache._touch(e)
+    eng._refresh_prefix_gauges()
+    return False

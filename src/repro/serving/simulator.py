@@ -63,6 +63,11 @@ class SimConfig:
     # Applied to every hybrid scheduler so APEX-vs-NEO deltas remain
     # attributable to strategy selection alone.
     tier_rebalance: bool = True
+    # cross-request prefix cache (mirrors EngineConfig.prefix_cache):
+    # admitted prompts are charged only their uncached suffix, through
+    # the SAME repro.core.placement predicate the engine prices with
+    prefix_cache: bool = True
+    prefix_cache_entries: int = 32
 
 
 class ServingSimulator:
@@ -147,6 +152,33 @@ class ServingSimulator:
                                   * self._host_rate_per_layer() / ctx_est))
             return dev_tps, host_tps, host_cap
 
+        # prefix cache mirror: retired prompts publish their token
+        # tuples; admission charges each prompt only its uncached
+        # suffix via the SHARED predicate
+        # (placement.chargeable_prefill_tokens) — the same rule the
+        # engine's seed_prefix_hits/TierPlacer price with, so sim and
+        # engine TTFT effects cannot drift.  KV *residency* still
+        # reserves the full prompt (cached KV occupies memory too).
+        published: List[tuple] = []
+
+        def cached_prefix(prompt) -> int:
+            if not s.prefix_cache:
+                return 0
+            return max((placement.longest_common_prefix(p, prompt)
+                        for p in published), default=0)
+
+        def publish(r: Request) -> None:
+            if not s.prefix_cache:
+                return
+            tok = tuple(r.prompt)
+            for p in published:
+                if len(p) >= len(tok) and p[:len(tok)] == tok:
+                    return             # covered by an existing entry
+            published[:] = [p for p in published if tok[:len(p)] != p]
+            published.append(tok)
+            if len(published) > s.prefix_cache_entries:
+                published.pop(0)       # FIFO ≈ LRU at this granularity
+
         def admit() -> None:
             """GPU-first placement (rule 1).  Overflow goes to the host
             tier only while (a) the host can actually service it — the
@@ -165,6 +197,8 @@ class ServingSimulator:
                         and len(dev) + len(prefill_q) < s.max_device_batch):
                     dev_used += need
                     r.phase = Phase.PREFILL
+                    r._charge = placement.chargeable_prefill_tokens(
+                        r.prompt_len, cached_prefix(r.prompt))
                     prefill_q.append(waiting.pop(0))
                     continue
                 if (hybrid and host_used + need <= self.host_kv_tokens
@@ -190,6 +224,8 @@ class ServingSimulator:
                         host_queued += 1
                         r.phase = Phase.PREFILL
                         r._host = True  # type: ignore[attr-defined]
+                        r._charge = placement.chargeable_prefill_tokens(
+                            r.prompt_len, cached_prefix(r.prompt))
                         prefill_q.append(waiting.pop(0))
                         continue
                 break
@@ -243,17 +279,21 @@ class ServingSimulator:
             prefill_tokens = 0
             while prefill_q and prefill_tokens < s.prefill_chunk:
                 r = prefill_q[0]
-                if prefill_tokens + r.prompt_len > s.prefill_chunk and prefill_tokens:
+                # only the uncached suffix costs prefill compute (and,
+                # for host placements, link transfer — a cached prefix
+                # is forked inside the pool, no bytes cross)
+                charge = getattr(r, "_charge", r.prompt_len)
+                if prefill_tokens + charge > s.prefill_chunk and prefill_tokens:
                     break
-                prefill_tokens += r.prompt_len
+                prefill_tokens += charge
                 r.phase = (Phase.DECODE_HOST
                            if getattr(r, "_host", False) else Phase.DECODE_DEVICE)
                 (host if getattr(r, "_host", False) else dev).append(r)
                 prefill_q.pop(0)
                 if getattr(r, "_host", False):
-                    # offloaded prompt KV crosses the link
+                    # offloaded (uncached) prompt KV crosses the link
                     iter_time += self.pm.t_transfer(
-                        r.prompt_len * self.costs.kv_bytes_per_pos)
+                        charge * self.costs.kv_bytes_per_pos)
             if prefill_tokens:
                 iter_time += self.pm.t_prefill(prefill_tokens, prefill_tokens)
 
@@ -325,6 +365,7 @@ class ServingSimulator:
                     r.finish_time = t
                     pool.remove(r)
                     finished.append(r)
+                    publish(r)
                     if tier == "dev":
                         dev_used -= r.kv_demand()
                     else:

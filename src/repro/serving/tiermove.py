@@ -21,6 +21,7 @@ from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import BlockKind, ModelConfig
 from repro.models.kv_cache import StackState
@@ -91,6 +92,85 @@ def upload_host_kv_to_slot(cfg: ModelConfig, state: StackState,
             new_entries.append(entry)
     lengths = state.lengths.at[slot].set(n)
     return StackState(per_entry=tuple(new_entries), lengths=lengths)
+
+
+def copy_state_row(cfg: ModelConfig, dst_state: StackState,
+                   src_state: StackState, src_row: int, dst_row: int,
+                   n: int) -> StackState:
+    """Copy one row of EVERY entry (attention KV and recurrent carry)
+    from ``src_state`` into ``dst_state``, setting the destination
+    row's length to ``n`` — the prefix cache's device-side move:
+    publication (engine slot → cache row) and seeding (cache row →
+    staging row) are the same bit-exact full-row copy.  Positions past
+    ``n`` ride along but stay causally invisible behind the length."""
+    new_entries = tuple(
+        jax.tree.map(
+            lambda big, small: big.at[:, dst_row].set(
+                small[:, src_row].astype(big.dtype)),
+            entry, src_state.per_entry[j])
+        for j, entry in enumerate(dst_state.per_entry))
+    lengths = dst_state.lengths.at[dst_row].set(n)
+    return StackState(per_entry=new_entries, lengths=lengths)
+
+
+def write_prefix_into_row(cfg: ModelConfig, state: StackState,
+                          per_layer_kv: List[Tuple], row: int,
+                          n: int) -> StackState:
+    """Seed ``row`` with ``n`` cached positions of per-attention-layer
+    (K, V) from the host tier (a prefix-cache host hit promoting into a
+    staging row).  Unlike ``upload_host_kv_to_slot`` no recurrent rows
+    are spliced — a hybrid entry's carry is restored separately from
+    its host-side snapshot (``set_recurrent_row``)."""
+    new_entries = []
+    for j, kind in enumerate(cfg.block_pattern):
+        entry = state.per_entry[j]
+        if kind == BlockKind.ATTN:
+            k, v = entry.k, entry.v
+            for g in range(cfg.num_groups):
+                abs_layer = g * cfg.pattern_period + j
+                li = cfg.attn_layer_indices.index(abs_layer)
+                kk, vv = per_layer_kv[li]
+                k = k.at[g, row, :n].set(jnp.asarray(kk[:n], k.dtype))
+                v = v.at[g, row, :n].set(jnp.asarray(vv[:n], v.dtype))
+            new_entries.append(entry._replace(k=k, v=v))
+        else:
+            new_entries.append(entry)
+    lengths = state.lengths.at[row].set(n)
+    return StackState(per_entry=tuple(new_entries), lengths=lengths)
+
+
+def snapshot_recurrent_row(cfg: ModelConfig, state: StackState,
+                           row: int) -> List:
+    """Pull one row of every recurrent (non-ATTN) entry to host numpy —
+    the carry snapshot a hybrid prefix-cache entry stores when its KV
+    demotes to the paged pool (per-position KV pages cannot represent a
+    running carry).  Entries are None for ATTN positions."""
+    out: List = []
+    for j, kind in enumerate(cfg.block_pattern):
+        if kind == BlockKind.ATTN:
+            out.append(None)
+        else:
+            out.append(jax.tree.map(lambda a: np.asarray(a[:, row]),
+                                    state.per_entry[j]))
+    return out
+
+
+def set_recurrent_row(cfg: ModelConfig, state: StackState, row: int,
+                      carry: List) -> StackState:
+    """Restore a ``snapshot_recurrent_row`` carry into ``row`` — the
+    inverse move, bit-exact (same dtype round-trip as the paged KV
+    path)."""
+    new_entries = []
+    for j, kind in enumerate(cfg.block_pattern):
+        entry = state.per_entry[j]
+        if kind == BlockKind.ATTN or carry[j] is None:
+            new_entries.append(entry)
+        else:
+            new_entries.append(jax.tree.map(
+                lambda big, small: big.at[:, row].set(
+                    jnp.asarray(small, big.dtype)),
+                entry, carry[j]))
+    return StackState(per_entry=tuple(new_entries), lengths=state.lengths)
 
 
 def demote_slot_to_host_row(cfg: ModelConfig, state: StackState, slot: int,

@@ -279,3 +279,57 @@ def test_backpressure_429_deadline_impossible(served):
             assert pool.depth() == 0       # shed before any engine state
         finally:
             stop()
+
+
+# --- session affinity (PR 8 satellite) -----------------------------------
+
+def test_session_affinity_sticky_and_failover(served):
+    """``session_id`` pins a conversation to the replica that served
+    its first turn; a dead pin falls back to a live replica and
+    re-pins.  Generation is part of the pin, so a respawned replica
+    (same index, fresh engine, empty prefix cache) never satisfies a
+    stale pin by accident."""
+    cfg, params = served
+    with EngineReplicaPool(_factory(cfg, params), replicas=2) as pool:
+        rep = pool.route("conv-a")
+        for _ in range(4):                 # sticky regardless of load
+            assert pool.route("conv-a") is rep
+        other = pool.route("conv-b")       # independent pin
+        assert pool.route("conv-b") is other
+
+        # submissions honor the pin end to end
+        h1 = pool.submit([2, 3, 5], 4, session_id="conv-a")
+        h2 = pool.submit([2, 3, 5, 7], 4, session_id="conv-a")
+        assert h1.replica_index == h2.replica_index == rep.index
+        assert h1.result(timeout=120.0) and h2.result(timeout=120.0)
+
+        # unpinned submissions still balance by load
+        assert pool.submit([2, 3], 4).result(timeout=120.0)
+
+        # kill the pinned replica: the pin is invalid (dead now,
+        # generation-mismatched after the respawn) so routing falls
+        # back to a live replica and re-pins there
+        pool.inject_fault(rep.index)
+        deadline = time.time() + 30.0     # the fault lands on the
+        while time.time() < deadline:     # driver's next pump — poll
+            cur = pool.replicas[rep.index]
+            if not cur.alive or cur.generation != rep.generation:
+                break
+            time.sleep(0.05)
+        rep2 = pool.route("conv-a")
+        assert rep2.alive
+        assert (rep2.index, rep2.generation) != (rep.index, rep.generation)
+        assert pool.route("conv-a").index == rep2.index
+
+
+def test_session_affinity_over_http(gateway_stack):
+    """The gateway forwards ``session_id`` from the request body; both
+    turns of a session land on the same replica (the terminal SSE
+    event reports which one served the stream)."""
+    _, _, _, gateway = gateway_stack
+    r1 = sse_chat("127.0.0.1", gateway.port, [4, 5, 6],
+                  max_new_tokens=3, session_id="http-conv")
+    r2 = sse_chat("127.0.0.1", gateway.port, [4, 5, 6, 7, 8],
+                  max_new_tokens=3, session_id="http-conv")
+    assert r1["status"] == r2["status"] == 200
+    assert r1["done"]["replica"] == r2["done"]["replica"]
