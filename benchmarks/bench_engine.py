@@ -42,6 +42,12 @@ Measures, on the container's CPU backend:
     percentiles per concurrency level, open-loop Poisson (full mode),
     and the 429/503 shed rate when a tiny bounded gateway queue is
     overloaded; the CI gate asserts its smoke flags.
+  * ``fault_soak`` (all modes) — a closed-loop run under a deterministic
+    chaos plan (host worker deaths + stalls, pool allocation failures,
+    latency spikes) plus a blocked-swap preemption that must take the
+    recompute escape hatch; the CI gate asserts every request completes
+    bit-identical to a fault-free run, the watchdog fallback and
+    recompute both engaged, and zero pool pages / host slots leak.
 
 Emits ``BENCH_engine.json`` at the repo root (CI uploads it as an
 artifact so the perf trajectory accumulates per PR).  The JSON carries
@@ -568,6 +574,100 @@ def bench_preemption(cfg, params, *, smoke: bool, host_workers: int) -> dict:
     }
 
 
+def bench_fault_soak(cfg, params, *, smoke: bool, host_workers: int) -> dict:
+    """Chaos soak (all modes): a deterministic fault plan — a host
+    worker death, a wedged host worker stalled past the watchdog
+    deadline, a failed pool allocation and a latency spike — runs
+    against the offload-heavy decode mix, then a blocked-swap
+    preemption exercises the recompute-from-scratch escape hatch.  The
+    CI gate asserts zero lost/hung requests, >= 1 watchdog fallback,
+    >= 1 recompute preemption, bit-identical tokens vs a fault-free
+    run at the same geometry, and zero leaked pool pages / host
+    slots."""
+    n_req = 6 if smoke else 10
+    out_len = 8 if smoke else 24
+    plan = "host_error@2,host_stall@4:1.5,pool_alloc@2,latency_spike@3:0.05"
+    rng = np.random.default_rng(9)
+    protos = [make_synthetic_request(rng, prompt_len=12, output_len=out_len,
+                                     vocab=cfg.vocab_size)
+              for _ in range(n_req)]
+
+    # fault-free reference at the SAME geometry (the control that
+    # isolates the recovery machinery — device-vs-host tier exactness
+    # is tier-1's bar, tests/test_overlap.py)
+    ref_eng = Engine(cfg, params, _engine_config(
+        device_slots=2, host_slots=n_req, cache_len=128, page_size=32,
+        host_pool_pages=512, perf_model="analytic",
+        host_workers=host_workers, tier_rebalance=False,
+        prefix_cache=False))
+    try:
+        ref = _fresh(protos)
+        ref_eng.run(ref)
+    finally:
+        ref_eng.shutdown()
+    ref_by_prompt = {tuple(r.prompt): list(r.output) for r in ref}
+
+    # chaos soak: offload-heavy, the plan firing mid-run
+    eng = Engine(cfg, params, _engine_config(
+        device_slots=2, host_slots=n_req, cache_len=128, page_size=32,
+        host_pool_pages=512, perf_model="analytic",
+        host_workers=host_workers, tier_rebalance=False,
+        prefix_cache=False, fault_plan=plan))
+    try:
+        reqs = _fresh(protos)
+        t0 = time.perf_counter()
+        eng.run(reqs, max_iterations=20000)     # bounded: a hang shows
+        soak_wall = time.perf_counter() - t0    # up as completed < n
+        stats = eng.stats
+        completed = sum(r.done and not r.failed for r in reqs)
+        identical = all(list(r.output) == ref_by_prompt[tuple(r.prompt)]
+                        for r in reqs)
+        fired = eng._faults.snapshot()["fired"] if eng._faults else {}
+        pool = eng._executor.pool if eng._executor else None
+        pages_leaked = (pool.pages.shape[1] - pool.num_free) if pool else 0
+        host_slots_leaked = len(eng.lc.host_requests)
+        degradation = stats.degradation()
+    finally:
+        eng.shutdown()
+
+    # blocked-swap preemption: the one-page pool cannot take the
+    # victim, so the urgent admission must recompute it from scratch
+    eng2 = Engine(cfg, params, _engine_config(
+        device_slots=1, host_slots=1, cache_len=256, page_size=32,
+        host_pool_pages=1, perf_model="analytic",
+        host_workers=host_workers, prefix_cache=False))
+    try:
+        resident = Request(prompt=[1] * 12, max_new_tokens=16)
+        eng2.submit(resident)
+        eng2.step()
+        urgent = Request(prompt=[2] * 200, max_new_tokens=4, priority=1)
+        eng2.submit(urgent)
+        it0 = eng2.stats.iterations
+        while eng2.has_work and eng2.stats.iterations < it0 + 4000:
+            eng2.step()
+        recomputes = eng2.stats.preemption_recomputes
+        preempt_done = (resident.done and not resident.failed
+                        and urgent.done and not urgent.failed)
+    finally:
+        eng2.shutdown()
+
+    return {
+        "fault_plan": plan,
+        "requests": n_req,
+        "completed": int(completed),
+        "soak_wall_s": soak_wall,
+        "host_fallbacks": stats.host_fallbacks,
+        "host_breaker_trips": stats.host_breaker_trips,
+        "faults_fired": dict(fired),
+        "preemption_recomputes": int(recomputes),
+        "preemption_requests_completed": bool(preempt_done),
+        "tokens_bit_identical_to_fault_free": bool(identical),
+        "pool_pages_leaked": int(pages_leaked),
+        "host_slots_leaked": int(host_slots_leaked),
+        "degradation_after_soak": degradation,
+    }
+
+
 def bench_asym_heavy(cfg, params, *, host_workers: int) -> dict:
     """1 device slot vs a large host cohort at long context — the
     regime where Algorithm 1 leans hybrid.  Reports the strategy mix."""
@@ -747,14 +847,16 @@ def bench_http_serving(cfg, params, *, smoke: bool, host_workers: int) -> dict:
 
 
 def check_regression(decode: dict, preempt: dict, http: dict,
-                     hybrid: dict, chat: dict) -> int:
+                     hybrid: dict, chat: dict, soak: dict) -> int:
     """CI gate: fail on a >REGRESSION_TOLERANCE drop vs the committed
     smoke baseline on decode throughput or overlap efficiency, on any
     deadline miss in the smoke preemption sub-scenario (urgent requests
     carry a generous TTFT SLO that preemption must keep), on the
-    hybrid fast-path guarantees (admission ratio, chunk co-run), or on
+    hybrid fast-path guarantees (admission ratio, chunk co-run), on
     the prefix-cache guarantees (nonzero hit rate, warm follow-up TTFT
-    ratio, bit-identical tokens)."""
+    ratio, bit-identical tokens), or on the fault-soak guarantees
+    (zero lost requests, fallback + recompute engaged, bit-identical
+    under chaos, zero leaked pool pages)."""
     failures = []
     for key, base in SMOKE_BASELINE.items():
         got = decode.get(key)
@@ -793,6 +895,26 @@ def check_regression(decode: dict, preempt: dict, http: dict,
     if not chat.get("tokens_bit_identical_to_no_cache"):
         failures.append("multi_turn_chat tokens_bit_identical_to_no_cache "
                         "is false (the prefix cache must be exact)")
+    if soak.get("completed") != soak.get("requests"):
+        failures.append(f"fault_soak: {soak.get('completed')}/"
+                        f"{soak.get('requests')} requests completed — a "
+                        f"lost or hung request under injected faults")
+    if soak.get("host_fallbacks", 0) < 1:
+        failures.append("fault_soak host_fallbacks: expected >= 1 (the "
+                        "watchdog must absorb the injected host faults)")
+    if soak.get("preemption_recomputes", 0) < 1:
+        failures.append("fault_soak preemption_recomputes: expected >= 1 "
+                        "(the blocked swap must recompute its victim)")
+    if not soak.get("preemption_requests_completed"):
+        failures.append("fault_soak: the recompute-preemption requests "
+                        "did not all complete cleanly")
+    if not soak.get("tokens_bit_identical_to_fault_free"):
+        failures.append("fault_soak tokens_bit_identical_to_fault_free is "
+                        "false (recovery must be exact)")
+    if soak.get("pool_pages_leaked", 0) or soak.get("host_slots_leaked", 0):
+        failures.append(f"fault_soak leaks: "
+                        f"{soak.get('pool_pages_leaked')} pool pages, "
+                        f"{soak.get('host_slots_leaked')} host slots")
     if failures:
         print("REGRESSION GATE FAILED:")
         for f in failures:
@@ -863,8 +985,15 @@ def main() -> None:
     # bit-identical to a cache-disabled run
     chat = bench_multi_turn_chat(cfg, params, smoke=args.smoke,
                                  host_workers=args.host_workers)
+    # the fault-soak sub-scenario runs in smoke mode too: the CI gate
+    # asserts every request survives the chaos plan bit-identical to a
+    # fault-free run, the blocked swap recomputes its victim, and the
+    # engine leaks no pool pages or host slots
+    soak = bench_fault_soak(cfg, params, smoke=args.smoke,
+                            host_workers=args.host_workers)
     scenarios = {"preemption": preempt, "http_serving": http,
-                 "hybrid_decode": hybrid, "multi_turn_chat": chat}
+                 "hybrid_decode": hybrid, "multi_turn_chat": chat,
+                 "fault_soak": soak}
     if not args.smoke:
         scenarios["long_context"] = bench_long_context(
             cfg, params, host_workers=args.host_workers)
@@ -960,8 +1089,17 @@ def main() -> None:
           f"{chat['hit_rate']:.0%} ({chat['prefix_hit_tokens']} prompt "
           f"tokens served from cache, bit-identical: "
           f"{chat['tokens_bit_identical_to_no_cache']})")
+    print(f"  fault_soak: {soak['completed']}/{soak['requests']} survived "
+          f"'{soak['fault_plan']}' ({soak['host_fallbacks']} fallbacks, "
+          f"{soak['host_breaker_trips']} breaker trips, "
+          f"{soak['preemption_recomputes']} recomputes, bit-identical: "
+          f"{soak['tokens_bit_identical_to_fault_free']}, leaks: "
+          f"{soak['pool_pages_leaked']} pages / "
+          f"{soak['host_slots_leaked']} slots, degradation "
+          f"'{soak['degradation_after_soak']}')")
     if args.check:
-        sys.exit(check_regression(decode, preempt, http, hybrid, chat))
+        sys.exit(check_regression(decode, preempt, http, hybrid, chat,
+                                  soak))
 
 
 if __name__ == "__main__":

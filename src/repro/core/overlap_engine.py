@@ -169,6 +169,9 @@ class _Job:
     v: Any                           #               happens in the worker
     positions: np.ndarray            # (n,) token positions of valid rows
     rows: Optional[np.ndarray]       # (n,) valid row indices into q/k/v
+    # False for watchdog-fallback / breaker-open synchronous runs: the
+    # recovery path must not re-enter fault injection
+    inject: bool = True
 
 
 def stack_row_kv_to_pool_layers(cfg: ModelConfig, state: Any, row: int,
@@ -235,11 +238,15 @@ class HostExecutor:
     """
 
     def __init__(self, cfg: ModelConfig, pool: PagedKVPool,
-                 *, synchronous: bool = False, workers: int = 0) -> None:
+                 *, synchronous: bool = False, workers: int = 0,
+                 faults: Any = None) -> None:
         self.cfg = cfg
         self.pool = pool
         self.page_size = pool.page_size
         self.synchronous = synchronous
+        # duck-typed FaultInjector (repro.serving.faults) or None; only
+        # its on_host_job() hook is called, from _execute
+        self.faults = faults
         if workers <= 0:     # leave a core for the device dispatch thread
             workers = max(1, (os.cpu_count() or 2) - 1)
         self.workers = workers
@@ -248,6 +255,7 @@ class HostExecutor:
                                thread_name_prefix="host-attn")
             if workers > 1 else None)
         self._results: Dict[int, np.ndarray] = {}
+        self._abandoned: set = set()
         self._lock = threading.Lock()
         self._done = threading.Condition(self._lock)
         self._queue: "queue.Queue[Optional[_Job]]" = queue.Queue()
@@ -303,6 +311,42 @@ class HostExecutor:
         """Non-blocking readiness check (the paper's GPU re-check)."""
         with self._lock:
             return self._unwrap(job_id, self._results.pop(job_id, None))
+
+    def cancel(self, job_id: int) -> None:
+        """Abandon a submitted job: an already-published result is
+        discarded (buffer recycled), a still-in-flight job's eventual
+        publish is dropped at the publish site.  Safe even when the
+        abandoned worker is mid-write — ``append_rows`` writes at
+        explicit positions, so the watchdog's fallback recompute
+        rewrites the very same values (idempotent)."""
+        with self._done:
+            out = self._results.pop(job_id, None)
+            if out is not None:
+                if isinstance(out, np.ndarray):
+                    self._free_bufs.setdefault(out.shape, []).append(out)
+                return
+            self._abandoned.add(job_id)
+
+    def execute_sync(self, job_id: int, layer: int,
+                     request_ids: Sequence[int], q, k, v, positions,
+                     *, rows=None) -> np.ndarray:
+        """Run one cohort-layer attention job on the CALLER's thread
+        and return its output buffer directly (caller recycles it).
+
+        This is the watchdog's exact GPU-side* recovery path and the
+        breaker-open emit path: same transfer, same idempotent KV
+        append, same paged-attention kernel as the async route — so
+        the tokens are bit-identical by construction — but fault
+        injection is bypassed (the recovery path must not fail the
+        recovery).  (*engine-thread; the KV source of truth is the
+        paged pool either way.)"""
+        job = _Job(job_id, layer, list(request_ids), q, k, v,
+                   np.asarray(positions),
+                   None if rows is None else np.asarray(rows, np.int64),
+                   inject=False)
+        self._execute(job)
+        with self._done:
+            return self._unwrap(job_id, self._results.pop(job_id))
 
     def recycle(self, buf: np.ndarray) -> None:
         """Return a consumed result buffer for reuse by later jobs."""
@@ -369,7 +413,10 @@ class HostExecutor:
                 # publish the failure as the job's result (see _unwrap)
                 # and keep the dispatcher alive for subsequent jobs
                 with self._done:
-                    self._results[job.job_id] = e
+                    if job.job_id in self._abandoned:
+                        self._abandoned.discard(job.job_id)
+                    else:
+                        self._results[job.job_id] = e
                     self._done.notify_all()
 
     def _out_buffer(self, shape: tuple) -> np.ndarray:
@@ -381,6 +428,8 @@ class HostExecutor:
 
     def _execute(self, job: _Job) -> None:
         import time
+        if job.inject and self.faults is not None:
+            self.faults.on_host_job()
         t0 = time.perf_counter()
         # device→host transfer (no-op for float32 numpy inputs): doing
         # it here — not at submit — is the non-blocking handoff; the
@@ -422,7 +471,13 @@ class HostExecutor:
                 f.result()
         t2 = time.perf_counter()
         with self._done:
-            self._results[job.job_id] = out
+            if job.job_id in self._abandoned:
+                # watchdog gave up on this job; its (identical) output
+                # was recomputed already — drop the late publish
+                self._abandoned.discard(job.job_id)
+                self._free_bufs.setdefault(out.shape, []).append(out)
+            else:
+                self._results[job.job_id] = out
             self._transfer_time += t1 - t0
             self._compute_time += t2 - t1
             self._done.notify_all()

@@ -207,6 +207,20 @@ class AnalyticPerfModel:
                                * self.costs.kv_bytes_per_pos
                                + self.costs.state_bytes_per_row)
 
+    def t_recompute(self, prompt_tokens: int, emitted_tokens: int = 0) -> float:
+        """Recompute-from-scratch preemption cost: drop the victim's
+        KV, re-prefill its whole prompt and re-decode every token it
+        had already emitted (mean attended context grows from the
+        prompt over the emitted span).  Priced against ``t_migrate``
+        by ``placement.should_recompute_instead_of_swap`` — the
+        re-decode term makes swap win whenever it is feasible."""
+        prompt_tokens = max(prompt_tokens, 1)
+        emitted = max(emitted_tokens, 0)
+        t = self.t_prefill(prompt_tokens, prompt_tokens)
+        mean_ctx = prompt_tokens + emitted / 2.0
+        t += emitted * (self.t_linear(1) + self.t_gatt(1, mean_ctx))
+        return t
+
     # --- rates (paper notation) ---------------------------------------------
     # Attention-free stacks (pure SSM/xLSTM, kv_bytes_per_pos == 0) scan
     # no KV at all — treat a position as one recurrent-state row's bytes
@@ -305,6 +319,17 @@ class TablePerfModel:
         """Measured-table twin of ``AnalyticPerfModel.t_migrate``."""
         return self.t_transfer(max(n_tokens, 0) * self.kv_bytes_per_pos
                                + self.state_bytes_per_row)
+
+    def t_recompute(self, prompt_tokens: int, emitted_tokens: int = 0) -> float:
+        """Measured-table twin of ``AnalyticPerfModel.t_recompute``:
+        re-prefill the prompt plus re-decode each emitted token at its
+        growing context."""
+        prompt_tokens = max(prompt_tokens, 1)
+        emitted = max(emitted_tokens, 0)
+        t = self.t_prefill(prompt_tokens, prompt_tokens)
+        mean_ctx = prompt_tokens + emitted / 2.0
+        t += emitted * (self.t_linear(1) + self.t_gatt(1, mean_ctx))
+        return t
 
     def t_prefill(self, n_tokens: int, context: float) -> float:
         return self._eval("prefill", n_tokens)

@@ -18,7 +18,7 @@ analytic platform), and get a decision back.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence
+from typing import Any, Mapping, Optional, Sequence
 
 
 def _remaining(req: Any) -> int:
@@ -125,3 +125,44 @@ def deadline_impossible(*, elapsed: float, deadline: Optional[float],
     if deadline is None:
         return False
     return elapsed + predicted_ttft > deadline
+
+
+# --- graceful-degradation ladder ---------------------------------------
+#
+# Under memory pressure the serving stack sheds load in ONE fixed,
+# observable order — cheapest reversible action first, hard refusal
+# last.  Each rung names the action taken, and doubles as the /health
+# degradation level (index into the tuple = severity).  Engine and
+# gateway both map their recent-pressure signals through
+# ``degradation_level`` so the ladder cannot drift between layers.
+DEGRADATION_LADDER = (
+    "ok",            # no recent pressure
+    "prefix_evict",  # LRU-reclaimed cached prefix chains from the host pool
+    "demote",        # preempted device residents to the host tier (swap)
+    "recompute",     # dropped a victim's KV; it re-enters the queue
+    "shed",          # gateway refused new work outright (503)
+)
+
+
+def degradation_level(recent: Mapping[str, bool]) -> str:
+    """The current ladder rung: the most severe action with recent
+    activity (callers decide what "recent" means — the engine uses a
+    sliding window over pressure timestamps).  Unknown keys are
+    ignored so layers can carry private signals."""
+    level = "ok"
+    for rung in DEGRADATION_LADDER:
+        if recent.get(rung, False):
+            level = rung
+    return level
+
+
+def should_recompute_instead_of_swap(*, t_swap: float,
+                                     t_recompute: float) -> bool:
+    """Preemption escape-hatch pricing: drop the victim's KV and
+    recompute from scratch only when the perf model predicts that is
+    strictly cheaper than swapping the KV to the host tier.  Recompute
+    charges a full re-prefill plus re-decoding every already-emitted
+    token, so swap wins whenever it is feasible at realistic sizes —
+    recompute earns its keep when the swap path is blocked (no host
+    capacity), where callers invoke it unconditionally instead."""
+    return t_recompute < t_swap

@@ -1,27 +1,28 @@
-"""Fault tolerance & elasticity for 1000+-node deployments.
+"""Fault-tolerance primitives shared by training and serving.
 
-Pure-logic (testable without hardware) components the launchers wire
-together:
+Pure-logic (testable without hardware) components:
 
   * ``HeartbeatMonitor`` — marks workers dead after ``timeout`` without
     a beat, and flags *stragglers* whose step time exceeds
-    ``straggler_factor`` x the fleet median (mitigation: the launcher
-    re-dispatches the slow host's input shard to a hot spare — the
-    decision logic lives here, the transport in launch/).
-  * ``ElasticPlanner`` — given the live-host set, picks the largest
-    usable mesh (data-axis shrink in whole multiples; the model axis is
-    never shrunk because TP state can't be re-sharded without a
-    checkpoint round-trip) and emits a ``ReshardPlan``.
-  * ``RestartPolicy`` — crash-loop backoff with a budget, the
-    supervisor contract for the train driver: on worker loss, restore
-    from the newest committed checkpoint (training/checkpoint.py is
-    atomic) and continue.
+    ``straggler_factor`` x the fleet median.  The train launcher feeds
+    it host beats; the serving ``EngineReplicaPool`` feeds it replica
+    driver-thread beats so ``/health`` can flag a wedged driver before
+    its requests time out.
+  * ``RestartPolicy`` — crash-loop backoff with a budget.  The train
+    driver uses it as its supervisor contract (restore from the newest
+    committed checkpoint and continue); the serving engine reuses it as
+    the host-tier circuit breaker's cooldown schedule (each breaker
+    trip doubles the GPU-only pin window, a healthy host job resets it).
+
+The old ``ElasticPlanner``/``ReshardPlan`` mesh-shrink planner was
+removed: nothing ever wired it to a launcher, and elastic resharding is
+better rebuilt against a real checkpoint topology when needed.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -69,68 +70,6 @@ class HeartbeatMonitor:
         return [w.worker_id for w in self.workers.values()
                 if w.alive and w.last_step_time is not None
                 and w.last_step_time > self.straggler_factor * median]
-
-
-@dataclasses.dataclass(frozen=True)
-class ReshardPlan:
-    old_mesh: Tuple[int, ...]
-    new_mesh: Tuple[int, ...]
-    dropped_workers: Tuple[int, ...]
-    needs_checkpoint_roundtrip: bool
-
-    @property
-    def changed(self) -> bool:
-        return self.old_mesh != self.new_mesh
-
-
-class ElasticPlanner:
-    """Shrink/grow the (pod, data, model) mesh to the live host set.
-
-    Hosts map to whole data-axis rows (model-axis groups must stay
-    complete: TP shards of one layer live across the model axis and a
-    partial group cannot compute).  Growth beyond the original mesh is
-    capped at the checkpointed topology until a full re-shard.
-    """
-
-    def __init__(self, mesh_shape: Tuple[int, ...],
-                 axis_names: Tuple[str, ...],
-                 hosts_per_data_row: int = 1) -> None:
-        if "data" not in axis_names:
-            raise ValueError("mesh must have a data axis")
-        self.mesh_shape = tuple(mesh_shape)
-        self.axis_names = tuple(axis_names)
-        self.hosts_per_data_row = hosts_per_data_row
-        self._data_idx = axis_names.index("data")
-
-    def plan(self, total_hosts: int, dead_hosts: Sequence[int]
-             ) -> ReshardPlan:
-        alive = total_hosts - len(dead_hosts)
-        rows_total = self.mesh_shape[self._data_idx]
-        hosts_per_row = max(1, total_hosts // rows_total)
-        alive_rows = alive // hosts_per_row
-        new_rows = min(rows_total, self._largest_divisor_leq(
-            rows_total, alive_rows))
-        new_shape = list(self.mesh_shape)
-        new_shape[self._data_idx] = max(new_rows, 1)
-        plan = ReshardPlan(
-            old_mesh=self.mesh_shape, new_mesh=tuple(new_shape),
-            dropped_workers=tuple(dead_hosts),
-            # data-axis shrink re-shards only batch + optimizer FSDP
-            # shards — recoverable from the checkpoint without moving
-            # TP shards; model-axis changes would need a full round-trip
-            needs_checkpoint_roundtrip=new_rows != rows_total,
-        )
-        return plan
-
-    @staticmethod
-    def _largest_divisor_leq(n: int, k: int) -> int:
-        """Largest divisor of n that is <= k (whole data-axis rows keep
-        the global batch divisible)."""
-        k = max(min(n, k), 1)
-        for d in range(k, 0, -1):
-            if n % d == 0:
-                return d
-        return 1
 
 
 @dataclasses.dataclass

@@ -75,6 +75,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--prefix-cache-slots", type=int, default=2,
                     help="device-resident prefix-cache entries per "
                          "replica (0 = host-pool-only caching)")
+    ap.add_argument("--host-job-slack", type=float, default=8.0,
+                    help="host-job watchdog deadline = predicted t_catt "
+                         "x this slack (floored at 0.25s)")
+    ap.add_argument("--no-recompute-fallback", action="store_true",
+                    help="disable the GPU recompute fallback and "
+                         "recompute-from-scratch preemption on every "
+                         "replica (legacy loud-failure contract)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic chaos plan injected into every "
+                         "replica, e.g. 'host_stall@3x2:0.5,pool_alloc@1' "
+                         "(docs/serving_api.md 'Failure handling')")
     ap.add_argument("--smoke-test", action="store_true",
                     help="start the gateway, run a closed-loop client "
                          "burst, assert SSE/health/metrics, exit")
@@ -93,6 +104,9 @@ def build_pool(args: argparse.Namespace) -> EngineReplicaPool:
         profile_cache=args.profile_cache, deadline=args.deadline,
         prefix_cache=not args.no_prefix_cache,
         prefix_cache_slots=args.prefix_cache_slots,
+        host_job_slack=args.host_job_slack,
+        recompute_fallback=not args.no_recompute_fallback,
+        fault_plan=args.fault_plan,
         output_len=args.output_len)
     print(f"gateway model {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
           f"{args.replicas} replicas x (device_slots={scfg.device_slots} "

@@ -85,6 +85,20 @@ def main() -> None:
                          "on every generated request; impossible "
                          "deadlines are rejected at admission, late "
                          "first tokens count as deadline_misses")
+    ap.add_argument("--host-job-slack", type=float, default=8.0,
+                    help="host-job watchdog deadline = predicted t_catt "
+                         "x this slack (floored at 0.25s); expired jobs "
+                         "are recomputed exactly on the engine thread")
+    ap.add_argument("--no-recompute-fallback", action="store_true",
+                    help="disable the GPU recompute fallback and "
+                         "recompute-from-scratch preemption (legacy "
+                         "contract: host faults fail the engine loudly, "
+                         "blocked swaps requeue)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic chaos plan, e.g. "
+                         "'host_stall@3x2:0.5,pool_alloc@1' (see "
+                         "repro.serving.faults; docs/serving_api.md "
+                         "'Failure handling')")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress the per-token stream of request 0")
     args = ap.parse_args()
@@ -101,6 +115,9 @@ def main() -> None:
         prefix_cache_slots=args.prefix_cache_slots,
         tier_rebalance=not args.no_tier_rebalance,
         preemption=not args.no_preemption, deadline=args.deadline,
+        host_job_slack=args.host_job_slack,
+        recompute_fallback=not args.no_recompute_fallback,
+        fault_plan=args.fault_plan,
         platform=args.platform, perf_model=args.perf_model,
         profile_cache=args.profile_cache,
         workload=None if args.workload in (None, "synthetic")
@@ -173,6 +190,13 @@ def main() -> None:
         print(f"SLO: {stats.deadline_misses} deadline misses, "
               f"{stats.deadline_rejections} impossible-deadline "
               f"rejections")
+    if stats.host_fallbacks or stats.preemption_recomputes \
+            or stats.cancelled:
+        print(f"fault tolerance: {stats.host_fallbacks} host fallbacks "
+              f"({stats.host_breaker_trips} breaker trips), "
+              f"{stats.preemption_recomputes} recompute preemptions, "
+              f"{stats.cancelled} cancelled; degradation="
+              f"{stats.degradation()}")
     if stats.host_busy_time:
         print(f"host attention busy: {stats.host_busy_time:.2f}s "
               f"({100 * stats.host_busy_time / wall:.0f}% of wall — "

@@ -125,6 +125,12 @@ class PagedKVPool:
         # callback(owner_id) fired after an LRU eviction (outside the
         # allocation lock) so the index holding the owner can forget it
         self.on_evict: Optional[Any] = None
+        # chaos hook (repro.serving.faults): called at the top of
+        # ``allocate`` and may raise MemoryError to simulate exhaustion.
+        # Only ``allocate`` is instrumented — its callers (admission,
+        # preemption) tolerate MemoryError; ``extend`` failures mid-
+        # decode would be real corruption, not an injectable fault.
+        self.fault_hook: Optional[Any] = None
         self._alloc_lock = threading.Lock()
 
     @property
@@ -186,6 +192,8 @@ class PagedKVPool:
 
     def allocate(self, request_id: int, tokens: int) -> None:
         """Reserve page chains for a new request with `tokens` capacity."""
+        if self.fault_hook is not None:
+            self.fault_hook()
         per_layer = -(-tokens // self.page_size)
         need = per_layer * self.num_layers
         evicted: List[int] = []

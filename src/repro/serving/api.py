@@ -100,6 +100,26 @@ class ServerConfig:
     # matching a cached prefix prefill only the suffix
     prefix_cache: bool = True
     prefix_cache_slots: int = 2
+    # --- fault tolerance (docs/serving_api.md "Failure handling") --------
+    # deterministic chaos plan (repro.serving.faults.FaultPlan, a plan
+    # string, or None): injected host-worker faults, pool exhaustion,
+    # driver crashes, latency spikes — the same matrix tests and the
+    # fault_soak bench run
+    fault_plan: Optional[object] = None
+    # host-job watchdog: deadline = predicted t_catt x slack (floored
+    # at min_timeout); an expired or crashed job is recomputed exactly
+    # on the engine thread
+    host_job_slack: float = 8.0
+    host_job_min_timeout: float = 0.25
+    # False restores the legacy contract: host faults fail the engine
+    # loudly and blocked swaps requeue instead of recompute-preempting
+    recompute_fallback: bool = True
+    # consecutive watchdog fallbacks tripping the GPU_ONLY breaker, and
+    # its base cooldown (doubles per trip, resets on a healthy job)
+    host_breaker_threshold: int = 3
+    host_breaker_cooldown: float = 1.0
+    # sliding window (seconds) for the /health degradation-ladder level
+    degradation_window: float = 5.0
     # --- workload --------------------------------------------------------
     workload: Optional[str] = None   # azure-conv | livebench | dolphin-r1 | osc
     num_requests: int = 12
@@ -295,6 +315,14 @@ class InferenceServer:
         iterators, a pool driver thread) serialize on the step lock."""
         with self._step_lock:
             self.engine.step()
+
+    def cancel(self, request_id: int) -> bool:
+        """Abort a live request and free its resources (see
+        ``Engine.cancel``).  Serialized with step()/submit() on the
+        step lock so a gateway disconnect can abort safely while a
+        driver thread is mid-iteration."""
+        with self._step_lock:
+            return self.engine.cancel(request_id)
 
     def run_until_idle(self, *, max_iterations: int = 100000) -> EngineStats:
         it = 0

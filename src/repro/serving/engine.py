@@ -42,12 +42,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import placement
 from repro.core.overlap_engine import (Cohort, HostExecutor,
                                        OverlapController,
                                        stack_row_kv_to_pool_layers)
 from repro.core.perf_model import OnlineCalibrator, resolve_perf_model
 from repro.core.scheduler import (AdmissionController, ApexScheduler,
                                   Decision, StrategyKind)
+from repro.distributed.fault_tolerance import RestartPolicy
+from repro.serving.faults import FaultInjector
 from repro.models import (HostIO, ModelParams, decode_step,
                           decode_with_chunked_prefill, init_decode_state,
                           prefill_bucketed, prefill_chunk)
@@ -83,7 +86,12 @@ class Engine:
             host_batch=self.e.host_slots if self.e.enable_offload else 0,
             cache_len=self.e.cache_len)
         self.stats = EngineStats()
+        self.stats.degradation_window = self.e.degradation_window
         self.scheduler = scheduler
+        # deterministic chaos (None when no plan is configured); the
+        # injector threads through the executor, the paged pool and the
+        # replica driver so tests/bench run one coherent fault matrix
+        self._faults = FaultInjector.from_config(self.e.fault_plan)
         self._calibrator: Optional[OnlineCalibrator] = None
         # injected schedulers predating chunked prefill keep working:
         # the engine only forwards the chunk kwargs (and trusts
@@ -159,8 +167,11 @@ class Engine:
             pool = PagedKVPool(self.e.host_pool_pages, self.e.page_size,
                                cfg.num_attn_layers, cfg.num_kv_heads,
                                cfg.resolved_head_dim)
+            pool.fault_hook = (self._faults.on_pool_alloc
+                               if self._faults is not None else None)
             self._executor = HostExecutor(cfg, pool,
-                                          workers=self.e.host_workers)
+                                          workers=self.e.host_workers,
+                                          faults=self._faults)
             # the *resolved* worker count (0 = auto expands inside the
             # executor) — what the host tier actually runs with
             self.stats.host_workers = self._executor.workers
@@ -170,6 +181,22 @@ class Engine:
             self._pending_host_pred = 0.0   # predicted time of pending job
             self._host_compute_seen = 0.0   # executor compute_time watermark
             self._job_ids = iter(range(1, 1 << 30))
+            # host-job watchdog: submit stashes the pending job's full
+            # argument set (deadline too) so a stalled or crashed job
+            # can be abandoned and recomputed exactly on this thread
+            self._pending_meta: Optional[dict] = None
+            self._pending_deadline = 0.0
+            # circuit breaker over consecutive watchdog fallbacks: while
+            # open (now < _breaker_until) no host jobs are submitted and
+            # no new host placements/demotions happen — GPU_ONLY pin;
+            # RestartPolicy doubles the cooldown per trip and a healthy
+            # host job resets it
+            self._fallback_streak = 0
+            self._breaker_until = 0.0
+            self._breaker = RestartPolicy(
+                max_restarts=1 << 30,
+                backoff_base=max(self.e.host_breaker_cooldown, 1e-3),
+                backoff_cap=max(self.e.host_breaker_cooldown, 1e-3) * 32)
             self._decode_overlap_fn = jax.jit(
                 lambda p, tok, st, host: decode_step(p, cfg, tok, st, host))
         # cross-request prefix cache: retired requests publish their KV
@@ -191,8 +218,13 @@ class Engine:
                     cfg, device_batch=n_rows, cache_len=self.e.cache_len)
             placer.cached_prefix_probe = self._prefix.match_len
             if self._executor is not None:
-                self._executor.pool.on_evict = \
-                    lambda owner: self._prefix.forget_owner(owner, self.stats)
+                self._executor.pool.on_evict = self._on_pool_evict
+
+    def _on_pool_evict(self, owner: int) -> None:
+        """Pool LRU reclaimed a cached prefix chain — rung 1 of the
+        degradation ladder (the cheapest pressure response)."""
+        self._prefix.forget_owner(owner, self.stats)
+        self.stats.note_pressure("prefix_evict")
 
     # --- lifecycle views ---------------------------------------------------
     @property
@@ -283,11 +315,14 @@ class Engine:
         KV budgets, slot availability, deadline backpressure and
         preemption are one placement decision.  Returns the requests
         placed this iteration (the scheduler's prefill snapshot)."""
+        # breaker open: the host tier is suspect, so new admissions and
+        # demotions stay device-only until the cooldown re-probe
+        host_ok = self._executor is not None and not self._breaker_open()
         demote = None
-        if self.e.preemption and self._executor is not None:
+        if self.e.preemption and host_ok:
             demote = self._preempt_to_host
         placements = self.lc.admit(
-            pool=self._executor.pool if self._executor is not None else None,
+            pool=self._executor.pool if host_ok else None,
             demote=demote, prompt_reject_reason=self.prompt_reject_reason)
         if placements:
             if self._chunked:
@@ -380,7 +415,14 @@ class Engine:
         the host tier (the inverse migration: contiguous KV demoted to
         the paged pool, recurrent state spliced into the host row) and
         return its freed device slot; None when preemption cannot
-        help the urgent request."""
+        help the urgent request.
+
+        When the swap cannot progress — no host slot / pool room, a
+        lost allocation race — or the perf model prices a replay below
+        the KV move, the recompute-from-scratch escape hatch drops the
+        victim's KV instead: it re-enters the EDF queue on the
+        RECOMPUTE edge and replays prefill + its already-emitted
+        tokens deterministically (bit-identical stream)."""
         lc = self.lc
         hslot = lc.free_host_slot()
         residents = [r for r in lc.slots
@@ -390,13 +432,18 @@ class Engine:
             residents, urgent=urgent, host_slot_free=hslot is not None,
             pool_ok=self._executor.pool.can_admit)
         if victim is None:
-            return None
+            return self._recompute_preempt(urgent, residents)
+        if self.e.recompute_fallback and lc.placer.prefer_recompute(victim):
+            return self._recompute_victim(victim)
         slot = victim.slot
         n = victim.total_len - 1           # cached positions in the slot
         try:
             self._executor.pool.allocate(victim.request_id, n)
         except MemoryError:
-            return None                    # advisory can_admit lost a race
+            # advisory can_admit lost a race (or the chaos plan failed
+            # this allocation mid-flight) — recompute instead of
+            # stranding the urgent request behind a full pool
+            return self._recompute_victim(victim)
         transition(victim, Phase.PREEMPTED)
         self._executor.migrate_prompt(
             victim.request_id,
@@ -407,6 +454,137 @@ class Engine:
         self.lc.note_preempted(victim, hslot)
         # the cohort picks the demoted request up at the next boundary
         return slot
+
+    def _recompute_preempt(self, urgent: Request,
+                           residents: List[Request]) -> Optional[int]:
+        """Swap found no victim capacity: pick the structural victim
+        (lowest priority, smallest KV) and recompute-preempt it, if
+        the escape hatch is enabled and a strictly-lower-priority
+        resident exists at all."""
+        if not self.e.recompute_fallback:
+            return None
+        victim = placement.pick_preemption_victim(
+            residents, urgent_priority=urgent.priority)
+        if victim is None:
+            return None
+        return self._recompute_victim(victim)
+
+    def _recompute_victim(self, victim: Request) -> Optional[int]:
+        """Drop a device resident's KV and requeue it on the RECOMPUTE
+        edge; returns its freed slot.  The slot's cache rows need no
+        scrub — lengths hygiene zeroes empty slots each step and the
+        re-admission prefills fresh KV."""
+        slot = victim.slot
+        self.lc.note_recomputed(victim)
+        return slot
+
+    # --- host-tier fault tolerance ------------------------------------------
+    def _breaker_open(self) -> bool:
+        """True while the host-tier circuit breaker holds the engine in
+        GPU_ONLY: no host-job submits, no host placements or demotions,
+        until the cooldown elapses and a re-probe is allowed."""
+        return (self._executor is not None
+                and time.perf_counter() < self._breaker_until)
+
+    def _host_fallback(self) -> np.ndarray:
+        """Watchdog recovery: abandon the pending host job (stalled
+        past its deadline or died with an exception) and rerun it
+        synchronously on the engine thread through the executor's
+        injection-free path.  ``append_rows`` writes KV at explicit
+        positions and never advances lengths, so the rerun is
+        idempotent even when the abandoned worker already wrote (or
+        later writes) the same rows — tokens stay bit-identical with a
+        fault-free run.  Consecutive fallbacks trip the breaker with an
+        exponentially growing cooldown."""
+        meta = self._pending_meta
+        self._executor.cancel(self._pending_job)
+        out = self._executor.execute_sync(
+            next(self._job_ids), meta["layer"], meta["request_ids"],
+            meta["q"], meta["k"], meta["v"], meta["positions"],
+            rows=meta["rows"])
+        self.stats.host_fallbacks += 1
+        self._fallback_streak += 1
+        # the recovery's wall time says nothing about a healthy host
+        # tier — never feed it to the calibrator
+        self._pending_host_pred = 0.0
+        if self._fallback_streak >= self.e.host_breaker_threshold:
+            self._fallback_streak = 0
+            delay = self._breaker.next_delay() or self.e.host_breaker_cooldown
+            self._breaker_until = time.perf_counter() + delay
+            self.stats.host_breaker_trips += 1
+        return out
+
+    # --- client aborts ------------------------------------------------------
+    def cancel(self, request_id: int) -> bool:
+        """Abort a live request wherever it sits — queue, staging row,
+        device slot, or host tier — releasing every resource it holds
+        (KV budget, slot, pool chains, staging row).  The request
+        finishes with ``error='cancelled'``.  Host residents inside an
+        in-flight cohort journey defer to the next token boundary
+        (membership is frozen mid-journey); everything else is freed
+        inline.  Returns True when the request was found live."""
+        lc = self.lc
+        req = lc.queue.remove(request_id)
+        if req is not None:                       # queued (or RECOMPUTE wait)
+            reject(req, "cancelled")
+            self.stats.cancelled += 1
+            return True
+        for row in list(lc.staging_order):        # mid-chunked-prefill
+            ent = lc.staging[row]
+            if ent.req.request_id != request_id:
+                continue
+            lc.release_staging_row(row)
+            req = ent.req
+            if ent.tier == "device":
+                lc.slots[ent.slot] = None
+                lc.admission.release("device", req.kv_reserved)
+            else:
+                self._executor.free(request_id)
+                lc.host_slot_owner.pop(ent.slot, None)
+                lc.host_requests.pop(request_id, None)
+                lc.admission.release("host", req.kv_reserved)
+            req.kv_reserved = 0
+            req.slot = None
+            reject(req, "cancelled")
+            self.stats.cancelled += 1
+            return True
+        for i, r in enumerate(lc.slots):          # device resident
+            if r is not None and r.request_id == request_id and not r.done:
+                reject(r, "cancelled")
+                lc.admission.release("device", r.kv_reserved)
+                lc.slots[i] = None
+                r.slot = None
+                self.stats.cancelled += 1
+                return True
+        req = lc.host_requests.get(request_id)    # host resident: deferred
+        if req is not None and not req.done:
+            req.cancel_requested = True
+            self._apply_host_cancels()
+            return True
+        return False
+
+    def _apply_host_cancels(self) -> None:
+        """Finish host residents whose cancel was deferred — safe only
+        at a cohort token boundary (attn_ptr == -1), where no host job
+        is pending and no recurrent commit is mid-journey.  Runs at the
+        top of every step and inline from cancel() (the boundary may
+        already hold)."""
+        if self._executor is None:
+            return
+        if self._cohort is not None and self._cohort.attn_ptr != -1:
+            return
+        lc = self.lc
+        doomed = [rid for rid, r in lc.host_requests.items()
+                  if r.cancel_requested and not r.done]
+        for rid in doomed:
+            r = lc.host_requests.pop(rid)
+            reject(r, "cancelled")
+            lc.admission.release("host", r.kv_reserved)
+            self._executor.free(rid)
+            lc.host_slot_owner.pop(r.slot, None)
+            r.slot = None
+            r.kv_reserved = 0
+            self.stats.cancelled += 1
 
     def _refresh_prefix_gauges(self) -> None:
         """Resident-byte gauges of the prefix cache, per tier — kept
@@ -493,6 +671,13 @@ class Engine:
     # --- one engine iteration ------------------------------------------------
     def step(self) -> None:
         t0 = time.perf_counter()
+        if self._faults is not None:
+            spike = self._faults.on_engine_step()
+            if spike is not None:
+                # after t0 on purpose: the spike lands inside the timed
+                # section so the calibrator sees it like a real stall
+                time.sleep(spike)
+        self._apply_host_cancels()
         admitted = self._admit()
         self._rebalance()
         # rows whose request already reached max_new_tokens (possible
@@ -644,10 +829,34 @@ class Engine:
         ctl = self._overlap
         valid = cohort.valid_slots
         if self._pending_job is not None:
-            if wait:
-                out = self._executor.result(self._pending_job, timeout=120.0)
-            else:
-                out = self._executor.poll(self._pending_job)
+            fell_back = False
+            try:
+                if wait:
+                    timeout = 120.0
+                    if self.e.recompute_fallback and self._pending_deadline:
+                        timeout = max(
+                            self._pending_deadline - time.perf_counter(),
+                            0.001)
+                    out = self._executor.result(self._pending_job,
+                                                timeout=timeout)
+                else:
+                    out = self._executor.poll(self._pending_job)
+                    if out is None and self.e.recompute_fallback \
+                            and self._pending_deadline \
+                            and time.perf_counter() > self._pending_deadline:
+                        raise TimeoutError(
+                            f"host job {self._pending_job} missed its "
+                            "watchdog deadline")
+            except (RuntimeError, TimeoutError):
+                # worker exception (RuntimeError via _unwrap) or
+                # watchdog expiry: abandon the job and recompute its
+                # attention exactly on this thread.  Without the
+                # fallback the legacy contract holds — host faults
+                # fail the engine loudly.
+                if not self.e.recompute_fallback:
+                    raise
+                out = self._host_fallback()
+                fell_back = True
             if out is None:
                 host_idle = ctl.host_io(cohort)._replace(
                     consume_layer=jnp.int32(-1), emit_layer=jnp.int32(-1),
@@ -670,6 +879,13 @@ class Engine:
             cohort.attn_in = jnp.asarray(buf)
             self._executor.recycle(out)
             self._pending_job = None
+            self._pending_meta = None
+            self._pending_deadline = 0.0
+            if not fell_back:
+                # a healthy consume closes the fallback streak and
+                # resets the breaker's exponential cooldown
+                self._fallback_streak = 0
+                self._breaker.record_success()
             # host-side calibration against the executor's *compute*
             # time only — the device→host transfer share is accounted
             # separately so t_catt stays an attention-cost estimate
@@ -697,20 +913,47 @@ class Engine:
         else:
             logits, self.state, qkv, x_final = self._decode_overlap_fn(
                 self.params, tokens, self.state, io)
-        if emit_layer >= 0:
+        if emit_layer >= 0 and self._breaker_open():
+            # breaker open: the async host tier is suspect, so compute
+            # this layer's host attention synchronously at the emit
+            # point (ASYM_PIPELINE semantics, injection-free path) —
+            # in-flight cohort journeys finish exactly without trusting
+            # a worker that just stalled or died
+            idx = np.asarray(valid, np.int64)
+            out = self._executor.execute_sync(
+                next(self._job_ids), emit_layer, cohort.request_ids,
+                qkv.q, qkv.k, qkv.v, cohort.positions[idx], rows=idx)
+            buf = np.zeros(cohort.attn_in.shape, np.float32)
+            buf[idx] = out
+            cohort.attn_in = jnp.asarray(buf)
+            self._executor.recycle(out)
+            # keep the calibrator's compute-time watermark current so
+            # the next async consume doesn't attribute this sync work
+            self._host_compute_seen = self._executor.compute_time
+        elif emit_layer >= 0:
             # submit BEFORE the logits sync in _commit_device: the
             # worker materializes QKV and computes host attention while
             # the engine is still waiting on device logits
             job = next(self._job_ids)
             idx = np.asarray(valid, np.int64)
+            positions = cohort.positions[idx]
             self._executor.submit(
                 job, emit_layer, cohort.request_ids,
-                qkv.q, qkv.k, qkv.v, cohort.positions[idx], rows=idx)
+                qkv.q, qkv.k, qkv.v, positions, rows=idx)
             self._pending_job = job
+            # watchdog stash: everything needed to abandon this job and
+            # recompute it exactly on the engine thread
+            self._pending_meta = dict(
+                layer=emit_layer, request_ids=cohort.request_ids,
+                q=qkv.q, k=qkv.k, v=qkv.v, positions=positions, rows=idx)
+            pred = 0.0
             if self._calibrator is not None:
-                mean_pos = float(np.mean(cohort.positions[idx] + 1))
-                self._pending_host_pred = self._calibrator.t_catt(
-                    len(valid), mean_pos, layers=1)
+                mean_pos = float(np.mean(positions + 1))
+                pred = self._calibrator.t_catt(len(valid), mean_pos,
+                                               layers=1)
+                self._pending_host_pred = pred
+            self._pending_deadline = time.perf_counter() + max(
+                pred * self.e.host_job_slack, self.e.host_job_min_timeout)
         self._commit_device(logits, active_rows)
         cohort.x_carry = x_final[self.e.device_slots:]
         if completes:

@@ -40,6 +40,7 @@ Admission backpressure runs *before* submission, at the edge:
 from __future__ import annotations
 
 import asyncio
+import collections
 import json
 import threading
 import time
@@ -69,7 +70,12 @@ class HTTPGateway:
         self.max_queue_depth = max_queue_depth
         self.counters: Dict[str, int] = {
             "requests": 0, "streams": 0, "shed_429": 0, "shed_503": 0,
-            "errors": 0}
+            "cancelled": 0, "errors": 0}
+        # the degradation ladder's final rung is gateway-side: recent
+        # shed (503) timestamps over a sliding window, merged into
+        # /health alongside the per-replica engine rungs
+        self.shed_window = 5.0
+        self._shed_times: collections.deque = collections.deque()
         self._server: Optional[asyncio.AbstractServer] = None
 
     # --- lifecycle -------------------------------------------------------
@@ -103,7 +109,7 @@ class HTTPGateway:
                     await self._respond_json(writer, 405,
                                              {"error": "POST required"})
                 else:
-                    await self._handle_chat(writer, body)
+                    await self._handle_chat(reader, writer, body)
             elif path.startswith("/health"):
                 await self._handle_health(writer)
             elif path.startswith("/metrics"):
@@ -167,7 +173,8 @@ class HTTPGateway:
         await writer.drain()
 
     # --- /v1/chat --------------------------------------------------------
-    async def _handle_chat(self, writer: asyncio.StreamWriter,
+    async def _handle_chat(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter,
                            body: bytes) -> None:
         try:
             payload = json.loads(body.decode() or "{}")
@@ -190,6 +197,7 @@ class HTTPGateway:
         depth = self.pool.depth()
         if depth >= self.max_queue_depth:
             self.counters["shed_503"] += 1
+            self._shed_times.append(time.perf_counter())
             await self._respond_json(
                 writer, 503,
                 {"error": "gateway queue full", "queue_depth": depth,
@@ -234,27 +242,58 @@ class HTTPGateway:
         t0 = time.perf_counter()
         ttft: Optional[float] = None
         index = 0
-        while True:
-            kind, value = await events.get()
-            if kind == "token":
-                if ttft is None:
-                    ttft = time.perf_counter() - t0
-                event = {"token": value, "index": index}
-                index += 1
-            else:
-                event = {"done": True, "request_id": handle.request_id,
-                         "replica": handle.replica_index, "error": value,
-                         "tokens": index,
-                         "ttft_ms": None if ttft is None else 1e3 * ttft}
-            writer.write(f"data: {json.dumps(event)}\n\n".encode())
-            await writer.drain()
-            if kind == "done":
-                break
+        # client-disconnect watcher: an SSE consumer sends no further
+        # bytes, so this read only completes when the peer hangs up
+        # (EOF) or resets — either way the stream is dead and the
+        # request must be aborted instead of generating into the void
+        hangup = asyncio.ensure_future(reader.read(1))
+        try:
+            while True:
+                get = asyncio.ensure_future(events.get())
+                done, _ = await asyncio.wait(
+                    {get, hangup}, return_when=asyncio.FIRST_COMPLETED)
+                if get not in done:
+                    get.cancel()
+                    raise ConnectionResetError("SSE client disconnected")
+                kind, value = get.result()
+                if kind == "token":
+                    if ttft is None:
+                        ttft = time.perf_counter() - t0
+                    event = {"token": value, "index": index}
+                    index += 1
+                else:
+                    event = {"done": True, "request_id": handle.request_id,
+                             "replica": handle.replica_index, "error": value,
+                             "tokens": index,
+                             "ttft_ms": None if ttft is None else 1e3 * ttft}
+                writer.write(f"data: {json.dumps(event)}\n\n".encode())
+                await writer.drain()          # ConnectionError on hang-up
+                if kind == "done":
+                    break
+        except ConnectionError:
+            # free the engine-side resources the dead client was
+            # holding (slot/pool pages/queue position)
+            if handle.cancel():
+                self.counters["cancelled"] += 1
+            raise
+        finally:
+            if not hangup.done():
+                hangup.cancel()
         self.counters["streams"] += 1
 
     # --- /health ---------------------------------------------------------
     async def _handle_health(self, writer: asyncio.StreamWriter) -> None:
         health = self.pool.health()
+        # merge the ladder's gateway-side rung: recent 503 shedding is
+        # the most severe degradation level short of "down"
+        now = time.perf_counter()
+        while self._shed_times and now - self._shed_times[0] \
+                > self.shed_window:
+            self._shed_times.popleft()
+        if self._shed_times:
+            health["degradation"] = "shed"
+            if health["status"] == "ok":
+                health["status"] = "degraded"
         health["gateway"] = {"max_queue_depth": self.max_queue_depth,
                              **self.counters}
         status = 200 if health["status"] in ("ok", "degraded") else 503

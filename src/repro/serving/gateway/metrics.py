@@ -34,6 +34,23 @@ _ENGINE_METRICS: Dict[str, Tuple[str, str, str, Dict[str, str]]] = {
                             "Urgent requests kept queued at their EDF "
                             "position because no victim capacity existed",
                             {}),
+    "preemption_recomputes": ("preemption_recomputes_total", "counter",
+                              "Victims whose KV was dropped and replayed "
+                              "from scratch (blocked or costed-out swaps)",
+                              {}),
+    "host_fallbacks": ("host_fallbacks_total", "counter",
+                       "Host jobs abandoned by the watchdog and "
+                       "recomputed exactly on the engine thread", {}),
+    "host_breaker_trips": ("host_breaker_trips_total", "counter",
+                           "Host-tier circuit-breaker trips (GPU_ONLY "
+                           "pin for a cooldown)", {}),
+    "cancelled": ("cancelled_total", "counter",
+                  "Requests aborted by the client with resources freed",
+                  {}),
+    "degradation_level": ("degradation_level", "gauge",
+                          "Graceful-degradation ladder rung over the "
+                          "sliding pressure window (0=ok 1=prefix_evict "
+                          "2=demote 3=recompute 4=shed)", {}),
     "deadline_misses": ("deadline_misses_total", "counter",
                         "First tokens delivered after the TTFT deadline",
                         {}),
@@ -131,6 +148,10 @@ def render_prometheus(pool, gateway_counters: Optional[Dict[str, int]] = None
         fams.add("apex_gateway_shed_total", "counter",
                  "Requests shed at the edge by backpressure",
                  {"code": code}, counters.get(f"shed_{code}", 0))
+    fams.add("apex_gateway_cancelled_total", "counter",
+             "SSE streams whose client disconnected mid-generation "
+             "(request aborted engine-side)", {},
+             counters.get("cancelled", 0))
     fams.add("apex_gateway_errors_total", "counter",
              "Requests that failed inside the gateway", {},
              counters.get("errors", 0))
@@ -153,6 +174,9 @@ def render_prometheus(pool, gateway_counters: Optional[Dict[str, int]] = None
                  "In-flight streams plus leases", labels, rep.load)
         if not rep.alive:
             continue
+        fams.add("apex_replica_listener_errors_total", "counter",
+                 "Stream-listener exceptions swallowed by the fan-out "
+                 "path", labels, rep.listener_errors)
         snap = rep.server.stats.snapshot()
         for key, (family, mtype, help_text, extra) in \
                 _ENGINE_METRICS.items():

@@ -34,13 +34,18 @@ Contracts:
 from __future__ import annotations
 
 import contextlib
+import logging
 import queue as queue_mod
 import threading
+import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
     Tuple, Union
 
+from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.serving.api import InferenceServer
 from repro.serving.request import Phase, Request
+
+logger = logging.getLogger(__name__)
 
 # stream events: ("token", <int>) while generating, then exactly one
 # ("done", None | "<error reason>") terminal event
@@ -64,7 +69,12 @@ class _Stream:
         self._q: queue_mod.Queue = queue_mod.Queue()
         self._listener: Optional[Callable[[PoolEvent], None]] = None
         self._lock = threading.Lock()
+        self._flush_lock = threading.Lock()
         self._closed = False
+        self._listener_warned = False
+        # replica-wired counter hook: every swallowed listener
+        # exception is counted even though only the first is logged
+        self.on_listener_error: Optional[Callable[[], None]] = None
 
     def emit(self, event: PoolEvent) -> None:
         with self._lock:
@@ -78,10 +88,35 @@ class _Stream:
                 except Exception:
                     # a broken consumer (e.g. an HTTP client that hung
                     # up and closed its event loop) must never kill the
-                    # driver thread that feeds every other request
-                    pass
+                    # driver thread that feeds every other request —
+                    # but it must not be invisible either: log once per
+                    # stream, count every occurrence
+                    if self.on_listener_error is not None:
+                        self.on_listener_error()
+                    if not self._listener_warned:
+                        self._listener_warned = True
+                        logger.warning(
+                            "stream listener for request %d raised; "
+                            "suppressing further errors on this stream",
+                            self.request.request_id, exc_info=True)
             else:
                 self._q.put(event)
+
+    def flush(self) -> bool:
+        """Emit tokens past the high-water mark, then the terminal
+        event once the request finished.  Atomic per stream — the
+        driver's fan-out pass and a cancelling thread can both call
+        this without double-sending a token.  Returns True when the
+        terminal event has been emitted (stream can be deregistered)."""
+        with self._flush_lock:
+            out = self.request.output
+            while self.sent < len(out):
+                self.emit(("token", out[self.sent]))
+                self.sent += 1
+            if self.request.phase == Phase.FINISHED:
+                self.emit(("done", self.request.error))
+                return True
+        return False
 
     def attach(self, listener: Callable[[PoolEvent], None]) -> None:
         with self._lock:
@@ -106,10 +141,12 @@ class PoolHandle:
     HTTP gateway bridges into asyncio."""
 
     def __init__(self, request: Request, stream: _Stream,
-                 replica_index: int) -> None:
+                 replica_index: int,
+                 canceller: Optional[Callable[[int], bool]] = None) -> None:
         self.request = request
         self.replica_index = replica_index
         self._stream = stream
+        self._canceller = canceller
 
     @property
     def request_id(self) -> int:
@@ -158,6 +195,15 @@ class PoolHandle:
         """Block until finished; returns all tokens (raises on error)."""
         return list(self.tokens(timeout=timeout))
 
+    def cancel(self) -> bool:
+        """Abort the request on its replica (client hung up / lost
+        interest): engine-side resources are freed and the stream gets
+        its terminal ``("done", "cancelled")`` event.  Returns True
+        when the request was still live.  No-op after completion."""
+        if self._canceller is None or self.done:
+            return False
+        return self._canceller(self.request_id)
+
 
 class Replica:
     """One ``InferenceServer`` plus its driver thread and fan-out
@@ -175,6 +221,8 @@ class Replica:
         self.alive = True
         self.error: Optional[str] = None
         self.leases = 0
+        self.listener_errors = 0         # swallowed stream-listener raises
+        self.on_beat: Optional[Callable[[int], None]] = None
         self._streams: Dict[int, _Stream] = {}
         self._cond = threading.Condition()
         self._stop = False
@@ -206,6 +254,7 @@ class Replica:
         within one pump, and the final fan-out pass must find the
         stream).  Safe from any thread."""
         stream = _Stream(request)
+        stream.on_listener_error = self._note_listener_error
         with self._cond:
             if not self.alive:
                 raise ReplicaDead(
@@ -221,7 +270,7 @@ class Replica:
                 request.error = str(exc)
             request.phase = Phase.FINISHED
             stream.emit(("done", request.error))
-            return PoolHandle(request, stream, self.index)
+            return PoolHandle(request, stream, self.index, self.cancel)
         if handle.failed:
             # rejected at submit (oversized prompt, impossible
             # deadline): terminal event now — emit() dedups if the
@@ -229,22 +278,53 @@ class Replica:
             with self._cond:
                 self._streams.pop(request.request_id, None)
             stream.emit(("done", request.error))
-        return PoolHandle(request, stream, self.index)
+        return PoolHandle(request, stream, self.index, self.cancel)
+
+    def cancel(self, request_id: int) -> bool:
+        """Abort one request on this replica: engine-side resources are
+        freed inline (``Engine.cancel``) and the stream gets its
+        terminal event as soon as the request reaches FINISHED — for a
+        host resident mid-cohort-journey that is the next token
+        boundary, fanned out by the driver."""
+        found = self.server.cancel(request_id)
+        with self._cond:
+            stream = self._streams.get(request_id)
+            self._cond.notify_all()      # wake the driver for fan-out
+        if stream is not None and stream.flush():
+            with self._cond:
+                self._streams.pop(request_id, None)
+        return found
+
+    def _note_listener_error(self) -> None:
+        self.listener_errors += 1
 
     # --- the driver loop ------------------------------------------------
+    def _beat(self) -> None:
+        if self.on_beat is not None:
+            self.on_beat(self.index)
+
     def _drive(self) -> None:
         try:
             while True:
                 with self._cond:
                     while not (self._stop or self._fault is not None
                                or self.server.engine.has_work):
+                        self._beat()
                         self._cond.wait(timeout=self._IDLE_POLL_S)
                     if self._stop:
                         return
                 while not self._stop:
+                    self._beat()
                     if self._fault is not None:
                         fault, self._fault = self._fault, None
                         raise fault
+                    # the engine's chaos matrix reaches the driver too:
+                    # a scheduled driver_crash raises here and takes
+                    # the crash-containment path (absorbing the older
+                    # inject_fault test hook's semantics)
+                    faults = self.server.engine._faults
+                    if faults is not None:
+                        faults.on_driver_pump()
                     if not self.server.engine.has_work:
                         break
                     self.server.step()
@@ -255,18 +335,12 @@ class Replica:
 
     def _fanout(self) -> None:
         """Push tokens generated since the last pass to their streams;
-        emit the terminal event and deregister finished requests."""
+        emit the terminal event and deregister finished requests.
+        Per-stream flushing is atomic (``_Stream.flush``), so a
+        concurrent ``cancel`` cannot double-send."""
         with self._cond:
             items = list(self._streams.items())
-        finished = []
-        for rid, stream in items:
-            out = stream.request.output
-            while stream.sent < len(out):
-                stream.emit(("token", out[stream.sent]))
-                stream.sent += 1
-            if stream.request.phase == Phase.FINISHED:
-                stream.emit(("done", stream.request.error))
-                finished.append(rid)
+        finished = [rid for rid, stream in items if stream.flush()]
         if finished:
             with self._cond:
                 for rid in finished:
@@ -334,7 +408,8 @@ class EngineReplicaPool:
     _SESSION_CAP = 4096
 
     def __init__(self, factory: Callable[[], InferenceServer], *,
-                 replicas: int = 2, auto_respawn: bool = True) -> None:
+                 replicas: int = 2, auto_respawn: bool = True,
+                 heartbeat_timeout: float = 60.0) -> None:
         if replicas < 1:
             raise ValueError("need at least one replica")
         self._factory = factory
@@ -345,10 +420,24 @@ class EngineReplicaPool:
         # route to the replica whose prefix cache holds the session
         self._sessions: Dict[str, Tuple[int, int]] = {}
         self.respawns = 0
+        # driver-stall detection: every driver loop beats its index;
+        # /health sweeps and flags drivers silent past the timeout
+        # (a wedged step — distinct from a *crashed* driver, which the
+        # containment path already marks dead and respawns)
+        self._heartbeats = HeartbeatMonitor(
+            range(replicas), timeout=heartbeat_timeout)
         self.replicas: List[Replica] = [Replica(i, factory)
                                         for i in range(replicas)]
         for rep in self.replicas:
-            rep.start(self._replica_died)
+            self._start_replica(rep)
+
+    def _start_replica(self, rep: Replica) -> None:
+        rep.on_beat = self._beat
+        self._heartbeats.beat(rep.index, time.perf_counter())
+        rep.start(self._replica_died)
+
+    def _beat(self, index: int) -> None:
+        self._heartbeats.beat(index, time.perf_counter())
 
     # --- respawn ---------------------------------------------------------
     def _replica_died(self, dead: Replica) -> None:
@@ -369,7 +458,7 @@ class EngineReplicaPool:
                 return
             self.replicas[dead.index] = fresh
             self.respawns += 1
-        fresh.start(self._replica_died)
+        self._start_replica(fresh)
 
     # --- routing ---------------------------------------------------------
     def live_replicas(self) -> List[Replica]:
@@ -479,20 +568,34 @@ class EngineReplicaPool:
 
     # --- introspection ---------------------------------------------------
     def health(self) -> dict:
+        from repro.core.placement import DEGRADATION_LADDER
+        self._heartbeats.sweep(time.perf_counter())
+        beating = set(self._heartbeats.alive_workers())
         reps = []
+        worst = "ok"
         for r in self.replicas:
             entry = {"index": r.index, "alive": r.alive,
                      "driver_alive": r.driver_alive,
+                     "driver_stalled": r.alive and r.index not in beating,
                      "generation": r.generation, "load": r.load,
                      "error": r.error}
             if r.alive:
                 entry["pending"] = r.server.pending
                 entry["active"] = r.server.active
+                # the replica's graceful-degradation rung over the
+                # engine's sliding pressure window (core.placement)
+                rung = r.server.stats.degradation()
+                entry["degradation"] = rung
+                if DEGRADATION_LADDER.index(rung) \
+                        > DEGRADATION_LADDER.index(worst):
+                    worst = rung
             reps.append(entry)
         n_alive = sum(r.alive for r in self.replicas)
-        status = ("ok" if n_alive == len(self.replicas)
-                  else "degraded" if n_alive else "down")
-        return {"status": status, "replicas": reps,
+        status = ("down" if not n_alive
+                  else "degraded" if (n_alive < len(self.replicas)
+                                      or worst != "ok")
+                  else "ok")
+        return {"status": status, "degradation": worst, "replicas": reps,
                 "queue_depth": self.depth(), "respawns": self.respawns}
 
     def stats(self) -> List[dict]:
@@ -504,6 +607,7 @@ class EngineReplicaPool:
             snap = r.server.stats.snapshot()
             snap["replica"] = r.index
             snap["generation"] = r.generation
+            snap["listener_errors"] = r.listener_errors
             out.append(snap)
         return out
 

@@ -13,7 +13,9 @@ is where, and why* lives here:
                                      └→ MIGRATING → DECODE_DEVICE
 
     (mid-prefill tier retargeting passes through MIGRATING back to
-    PREFILL).  ``transition`` enforces the legal edges.
+    PREFILL; recompute-from-scratch preemption takes DECODE_DEVICE →
+    RECOMPUTE → PREFILL — the victim's KV is dropped and it re-enters
+    the queue).  ``transition`` enforces the legal edges.
 
   * ``AdmissionQueue`` — the waiting line as a priority queue:
     higher ``Request.priority`` first, earliest ``deadline`` next
@@ -127,6 +129,34 @@ class EngineConfig:
     # prefixes hit from here without touching the host pool.  0 keeps
     # the cache host-pool-only (still exact, one upload per hit).
     prefix_cache_slots: int = 2
+    # --- fault tolerance / chaos -------------------------------------
+    # deterministic fault injection (repro.serving.faults): a FaultPlan
+    # instance or its compact parse string ("host_stall@3x2:0.5,...");
+    # None = no injection.  Tests and the fault_soak bench feed the
+    # same plans through here so they exercise identical chaos.
+    fault_plan: Optional[Any] = None
+    # host-job watchdog: a submitted host-attention job must land within
+    # max(calibrated t_catt prediction * host_job_slack,
+    # host_job_min_timeout) seconds or the engine abandons it and
+    # recomputes the cohort's attention on-device (bit-identical —
+    # same numpy kernel, idempotent KV writes)
+    host_job_slack: float = 8.0
+    host_job_min_timeout: float = 0.25
+    # master switch for both recompute escape hatches: the watchdog's
+    # GPU fallback above, and recompute-from-scratch preemption when a
+    # swap has no host capacity.  False restores the pre-chaos
+    # behavior: host faults propagate, blocked swaps requeue the
+    # urgent request (preemption_requeues).
+    recompute_fallback: bool = True
+    # host-tier circuit breaker: this many consecutive watchdog
+    # fallbacks pin the scheduler to GPU_ONLY (no new host jobs or host
+    # placements) for a cooldown that doubles per trip
+    # (RestartPolicy backoff) and resets after a healthy host job
+    host_breaker_threshold: int = 3
+    host_breaker_cooldown: float = 1.0
+    # sliding window (seconds) over pressure events for the
+    # graceful-degradation ladder level reported on /health
+    degradation_window: float = 5.0
 
 
 # ---------------------------------------------------------------------------
@@ -137,10 +167,13 @@ LEGAL_TRANSITIONS: Dict[Phase, Tuple[Phase, ...]] = {
     Phase.QUEUED: (Phase.PREFILL, Phase.FINISHED),
     Phase.PREFILL: (Phase.DECODE_DEVICE, Phase.DECODE_HOST,
                     Phase.MIGRATING, Phase.FINISHED),
-    Phase.DECODE_DEVICE: (Phase.PREEMPTED, Phase.FINISHED),
+    Phase.DECODE_DEVICE: (Phase.PREEMPTED, Phase.RECOMPUTE, Phase.FINISHED),
     Phase.DECODE_HOST: (Phase.MIGRATING, Phase.FINISHED),
     Phase.MIGRATING: (Phase.DECODE_DEVICE, Phase.PREFILL),
     Phase.PREEMPTED: (Phase.DECODE_HOST,),
+    # a recompute-preempted victim waits in the admission queue and
+    # re-prefills on re-admission (FINISHED covers a cancel while queued)
+    Phase.RECOMPUTE: (Phase.PREFILL, Phase.FINISHED),
     Phase.FINISHED: (),
 }
 
@@ -200,6 +233,19 @@ class EngineStats:
     # stays queued at its EDF position and retries as capacity frees
     # (counted once per request, not once per blocked iteration)
     preemption_requeues: int = 0
+    # recompute-from-scratch preemptions: blocked swaps (or mid-flight
+    # pool-allocation failures) that dropped the victim's KV and sent
+    # it back through the queue on the RECOMPUTE edge
+    preemption_recomputes: int = 0
+    # --- host-tier fault tolerance ----------------------------------
+    # host jobs abandoned by the watchdog (timeout or worker exception)
+    # and recomputed on-device, and breaker trips (consecutive-fallback
+    # threshold reached -> GPU_ONLY pin for a cooldown window)
+    host_fallbacks: int = 0
+    host_breaker_trips: int = 0
+    # requests aborted by the client (gateway disconnects,
+    # PoolHandle.cancel, Engine.cancel) with their resources freed
+    cancelled: int = 0
     # TTFT SLO outcomes: first tokens that landed after arrival +
     # deadline, and requests rejected at admission because the
     # deadline was already impossible (backpressure, not a miss)
@@ -236,6 +282,24 @@ class EngineStats:
     predicted_time: float = 0.0
     observed_time: float = 0.0
     step_error_ewma: Optional[float] = None
+    # --- graceful-degradation ladder --------------------------------
+    # last time (perf_counter) each ladder rung's action fired; the
+    # reported level is the most severe rung active within
+    # ``degradation_window`` seconds (engine copies the config knob in)
+    pressure_marks: Dict[str, float] = dataclasses.field(default_factory=dict)
+    degradation_window: float = 5.0
+
+    def note_pressure(self, rung: str) -> None:
+        self.pressure_marks[rung] = time.perf_counter()
+
+    def degradation(self, window: Optional[float] = None) -> str:
+        """Current rung of ``placement.DEGRADATION_LADDER`` ("ok" when
+        no pressure action fired within the window)."""
+        w = self.degradation_window if window is None else window
+        now = time.perf_counter()
+        recent = {rung: (now - t) <= w
+                  for rung, t in self.pressure_marks.items()}
+        return placement.degradation_level(recent)
 
     def record_decision(self, decision: Decision) -> None:
         key = decision.strategy.value
@@ -294,6 +358,12 @@ class EngineStats:
             "migrations": float(self.migrations),
             "preemptions": float(self.preemptions),
             "preemption_requeues": float(self.preemption_requeues),
+            "preemption_recomputes": float(self.preemption_recomputes),
+            "host_fallbacks": float(self.host_fallbacks),
+            "host_breaker_trips": float(self.host_breaker_trips),
+            "cancelled": float(self.cancelled),
+            "degradation_level": float(
+                placement.DEGRADATION_LADDER.index(self.degradation())),
             "deadline_misses": float(self.deadline_misses),
             "deadline_rejections": float(self.deadline_rejections),
             "device_occupancy": self.device_occupancy,
@@ -396,6 +466,14 @@ class AdmissionQueue:
     def pop(self) -> Request:
         self._sort()
         return self._q.pop(0)
+
+    def remove(self, request_id: int) -> Optional[Request]:
+        """Pull a specific request out of the line (client cancel
+        before admission); None when it is not queued."""
+        for i, r in enumerate(self._q):
+            if r.request_id == request_id:
+                return self._q.pop(i)
+        return None
 
     def __len__(self) -> int:
         return len(self._q)
@@ -522,6 +600,19 @@ class TierPlacer:
                 < urgent.kv_demand():
             return None
         return victim
+
+    def prefer_recompute(self, victim: Request) -> bool:
+        """Swap-vs-recompute pricing for a *feasible* swap: True when
+        dropping the victim's KV and replaying it later is predicted
+        cheaper than moving its KV to the host tier.  Without a perf
+        model, swap (the side that preserves work) wins."""
+        pm = self.perf_model
+        if pm is None:
+            return False
+        return placement.should_recompute_instead_of_swap(
+            t_swap=self.migration_cost(victim.total_len),
+            t_recompute=float(pm.t_recompute(victim.prompt_len,
+                                             victim.tokens_generated)))
 
     # --- SLO backpressure ---------------------------------------------
     def deadline_impossible(self, req: Request, *, now: float) -> bool:
@@ -659,7 +750,12 @@ class RequestLifecycle:
                 reject(self.queue.pop(), reason)
                 self._preempt_noted.discard(req.request_id)
                 continue
-            if self.placer.deadline_impossible(req, now=now):
+            # a recompute-preempted victim has already streamed tokens
+            # its consumer is holding — rejecting it on a now-stale
+            # TTFT prediction would lose committed output, so the
+            # deadline gate applies to fresh admissions only
+            if req.phase is not Phase.RECOMPUTE \
+                    and self.placer.deadline_impossible(req, now=now):
                 self.stats.deadline_rejections += 1
                 self._preempt_noted.discard(req.request_id)
                 reject(self.queue.pop(),
@@ -818,6 +914,28 @@ class RequestLifecycle:
         victim.tier = "host"
         transition(victim, Phase.DECODE_HOST)
         self.stats.preemptions += 1
+        self.stats.note_pressure("demote")
+
+    def note_recomputed(self, victim: Request) -> None:
+        """Registry flip for a recompute-from-scratch preemption: the
+        engine already dropped the victim's KV; here it loses its slot
+        and budget and re-enters the admission queue on the RECOMPUTE
+        edge.  ``output.clear()`` is IN PLACE on purpose — token
+        streams hold the same list object and only forward tokens past
+        their high-water mark, so the deterministic replay (re-prefill
+        the original prompt, re-decode) regenerates indices below the
+        mark bit-identically without the consumer seeing duplicates."""
+        transition(victim, Phase.RECOMPUTE)
+        self.slots[victim.slot] = None
+        self.admission.release("device", victim.kv_reserved)
+        victim.slot = None
+        victim.tier = None
+        victim.kv_reserved = 0
+        victim.output.clear()
+        victim.layer_progress = 0
+        self.queue.push(victim)
+        self.stats.preemption_recomputes += 1
+        self.stats.note_pressure("recompute")
 
     # --- per-iteration accounting ---------------------------------------
     def note_iteration(self) -> None:

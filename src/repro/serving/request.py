@@ -30,6 +30,12 @@ class Phase(str, enum.Enum):
     # flight, PREEMPTED = device→host demotion in flight
     MIGRATING = "migrating"
     PREEMPTED = "preempted"
+    # recompute-from-scratch preemption (à la vLLM): the victim's KV
+    # was dropped and the request sits back in the admission queue; it
+    # re-prefills its original prompt and regenerates already-emitted
+    # tokens bit-identically (streams only forward tokens past their
+    # high-water mark, so consumers never see a duplicate)
+    RECOMPUTE = "recompute"
     FINISHED = "finished"
 
 
@@ -63,6 +69,10 @@ class Request:
     # an urgent request demote a strictly lower-priority device
     # resident to the host tier
     priority: int = 0
+    # client abort flag: set by Engine.cancel for host-tier residents,
+    # where teardown must wait for the cohort's token boundary (no host
+    # job in flight); the engine applies it at the next safe point
+    cancel_requested: bool = False
 
     @property
     def failed(self) -> bool:

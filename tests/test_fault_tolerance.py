@@ -1,10 +1,9 @@
-"""Fault-tolerance logic: heartbeats, stragglers, elastic resharding."""
-import pytest
-from hypothesis import given, settings, strategies as st
+"""Fault-tolerance primitives: heartbeats, stragglers, restart backoff.
 
-from repro.distributed.fault_tolerance import (ElasticPlanner,
-                                               HeartbeatMonitor,
-                                               RestartPolicy)
+(The ElasticPlanner mesh-shrink tests left with the planner itself —
+it was never wired to a launcher and was deleted.)
+"""
+from repro.distributed.fault_tolerance import HeartbeatMonitor, RestartPolicy
 
 
 def test_heartbeat_death_and_recovery():
@@ -25,28 +24,6 @@ def test_straggler_detection():
     for w, t in zip(range(5), [1.0, 1.1, 0.9, 1.0, 5.0]):
         mon.beat(w, now=0.0, step_time=t)
     assert mon.stragglers() == [4]
-
-
-@given(total=st.integers(16, 1024), ndead=st.integers(0, 64))
-@settings(max_examples=100, deadline=None)
-def test_elastic_planner_invariants(total, ndead):
-    planner = ElasticPlanner((16, 16), ("data", "model"))
-    ndead = min(ndead, total)
-    plan = planner.plan(total, list(range(ndead)))
-    # never grows, never kills the model axis, data stays a divisor
-    assert plan.new_mesh[1] == 16
-    assert 1 <= plan.new_mesh[0] <= 16
-    assert 16 % plan.new_mesh[0] == 0
-    if ndead == 0:
-        assert not plan.changed
-        assert not plan.needs_checkpoint_roundtrip
-
-
-def test_elastic_multi_pod_axis_names():
-    planner = ElasticPlanner((2, 16, 16), ("pod", "data", "model"))
-    plan = planner.plan(total_hosts=64, dead_hosts=[1, 2, 3, 4])
-    assert plan.new_mesh[0] == 2 and plan.new_mesh[2] == 16
-    assert plan.new_mesh[1] < 16
 
 
 def test_restart_policy_backoff_and_budget():

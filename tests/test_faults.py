@@ -1,0 +1,475 @@
+"""Chaos matrix: every injectable fault against every recovery path.
+
+The contract under chaos is the same as the system's core invariant —
+EXACTNESS: whatever the fault plan does (host workers dying or
+stalling, pool allocations failing, drivers crashing, latency spikes),
+every request that completes must emit bit-identical tokens to a
+fault-free run, and every aborted request must leave zero residue
+(pool pages, slots, staging rows, budget).  Each test pins one cell:
+fault kind x recovery mechanism x {attention-only, hybrid} stack.
+"""
+import json
+import socket
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import placement
+from repro.models import init_params
+from repro.serving import (Engine, EngineConfig, InferenceServer, Request,
+                           ServerConfig)
+from repro.serving.faults import (FAULT_KINDS, FaultInjectedError,
+                                  FaultInjector, FaultPlan, FaultSpec)
+from repro.serving.gateway import EngineReplicaPool, serve_in_thread
+from repro.serving.lifecycle import EngineStats
+from repro.serving.request import make_synthetic_request
+
+ARCHS = ["internlm2-1.8b", "jamba-1.5-large-398b"]
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_stack(request):
+    cfg = get_config(request.param).reduced(layers=None, d_model=64,
+                                            vocab=64)
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("stablelm-12b").reduced(layers=2, d_model=64, vocab=64)
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _protos(n, vocab=64):
+    # the same synthetic workload tier-1's hybrid exactness tests pin
+    # (tests/test_overlap.py): the jamba stack's argmax has near-ties
+    # on some token sets, so an arbitrary rng stream can diverge under
+    # any scheduling perturbation — chaos included — for reasons that
+    # have nothing to do with fault recovery
+    rng = np.random.default_rng(1)
+    return [list(make_synthetic_request(rng, prompt_len=7, output_len=1,
+                                        vocab=vocab).prompt)
+            for _ in range(n)]
+
+
+def _fresh(prompts, out_len):
+    return [Request(prompt=list(p), max_new_tokens=out_len)
+            for p in prompts]
+
+
+def _reference(cfg, params, prompts, out_len):
+    eng = Engine(cfg, params, EngineConfig(
+        device_slots=len(prompts) + 1, cache_len=64, enable_offload=False,
+        prefix_cache=False))
+    reqs = _fresh(prompts, out_len)
+    eng.run(reqs)
+    eng.shutdown()
+    return {tuple(r.prompt): r.output for r in reqs}
+
+
+def _chaos_run(cfg, params, prompts, out_len, **ecfg):
+    kw = dict(device_slots=2, host_slots=len(prompts), cache_len=64,
+              prefix_cache=False)
+    kw.update(ecfg)
+    eng = Engine(cfg, params, EngineConfig(**kw))
+    reqs = _fresh(prompts, out_len)
+    stats = eng.run(reqs)
+    eng.shutdown()
+    return reqs, stats, eng
+
+
+def _assert_no_leaks(eng):
+    """Every terminal state must leave the engine spotless: no occupied
+    slots or staging rows, an empty host pool with all pages free, and
+    no dangling host registrations (run with prefix_cache=False —
+    cached prefixes intentionally retain pool chains)."""
+    lc = eng.lc
+    assert all(r is None for r in lc.slots)
+    assert all(e is None for e in lc.staging)
+    assert lc.staging_order == []
+    if eng._executor is not None:
+        pool = eng._executor.pool
+        assert pool.lengths == {}
+        assert pool.page_tables == {}
+        assert pool.num_free == pool.pages.shape[1]
+        assert lc.host_requests == {}
+        assert lc.host_slot_owner == {}
+
+
+def _assert_bit_identical(reqs, ref):
+    for r in reqs:
+        assert not r.failed, r.error
+        assert r.output == ref[tuple(r.prompt)], \
+            f"divergence under chaos for request {r.request_id}"
+
+
+# --- plan/injector unit behavior -----------------------------------------
+
+def test_fault_plan_parse_describe_roundtrip():
+    plan = FaultPlan.parse("host_stall@3x2:0.5, pool_alloc@1,host_error")
+    assert plan.specs == (
+        FaultSpec(kind="host_stall", at=3, count=2, duration=0.5),
+        FaultSpec(kind="pool_alloc", at=1, count=1, duration=0.05),
+        FaultSpec(kind="host_error", at=1, count=1, duration=0.05))
+    assert FaultPlan.parse(plan.describe()) == plan
+    with pytest.raises(ValueError):
+        FaultPlan.parse("segfault@1")          # unknown kind
+    with pytest.raises(ValueError):
+        FaultSpec(kind="host_stall", at=0)     # 1-based schedule
+    assert FaultPlan.coerce(None) is None
+    assert FaultPlan.coerce(plan) is plan
+    assert FaultPlan.coerce("driver_crash@2").specs[0].at == 2
+    assert FaultInjector.from_config(None) is None
+    assert FaultInjector.from_config("") is None
+
+
+def test_injector_schedule_is_per_kind_deterministic():
+    inj = FaultInjector(FaultPlan.parse("host_error@2x2"))
+    hits = []
+    for _ in range(5):
+        # interleaved events of other kinds must not shift the schedule
+        assert inj.fire("pool_alloc") is None
+        hits.append(inj.fire("host_error") is not None)
+    assert hits == [False, True, True, False, False]
+    snap = inj.snapshot()
+    assert snap["events"]["host_error"] == 5
+    assert snap["fired"]["host_error"] == 2
+    assert snap["fired"]["pool_alloc"] == 0
+    assert set(snap["events"]) == set(FAULT_KINDS)
+
+    with pytest.raises(FaultInjectedError):
+        FaultInjector(FaultPlan.parse("host_error@1")).on_host_job()
+    with pytest.raises(MemoryError):
+        FaultInjector(FaultPlan.parse("pool_alloc@1")).on_pool_alloc()
+    with pytest.raises(FaultInjectedError):
+        FaultInjector(FaultPlan.parse("driver_crash@1")).on_driver_pump()
+    spike = FaultInjector(FaultPlan.parse("latency_spike@1:0.01"))
+    assert spike.on_engine_step() == 0.01
+    assert spike.on_engine_step() is None
+
+
+# --- host-tier watchdog + recompute fallback -----------------------------
+
+def test_host_error_watchdog_fallback_bit_identical(arch_stack):
+    """A host worker dying mid-job is absorbed by the watchdog: the
+    cohort's attention is recomputed on the engine thread and the
+    streams stay bit-identical, for dense and hybrid stacks alike."""
+    cfg, params = arch_stack
+    prompts = _protos(5)
+    ref = _reference(cfg, params, prompts, out_len=6)
+    reqs, stats, eng = _chaos_run(cfg, params, prompts, out_len=6,
+                                  fault_plan="host_error@1x2")
+    assert stats.host_tokens > 0, "offload never engaged"
+    assert stats.host_fallbacks >= 1
+    assert eng._faults.snapshot()["fired"]["host_error"] >= 1
+    _assert_bit_identical(reqs, ref)
+    _assert_no_leaks(eng)
+
+
+def test_host_stall_watchdog_fallback_bit_identical(arch_stack):
+    """A wedged host worker (stall far past the watchdog deadline) is
+    abandoned and recomputed; the late worker's idempotent KV writes
+    change nothing."""
+    cfg, params = arch_stack
+    prompts = _protos(5)
+    ref = _reference(cfg, params, prompts, out_len=6)
+    reqs, stats, eng = _chaos_run(
+        cfg, params, prompts, out_len=6,
+        fault_plan="host_stall@1:2.5",
+        host_job_slack=2.0, host_job_min_timeout=0.15)
+    assert stats.host_tokens > 0, "offload never engaged"
+    assert stats.host_fallbacks >= 1
+    _assert_bit_identical(reqs, ref)
+    _assert_no_leaks(eng)
+
+
+def test_breaker_trips_on_consecutive_fallbacks_then_recovers():
+    """Consecutive watchdog fallbacks trip the circuit breaker (GPU
+    pin + cooldown, counted once); after the cooldown the host tier is
+    re-probed and the run still completes bit-identically."""
+    cfg = get_config("internlm2-1.8b").reduced(layers=None, d_model=64,
+                                               vocab=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _protos(6)
+    ref = _reference(cfg, params, prompts, out_len=8)
+    reqs, stats, eng = _chaos_run(
+        cfg, params, prompts, out_len=8,
+        fault_plan="host_error@1x3",
+        host_breaker_threshold=3, host_breaker_cooldown=0.05)
+    assert stats.host_fallbacks >= 3
+    assert stats.host_breaker_trips >= 1
+    _assert_bit_identical(reqs, ref)
+    _assert_no_leaks(eng)
+
+
+def test_fallbacks_propagate_when_recompute_disabled():
+    """recompute_fallback=False restores the legacy loud-failure
+    contract: an injected host-worker death surfaces as the engine's
+    own RuntimeError instead of a silent recovery."""
+    cfg = get_config("internlm2-1.8b").reduced(layers=None, d_model=64,
+                                               vocab=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, EngineConfig(
+        device_slots=2, host_slots=5, cache_len=64, prefix_cache=False,
+        fault_plan="host_error@1x99", recompute_fallback=False))
+    try:
+        with pytest.raises(RuntimeError):
+            eng.run(_fresh(_protos(5), out_len=6))
+        assert eng.stats.host_fallbacks == 0
+    finally:
+        eng.shutdown()
+
+
+# --- pool exhaustion + latency spikes ------------------------------------
+
+def test_pool_alloc_failure_requeues_and_completes():
+    """An injected allocation failure at host placement exercises the
+    advisory-can_admit requeue path: the admission retries and every
+    stream stays exact."""
+    cfg = get_config("internlm2-1.8b").reduced(layers=None, d_model=64,
+                                               vocab=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _protos(5)
+    ref = _reference(cfg, params, prompts, out_len=6)
+    reqs, stats, eng = _chaos_run(cfg, params, prompts, out_len=6,
+                                  fault_plan="pool_alloc@1")
+    assert eng._faults.snapshot()["fired"]["pool_alloc"] == 1
+    _assert_bit_identical(reqs, ref)
+    _assert_no_leaks(eng)
+
+
+def test_latency_spike_only_stretches_wall_time():
+    cfg = get_config("internlm2-1.8b").reduced(layers=None, d_model=64,
+                                               vocab=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _protos(3)
+    ref = _reference(cfg, params, prompts, out_len=4)
+    reqs, stats, eng = _chaos_run(cfg, params, prompts, out_len=4,
+                                  fault_plan="latency_spike@1x2:0.15")
+    assert eng._faults.snapshot()["fired"]["latency_spike"] == 2
+    assert stats.wall_time >= 0.3        # both spikes landed inside steps
+    _assert_bit_identical(reqs, ref)
+    _assert_no_leaks(eng)
+
+
+# --- recompute-from-scratch preemption -----------------------------------
+
+def test_blocked_swap_recomputes_victim_bit_identical(served):
+    """The scenario that used to swap-to-queue (victim found, zero host
+    capacity) now drops the victim's KV and replays it on the RECOMPUTE
+    edge: the urgent request is served, the victim's stream — including
+    tokens emitted BEFORE the preemption — is bit-identical to an
+    uncontended run, and nothing leaks."""
+    cfg, params = served
+    with InferenceServer(cfg, params, ServerConfig(
+            device_slots=4, host_slots=0, enable_offload=False,
+            cache_len=256, output_len=48, prefix_cache=False)) as ref_srv:
+        ref = {tuple(p): ref_srv.submit(p, max_new_tokens=n).result()
+               for p, n in [([1] * 12, 48), ([2] * 200, 4), ([3] * 6, 4)]}
+
+    scfg = ServerConfig(device_slots=1, host_slots=1, cache_len=256,
+                        page_size=32, host_pool_pages=1, output_len=48,
+                        prefix_cache=False)
+    with InferenceServer(cfg, params, scfg) as server:
+        # resident fills the only device slot; kv demand 12+48 > 32 so
+        # the one-page host pool can never hold it — the swap is blocked
+        resident = server.submit([1] * 12, max_new_tokens=48, priority=0)
+        server.step()
+        assert server.active == 1
+        urgent = server.submit([2] * 200, max_new_tokens=4, priority=1)
+        lowprio = server.submit([3] * 6, max_new_tokens=4, priority=0)
+        server.run_until_idle()
+        stats = server.stats
+        assert stats.preemption_recomputes >= 1
+        assert stats.preemption_requeues == 0     # escape hatch took over
+        for h in (resident, urgent, lowprio):
+            assert h.done and not h.failed
+            assert h.request.output == ref[tuple(h.request.prompt)]
+        # the recompute rung was marked for the degradation ladder
+        assert "recompute" in stats.pressure_marks
+        assert stats.degradation(1e9) == "recompute"
+        assert stats.snapshot()["preemption_recomputes"] >= 1.0
+        _assert_no_leaks(server.engine)
+
+
+# --- client aborts --------------------------------------------------------
+
+def test_engine_cancel_frees_all_tiers(served):
+    """Cancelling a device resident and a host resident mid-decode
+    releases slots, pool chains and budget; survivors finish clean."""
+    cfg, params = served
+    scfg = ServerConfig(device_slots=1, host_slots=2, cache_len=64,
+                        output_len=32, prefix_cache=False)
+    with InferenceServer(cfg, params, scfg) as server:
+        handles = [server.submit([2 + i, 3, 5, 7], max_new_tokens=32)
+                   for i in range(3)]
+        for _ in range(12):                # place across both tiers
+            server.step()
+        eng = server.engine
+        assert eng.lc.host_requests, "offload never engaged"
+        host_rid = next(iter(eng.lc.host_requests))
+        device_rid = next(r.request_id for r in eng.lc.slots
+                          if r is not None)
+        assert server.cancel(device_rid) is True
+        assert server.cancel(host_rid) is True
+        assert server.cancel(10_000) is False     # unknown id
+        server.run_until_idle()
+        assert server.cancel(device_rid) is False  # already finished
+        assert server.stats.cancelled == 2
+        by_id = {h.request_id: h for h in handles}
+        for rid in (device_rid, host_rid):
+            assert by_id[rid].failed and by_id[rid].error == "cancelled"
+        survivor = next(h for h in handles
+                        if h.request_id not in (device_rid, host_rid))
+        assert not survivor.failed and len(survivor.output) == 32
+        _assert_no_leaks(eng)
+
+
+def test_pool_handle_cancel_terminates_stream(served):
+    """PoolHandle.cancel aborts the request on its replica even when
+    the engine then goes idle: the stream still receives its terminal
+    event (the canceller flushes it) and resources are freed."""
+    cfg, params = served
+
+    def factory():
+        return InferenceServer(cfg, params, ServerConfig(
+            device_slots=2, host_slots=3, cache_len=2048,
+            output_len=1600, prefix_cache=False))
+
+    with EngineReplicaPool(factory, replicas=1) as pool:
+        h = pool.submit([2, 3, 5, 7], 1600)
+        events = iter(h.events(timeout=60.0))
+        kind, _ = next(events)           # first token: decode is live
+        assert kind == "token"
+        assert h.cancel() is True
+        for kind, payload in events:
+            pass                         # drain to the terminal event
+        assert kind == "done" and payload == "cancelled"
+        assert h.failed and h.error == "cancelled"
+        assert h.cancel() is False       # no-op after completion
+        rep = pool.replicas[0]
+        deadline = time.time() + 30.0
+        while time.time() < deadline and rep.server.engine.has_work:
+            time.sleep(0.02)
+        assert rep.server.stats.cancelled == 1
+        assert pool.health()["degradation"] in placement.DEGRADATION_LADDER
+        _assert_no_leaks(rep.server.engine)
+
+
+def test_http_disconnect_cancels_engine_side(served):
+    """An SSE client hanging up mid-stream aborts the request on its
+    replica (satellite: the gateway's disconnect watcher) and shows up
+    in the gateway's cancelled counter."""
+    cfg, params = served
+
+    def factory():
+        return InferenceServer(cfg, params, ServerConfig(
+            device_slots=2, host_slots=3, cache_len=2048,
+            output_len=1600, prefix_cache=False))
+
+    pool = EngineReplicaPool(factory, replicas=1)
+    gateway, stop = serve_in_thread(pool, port=0, max_queue_depth=8)
+    try:
+        # raw socket: http.client detaches the socket on SSE responses
+        # (Connection: close), so hang up at the transport level instead
+        body = json.dumps({"prompt": [2, 3, 5, 7],
+                           "max_new_tokens": 1600}).encode()
+        sock = socket.create_connection(("127.0.0.1", gateway.port),
+                                        timeout=60)
+        sock.sendall(b"POST /v1/chat HTTP/1.1\r\n"
+                     b"Host: test\r\n"
+                     b"Content-Type: application/json\r\n"
+                     b"Content-Length: " + str(len(body)).encode()
+                     + b"\r\n\r\n" + body)
+        head = sock.recv(4096)
+        assert b"200" in head.split(b"\r\n", 1)[0]
+        sock.close()                     # hang up mid-generation
+        deadline = time.time() + 30.0
+        while time.time() < deadline:
+            if gateway.counters["cancelled"] >= 1 \
+                    and pool.replicas[0].server.stats.cancelled >= 1:
+                break
+            time.sleep(0.05)
+        assert gateway.counters["cancelled"] >= 1
+        assert pool.replicas[0].server.stats.cancelled >= 1
+    finally:
+        stop()
+        pool.shutdown()
+
+
+def test_listener_exceptions_counted_not_swallowed_silently(served):
+    """A broken fan-out listener must never kill the driver — but it
+    is counted on the replica and exported via pool stats."""
+    cfg, params = served
+
+    def factory():
+        return InferenceServer(cfg, params, ServerConfig(
+            device_slots=2, host_slots=3, cache_len=64, output_len=5,
+            prefix_cache=False))
+
+    with EngineReplicaPool(factory, replicas=1) as pool:
+        h = pool.submit([2, 3, 5, 7], 5)
+        h.add_listener(lambda event: (_ for _ in ()).throw(
+            RuntimeError("broken consumer")))
+        deadline = time.time() + 60.0
+        while time.time() < deadline and not h.done:
+            time.sleep(0.02)
+        assert h.done and not h.failed   # driver survived the listener
+        rep = pool.replicas[0]
+        assert rep.listener_errors >= 1
+        snap = next(s for s in pool.stats() if s["replica"] == 0)
+        assert snap["listener_errors"] >= 1
+
+
+# --- driver crashes through the fault plan --------------------------------
+
+def test_driver_crash_fault_contained_and_respawned(served):
+    """A scheduled driver_crash takes the crash-containment path: the
+    in-flight handle fails loudly, the pool respawns the replica, and
+    (with the plan disarmed on the fresh engine) new work succeeds."""
+    cfg, params = served
+
+    def factory():
+        return InferenceServer(cfg, params, ServerConfig(
+            device_slots=2, host_slots=3, cache_len=128, output_len=32,
+            prefix_cache=False, fault_plan="driver_crash@2"))
+
+    with EngineReplicaPool(factory, replicas=1) as pool:
+        h = pool.submit([2, 3, 5, 7], 32)
+        events = list(h.events(timeout=60.0))
+        kind, err = events[-1]
+        assert kind == "done" and err is not None and "died" in err
+        assert h.failed
+        deadline = time.time() + 30.0
+        while time.time() < deadline and not pool.live_replicas():
+            time.sleep(0.05)
+        assert pool.respawns >= 1
+        rep = pool.replicas[0]
+        assert rep.alive and rep.generation >= 1
+        # disarm the respawned engine's (fresh) injector so the fresh
+        # submission runs fault-free
+        rep.server.engine._faults = None
+        out = pool.submit([11, 13, 17, 19], 6).result(timeout=120.0)
+        assert len(out) == 6
+
+
+# --- graceful-degradation ladder -----------------------------------------
+
+def test_degradation_ladder_ordering_and_window():
+    assert placement.DEGRADATION_LADDER == (
+        "ok", "prefix_evict", "demote", "recompute", "shed")
+    stats = EngineStats()
+    assert stats.degradation() == "ok"
+    stats.note_pressure("demote")
+    assert stats.degradation() == "demote"
+    stats.note_pressure("prefix_evict")   # less severe: rung unchanged
+    assert stats.degradation() == "demote"
+    stats.note_pressure("shed")
+    assert stats.degradation() == "shed"
+    assert stats.snapshot()["degradation_level"] == float(
+        placement.DEGRADATION_LADDER.index("shed"))
+    time.sleep(0.01)
+    assert stats.degradation(window=0.0) == "ok"   # marks aged out

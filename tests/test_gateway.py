@@ -160,7 +160,11 @@ def test_preemption_requeue_surfaced_in_stats(served):
     the fallback is counted once in EngineStats."""
     cfg, params = served
     scfg = ServerConfig(device_slots=1, host_slots=1, cache_len=256,
-                        page_size=32, host_pool_pages=1, output_len=48)
+                        page_size=32, host_pool_pages=1, output_len=48,
+                        # pin the legacy swap-to-queue contract this test
+                        # asserts; with the fallback on, blocked swaps
+                        # recompute the victim instead (tests/test_faults.py)
+                        recompute_fallback=False)
     with InferenceServer(cfg, params, scfg) as server:
         # resident fills the only device slot; kv demand 12+48 > 32 so
         # the one-page host pool can never take it as a victim
