@@ -48,6 +48,19 @@ Measures, on the container's CPU backend:
     recompute escape hatch; the CI gate asserts every request completes
     bit-identical to a fault-free run, the watchdog fallback and
     recompute both engaged, and zero pool pages / host slots leak.
+  * ``host_capacity`` (all modes) — the quantized host KV tier at a
+    fixed RAM budget: resident requests before shed at fp32 vs int8
+    page storage, the host->device migration gather time per dtype,
+    and offload-heavy decode throughput per dtype; the CI gate asserts
+    resident_ratio >= CAPACITY_RESIDENT_RATIO_MIN and decode_ratio >=
+    CAPACITY_DECODE_RATIO_MIN.  ``multi_turn_chat`` and ``fault_soak``
+    additionally rerun once with ``host_kv_dtype=int8``: chaos
+    recovery must stay bit-identical with zero leaks (a true invariant
+    — chaos and fault-free runs quantize identically, so any mismatch
+    is a scale-table leak, not drift), and the smoke chat gate asserts
+    warm==cold token identity (at full geometry host-pool hits are
+    drift-bounded per the documented accuracy contract; the scenario
+    reports ``tokens_match_fraction`` alongside the flag).
 
 Emits ``BENCH_engine.json`` at the repo root (CI uploads it as an
 artifact so the perf trajectory accumulates per PR).  The JSON carries
@@ -138,6 +151,16 @@ HYBRID_ARCH = "jamba-1.5-large-398b"
 # from the cache) must land at or below this fraction of the cold TTFT
 # (again a same-process ratio, portable across runner classes).
 CHAT_WARM_TTFT_RATIO_MAX = 0.5
+
+# host_capacity gates: at a fixed host RAM budget the int8 pool must
+# hold at least this many times more resident requests than fp32
+# (quantized pages are ~4x denser; 1.5 leaves headroom for the fp32
+# scale rows), and int8 decode throughput must stay within 10% of
+# fp32's at the same offload-heavy geometry (the dequant is fused into
+# the host attention kernel, so it rides the same GEMM pass).  Both
+# are same-process ratios, portable across runner classes.
+CAPACITY_RESIDENT_RATIO_MIN = 1.5
+CAPACITY_DECODE_RATIO_MIN = 0.9
 
 
 def _engine_config(**kw) -> EngineConfig:
@@ -343,8 +366,8 @@ def bench_hybrid_decode(*, smoke: bool, host_workers: int) -> dict:
     }
 
 
-def bench_multi_turn_chat(cfg, params, *, smoke: bool,
-                          host_workers: int) -> dict:
+def bench_multi_turn_chat(cfg, params, *, smoke: bool, host_workers: int,
+                          host_kv_dtype: str = "fp32") -> dict:
     """Cross-request prefix cache on the workload it exists for:
     chat sessions sharing a long system prompt, each follow-up turn
     resending the full history.  The same session schedule runs twice
@@ -370,6 +393,7 @@ def bench_multi_turn_chat(cfg, params, *, smoke: bool,
                               page_size=32, host_pool_pages=512,
                               chunk_tokens=32, perf_model="analytic",
                               host_workers=host_workers,
+                              host_kv_dtype=host_kv_dtype,
                               prefix_cache=prefix_cache,
                               prefix_cache_slots=2)
         eng = Engine(cfg, params, ecfg)
@@ -408,9 +432,21 @@ def bench_multi_turn_chat(cfg, params, *, smoke: bool,
     ratio = (warm["followup_ttft_ms"] / cold["followup_ttft_ms"]
              if warm["followup_ttft_ms"] and cold["followup_ttft_ms"]
              else None)
+    # positional token agreement between the runs: 1.0 when
+    # bit-identical.  At fp32 identity is a hard bar in every mode; at
+    # int8 it holds at the smoke geometry (all entries fit the device
+    # cache rows, whose publication is a bit-exact copy) and the CI
+    # gate asserts it there, while at full geometry LRU demotes
+    # entries to the quantized host pool and host hits are
+    # drift-bounded rather than bit-exact (the documented accuracy
+    # contract), so the fraction contextualizes a False flag.
+    wf = [t for o in warm["outputs"] for t in o]
+    cf = [t for o in cold["outputs"] for t in o]
+    matched = sum(1 for a, b in zip(wf, cf) if a == b)
+    match_fraction = matched / max(len(cf), 1)
     return {
         "sessions": n_sessions, "turns_per_session": n_turns,
-        "system_prompt_len": sys_len,
+        "system_prompt_len": sys_len, "host_kv_dtype": host_kv_dtype,
         "cold_followup_ttft_ms": cold["followup_ttft_ms"],
         "warm_followup_ttft_ms": warm["followup_ttft_ms"],
         "warm_ttft_ratio": ratio,
@@ -420,6 +456,7 @@ def bench_multi_turn_chat(cfg, params, *, smoke: bool,
         "hit_rate": warm["hits"] / max(warm["lookups"], 1),
         "tokens_bit_identical_to_no_cache":
             warm["outputs"] == cold["outputs"],
+        "tokens_match_fraction": match_fraction,
     }
 
 
@@ -574,7 +611,8 @@ def bench_preemption(cfg, params, *, smoke: bool, host_workers: int) -> dict:
     }
 
 
-def bench_fault_soak(cfg, params, *, smoke: bool, host_workers: int) -> dict:
+def bench_fault_soak(cfg, params, *, smoke: bool, host_workers: int,
+                     host_kv_dtype: str = "fp32") -> dict:
     """Chaos soak (all modes): a deterministic fault plan — a host
     worker death, a wedged host worker stalled past the watchdog
     deadline, a failed pool allocation and a latency spike — runs
@@ -599,7 +637,7 @@ def bench_fault_soak(cfg, params, *, smoke: bool, host_workers: int) -> dict:
         device_slots=2, host_slots=n_req, cache_len=128, page_size=32,
         host_pool_pages=512, perf_model="analytic",
         host_workers=host_workers, tier_rebalance=False,
-        prefix_cache=False))
+        host_kv_dtype=host_kv_dtype, prefix_cache=False))
     try:
         ref = _fresh(protos)
         ref_eng.run(ref)
@@ -612,7 +650,7 @@ def bench_fault_soak(cfg, params, *, smoke: bool, host_workers: int) -> dict:
         device_slots=2, host_slots=n_req, cache_len=128, page_size=32,
         host_pool_pages=512, perf_model="analytic",
         host_workers=host_workers, tier_rebalance=False,
-        prefix_cache=False, fault_plan=plan))
+        host_kv_dtype=host_kv_dtype, prefix_cache=False, fault_plan=plan))
     try:
         reqs = _fresh(protos)
         t0 = time.perf_counter()
@@ -635,7 +673,8 @@ def bench_fault_soak(cfg, params, *, smoke: bool, host_workers: int) -> dict:
     eng2 = Engine(cfg, params, _engine_config(
         device_slots=1, host_slots=1, cache_len=256, page_size=32,
         host_pool_pages=1, perf_model="analytic",
-        host_workers=host_workers, prefix_cache=False))
+        host_workers=host_workers, host_kv_dtype=host_kv_dtype,
+        prefix_cache=False))
     try:
         resident = Request(prompt=[1] * 12, max_new_tokens=16)
         eng2.submit(resident)
@@ -653,6 +692,7 @@ def bench_fault_soak(cfg, params, *, smoke: bool, host_workers: int) -> dict:
 
     return {
         "fault_plan": plan,
+        "host_kv_dtype": host_kv_dtype,
         "requests": n_req,
         "completed": int(completed),
         "soak_wall_s": soak_wall,
@@ -665,6 +705,110 @@ def bench_fault_soak(cfg, params, *, smoke: bool, host_workers: int) -> dict:
         "pool_pages_leaked": int(pages_leaked),
         "host_slots_leaked": int(host_slots_leaked),
         "degradation_after_soak": degradation,
+    }
+
+
+def bench_host_capacity(cfg, params, *, smoke: bool,
+                        host_workers: int) -> dict:
+    """The quantized host tier's headline claim: at a fixed host RAM
+    budget, how many resident requests fit before admission sheds, at
+    fp32 vs int8 page storage?  Capacity is measured at the pool level
+    (size each pool to the same byte budget, admit fixed-context
+    requests until ``can_admit`` says no), migration cost as the wall
+    time to gather a full context out of the pool (the host->device
+    promotion payload, dequant included), and decode cost by rerunning
+    the offload-heavy decode mix at each dtype.  The CI gate asserts
+    resident_ratio >= CAPACITY_RESIDENT_RATIO_MIN and decode_ratio >=
+    CAPACITY_DECODE_RATIO_MIN."""
+    from repro.models.kv_cache import PagedKVPool
+
+    ctx = 64
+    page_size = 32
+    budget_bytes = 4 << 20                       # 4 MiB of host KV RAM
+
+    def pool_side(dt: str) -> dict:
+        probe = PagedKVPool(1, page_size, cfg.num_attn_layers,
+                            cfg.num_kv_heads, cfg.resolved_head_dim,
+                            host_kv_dtype=dt)
+        pb = probe.page_bytes
+        num_pages = max(1, budget_bytes // pb)
+        pool = PagedKVPool(num_pages, page_size, cfg.num_attn_layers,
+                           cfg.num_kv_heads, cfg.resolved_head_dim,
+                           host_kv_dtype=dt)
+        residents = 0
+        while pool.can_admit(ctx):
+            pool.allocate(residents, ctx)
+            residents += 1
+        # migration payload: fill one resident with real rows, then
+        # time gathering its full context across every layer (what a
+        # host->device promotion materializes)
+        rng = np.random.default_rng(0)
+        rows = rng.standard_normal(
+            (ctx, cfg.num_kv_heads, cfg.resolved_head_dim)).astype(
+                np.float32)
+        for layer in range(pool.num_layers):
+            pool.write_prompt(0, layer, rows, rows,
+                              advance=layer == pool.num_layers - 1)
+        best = float("inf")
+        for _ in range(3):                       # best-of-3 damps noise
+            t0 = time.perf_counter()
+            for layer in range(pool.num_layers):
+                pool.gather(0, layer)
+            best = min(best, time.perf_counter() - t0)
+        return {"page_bytes": pb, "pool_pages": num_pages,
+                "resident_requests": residents,
+                "migration_gather_ms": 1e3 * best}
+
+    n_req, out_len = (4, 6) if smoke else (8, 16)
+    rng = np.random.default_rng(0)
+    protos = [make_synthetic_request(rng, prompt_len=12, output_len=out_len,
+                                     vocab=cfg.vocab_size)
+              for _ in range(n_req)]
+
+    def decode_engine(dt: str) -> Engine:
+        return Engine(cfg, params, _engine_config(
+            device_slots=2, host_slots=n_req, cache_len=128,
+            page_size=page_size, host_pool_pages=512,
+            perf_model="analytic", host_workers=host_workers,
+            tier_rebalance=False, prefix_cache=False, host_kv_dtype=dt))
+
+    def timed_pass(eng: Engine) -> float:
+        it0, wall0 = eng.stats.iterations, eng.stats.wall_time
+        eng.run(_fresh(protos))
+        iters = eng.stats.iterations - it0
+        wall = eng.stats.wall_time - wall0
+        return iters / max(wall, 1e-9)
+
+    fp32 = pool_side("fp32")
+    int8 = pool_side("int8")
+    # decode at each dtype: the timed passes are interleaved (fp32 then
+    # int8, three rounds, best-of) so transient container load lands on
+    # both dtypes instead of skewing the ratio one way
+    engs = {dt: decode_engine(dt) for dt in ("fp32", "int8")}
+    best = {dt: 0.0 for dt in engs}
+    try:
+        for eng in engs.values():
+            eng.run(_fresh(protos))              # warmup: compiles
+        for _ in range(3):
+            for dt, eng in engs.items():
+                best[dt] = max(best[dt], timed_pass(eng))
+    finally:
+        for eng in engs.values():
+            eng.shutdown()
+    fp32_iters, int8_iters = best["fp32"], best["int8"]
+    return {
+        "context_tokens": ctx,
+        "host_ram_budget_bytes": budget_bytes,
+        "fp32": fp32,
+        "int8": int8,
+        "resident_ratio": (int8["resident_requests"]
+                           / max(fp32["resident_requests"], 1)),
+        "fp32_decode_iters_per_s": fp32_iters,
+        "int8_decode_iters_per_s": int8_iters,
+        "decode_ratio": int8_iters / max(fp32_iters, 1e-9),
+        "migration_gather_ratio": (int8["migration_gather_ms"]
+                                   / max(fp32["migration_gather_ms"],
+                                         1e-9)),
     }
 
 
@@ -847,7 +991,9 @@ def bench_http_serving(cfg, params, *, smoke: bool, host_workers: int) -> dict:
 
 
 def check_regression(decode: dict, preempt: dict, http: dict,
-                     hybrid: dict, chat: dict, soak: dict) -> int:
+                     hybrid: dict, chat: dict, soak: dict,
+                     capacity: dict, chat_int8: dict,
+                     soak_int8: dict) -> int:
     """CI gate: fail on a >REGRESSION_TOLERANCE drop vs the committed
     smoke baseline on decode throughput or overlap efficiency, on any
     deadline miss in the smoke preemption sub-scenario (urgent requests
@@ -915,6 +1061,36 @@ def check_regression(decode: dict, preempt: dict, http: dict,
         failures.append(f"fault_soak leaks: "
                         f"{soak.get('pool_pages_leaked')} pool pages, "
                         f"{soak.get('host_slots_leaked')} host slots")
+    rr = capacity.get("resident_ratio")
+    if rr is None or rr < CAPACITY_RESIDENT_RATIO_MIN:
+        failures.append(f"host_capacity resident_ratio: {rr} < "
+                        f"{CAPACITY_RESIDENT_RATIO_MIN} (int8 must hold "
+                        f"proportionally more residents at equal RAM)")
+    dr = capacity.get("decode_ratio")
+    if dr is None or dr < CAPACITY_DECODE_RATIO_MIN:
+        failures.append(f"host_capacity decode_ratio: {dr} < "
+                        f"{CAPACITY_DECODE_RATIO_MIN} (fused dequant must "
+                        f"keep int8 decode within 10% of fp32)")
+    # the quantized reruns hold the same exactness bars as fp32: the
+    # prefix cache stays warm==cold bit-identical and the chaos plan
+    # recovers bit-identically with zero leaks (a scale-table leak
+    # would show up here as leaked pool pages)
+    if not chat_int8.get("hit_rate"):
+        failures.append("multi_turn_chat[int8] hit_rate is zero")
+    if not chat_int8.get("tokens_bit_identical_to_no_cache"):
+        failures.append("multi_turn_chat[int8] warm run is not "
+                        "bit-identical to its cache-disabled run")
+    if soak_int8.get("completed") != soak_int8.get("requests"):
+        failures.append(f"fault_soak[int8]: {soak_int8.get('completed')}/"
+                        f"{soak_int8.get('requests')} requests completed")
+    if not soak_int8.get("tokens_bit_identical_to_fault_free"):
+        failures.append("fault_soak[int8] is not bit-identical to its "
+                        "fault-free int8 reference")
+    if soak_int8.get("pool_pages_leaked", 0) \
+            or soak_int8.get("host_slots_leaked", 0):
+        failures.append(f"fault_soak[int8] leaks: "
+                        f"{soak_int8.get('pool_pages_leaked')} pool pages, "
+                        f"{soak_int8.get('host_slots_leaked')} host slots")
     if failures:
         print("REGRESSION GATE FAILED:")
         for f in failures:
@@ -991,9 +1167,23 @@ def main() -> None:
     # engine leaks no pool pages or host slots
     soak = bench_fault_soak(cfg, params, smoke=args.smoke,
                             host_workers=args.host_workers)
+    # the quantized host tier runs in smoke mode too: the CI gate
+    # asserts int8 packs >= 1.5x the residents at equal host RAM with
+    # decode within 10% of fp32, and that the chat + soak exactness
+    # bars hold unchanged when the pool stores int8
+    capacity = bench_host_capacity(cfg, params, smoke=args.smoke,
+                                   host_workers=args.host_workers)
+    chat_int8 = bench_multi_turn_chat(cfg, params, smoke=args.smoke,
+                                      host_workers=args.host_workers,
+                                      host_kv_dtype="int8")
+    soak_int8 = bench_fault_soak(cfg, params, smoke=args.smoke,
+                                 host_workers=args.host_workers,
+                                 host_kv_dtype="int8")
     scenarios = {"preemption": preempt, "http_serving": http,
                  "hybrid_decode": hybrid, "multi_turn_chat": chat,
-                 "fault_soak": soak}
+                 "fault_soak": soak, "host_capacity": capacity,
+                 "multi_turn_chat_int8": chat_int8,
+                 "fault_soak_int8": soak_int8}
     if not args.smoke:
         scenarios["long_context"] = bench_long_context(
             cfg, params, host_workers=args.host_workers)
@@ -1097,9 +1287,23 @@ def main() -> None:
           f"{soak['pool_pages_leaked']} pages / "
           f"{soak['host_slots_leaked']} slots, degradation "
           f"'{soak['degradation_after_soak']}')")
+    print(f"  host_capacity: {capacity['int8']['resident_requests']} int8 "
+          f"vs {capacity['fp32']['resident_requests']} fp32 residents in "
+          f"{capacity['host_ram_budget_bytes'] >> 20} MiB "
+          f"({capacity['resident_ratio']:.2f}x), decode ratio "
+          f"{capacity['decode_ratio']:.2f}, migration gather ratio "
+          f"{capacity['migration_gather_ratio']:.2f}")
+    print(f"  int8 reruns: chat bit-identical "
+          f"{chat_int8['tokens_bit_identical_to_no_cache']} (hit rate "
+          f"{chat_int8['hit_rate']:.0%}, token match "
+          f"{chat_int8['tokens_match_fraction']:.0%}), soak "
+          f"{soak_int8['completed']}/{soak_int8['requests']} bit-identical "
+          f"{soak_int8['tokens_bit_identical_to_fault_free']}, leaks "
+          f"{soak_int8['pool_pages_leaked']} pages / "
+          f"{soak_int8['host_slots_leaked']} slots")
     if args.check:
         sys.exit(check_regression(decode, preempt, http, hybrid, chat,
-                                  soak))
+                                  soak, capacity, chat_int8, soak_int8))
 
 
 if __name__ == "__main__":

@@ -447,7 +447,14 @@ class HostExecutor:
         self.pool.append_rows(job.request_ids, li, job.positions, k, v)
 
         # paged attention over [0, pos] inclusive, rows sharded across
-        # the worker pool into disjoint slices of one output buffer
+        # the worker pool into disjoint slices of one output buffer.
+        # Chains must be hot (physical page ids) before snapshotting
+        # them into the int32 table; writes above rehydrate this
+        # layer's tail page but a long-idle request's earlier pages
+        # may still be cold.
+        if self.pool.has_compressed:
+            for rid in job.request_ids:
+                self.pool.ensure_hot(rid)
         chains = [self.pool.page_tables[(rid, li)]
                   for rid in job.request_ids]
         max_pages = max(len(c) for c in chains)
@@ -455,17 +462,19 @@ class HostExecutor:
         for i, c in enumerate(chains):
             pt[i, :len(c)] = c
         lengths = job.positions.astype(np.int32) + 1
+        scales = self.pool.scales
         out = self._out_buffer(q.shape)
         if self._shards is None or n < 2:
             host_paged_attention_numpy(q, self.pool.pages, pt, lengths,
-                                       page_size=self.page_size, out=out)
+                                       page_size=self.page_size,
+                                       scales=scales, out=out)
         else:
             bounds = np.linspace(0, n, min(self.workers, n) + 1).astype(int)
             futs = [
                 self._shards.submit(
                     host_paged_attention_numpy, q[a:b], self.pool.pages,
                     pt[a:b], lengths[a:b], page_size=self.page_size,
-                    out=out[a:b])
+                    scales=scales, out=out[a:b])
                 for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
             for f in futs:
                 f.result()

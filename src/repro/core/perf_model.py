@@ -87,13 +87,36 @@ class ModelCosts:
     bytes_per_param: int = 2
     state_bytes_per_row: int = 0  # recurrent (SSM/xLSTM) state per request,
     #                               all layers — 0 for attention-only stacks
+    # bytes per cached position *as stored by the host tier* — what
+    # t_catt (CPU attention is bandwidth-bound on these), t_migrate/
+    # t_swap (these bytes cross the link) and host-capacity predicates
+    # charge.  0 means "same as the device fields" (the fp32/unquantized
+    # status quo); ``from_config(host_kv_bytes_per_el=1)`` prices the
+    # int8 pool (element byte + fp32 K/V scale pair per position).
+    host_kv_bytes_per_pos: int = 0
+    host_kv_bytes_per_pos_layer: int = 0
+
+    def __post_init__(self) -> None:
+        if self.host_kv_bytes_per_pos == 0:
+            object.__setattr__(self, "host_kv_bytes_per_pos",
+                               self.kv_bytes_per_pos)
+        if self.host_kv_bytes_per_pos_layer == 0:
+            object.__setattr__(self, "host_kv_bytes_per_pos_layer",
+                               self.kv_bytes_per_pos_layer)
 
     @classmethod
     def from_config(cls, cfg: ModelConfig, bytes_per_param: int = 2,
-                    kv_bytes_per_el: int = 2) -> "ModelCosts":
+                    kv_bytes_per_el: int = 2,
+                    host_kv_bytes_per_el: Optional[int] = None
+                    ) -> "ModelCosts":
         head = cfg.resolved_head_dim
         kv_per_layer = 2 * cfg.num_kv_heads * head * kv_bytes_per_el
         n_attn = max(cfg.num_attn_layers, 1)
+        host_per_layer = 0
+        if host_kv_bytes_per_el is not None:
+            host_per_layer = 2 * cfg.num_kv_heads * head * host_kv_bytes_per_el
+            if host_kv_bytes_per_el < kv_bytes_per_el:   # quantized: scales
+                host_per_layer += 2 * 4      # one fp32 scale each for K, V
         # linear params = everything except embedding tables (decode
         # touches one row) — attention projections + FFN + head.
         linear = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
@@ -109,6 +132,8 @@ class ModelCosts:
             attn_out_bytes_per_req_layer=out_bytes,
             bytes_per_param=bytes_per_param,
             state_bytes_per_row=_recurrent_state_bytes(cfg),
+            host_kv_bytes_per_pos=host_per_layer * cfg.num_attn_layers,
+            host_kv_bytes_per_pos_layer=host_per_layer,
         )
 
 
@@ -186,9 +211,11 @@ class AnalyticPerfModel:
     # --- host --------------------------------------------------------------
     def t_catt(self, batch: int, context: float,
                layers: Optional[int] = None) -> float:
-        """Host attention over `layers` (default: all attention layers)."""
+        """Host attention over `layers` (default: all attention layers).
+        Charged at the host tier's *stored* element size — CPU paged
+        attention is bandwidth-bound, so int8 KV scans ~4x faster."""
         p = self.platform
-        per_layer = self.costs.kv_bytes_per_pos_layer
+        per_layer = self.costs.host_kv_bytes_per_pos_layer
         n_layers = self.costs.num_attn_layers if layers is None else layers
         kv_bytes = batch * max(context, 1.0) * per_layer * n_layers
         return kv_bytes / p.host_bw + p.kernel_overhead
@@ -202,9 +229,11 @@ class AnalyticPerfModel:
         (every attention layer) plus its recurrent-state row (hybrids)
         crossing the device<->host link once — charged against
         rebalance/preemption decisions by the ``TierPlacer`` and the
-        simulator alike."""
+        simulator alike.  KV crosses the link in its host-stored form
+        (quantized bytes on the wire), so quantization makes every
+        tier move proportionally cheaper."""
         return self.t_transfer(max(n_tokens, 0)
-                               * self.costs.kv_bytes_per_pos
+                               * self.costs.host_kv_bytes_per_pos
                                + self.costs.state_bytes_per_row)
 
     def t_recompute(self, prompt_tokens: int, emitted_tokens: int = 0) -> float:
@@ -230,12 +259,18 @@ class AnalyticPerfModel:
         return self.costs.kv_bytes_per_pos or max(
             self.costs.state_bytes_per_row, 1)
 
+    def _host_bytes_per_pos(self) -> int:
+        return self.costs.host_kv_bytes_per_pos or max(
+            self.costs.state_bytes_per_row, 1)
+
     def n_g(self, context: float) -> float:
         """Device attention rate: KV positions scanned per second."""
         return self.platform.device_bw / self._bytes_per_pos()
 
     def n_c(self, context: float) -> float:
-        return self.platform.host_bw / self._bytes_per_pos()
+        """Host attention rate at the stored element size — smaller
+        host KV raises the positions/s the CPU tier sustains."""
+        return self.platform.host_bw / self._host_bytes_per_pos()
 
     # --- scheduler interface --------------------------------------------------
     def timings(self, decode_batch: int, mean_context: float,
@@ -270,6 +305,7 @@ class TablePerfModel:
     def __init__(self, tables: Dict[str, List[Tuple[float, float]]],
                  *, kv_bytes_per_pos: int, num_attn_layers: int,
                  state_bytes_per_row: int = 0,
+                 host_kv_bytes_per_pos: Optional[int] = None,
                  fingerprint: Optional[str] = None,
                  profile_grid: Optional[Dict[str, List[float]]] = None
                  ) -> None:
@@ -282,6 +318,11 @@ class TablePerfModel:
         self.kv_bytes_per_pos = kv_bytes_per_pos
         self.num_attn_layers = num_attn_layers
         self.state_bytes_per_row = state_bytes_per_row
+        # bytes per position as the host pool stores them (quantized
+        # pools: element bytes + scales); None = same as device
+        self.host_kv_bytes_per_pos = (kv_bytes_per_pos
+                                      if host_kv_bytes_per_pos is None
+                                      else host_kv_bytes_per_pos)
         # which model config the tables were measured for (see
         # model_fingerprint) and at which sample points; None for
         # hand-built tables
@@ -316,8 +357,9 @@ class TablePerfModel:
         return self._eval("transfer", n_bytes)
 
     def t_migrate(self, n_tokens: int) -> float:
-        """Measured-table twin of ``AnalyticPerfModel.t_migrate``."""
-        return self.t_transfer(max(n_tokens, 0) * self.kv_bytes_per_pos
+        """Measured-table twin of ``AnalyticPerfModel.t_migrate`` —
+        charged at the host-stored (possibly quantized) byte size."""
+        return self.t_transfer(max(n_tokens, 0) * self.host_kv_bytes_per_pos
                                + self.state_bytes_per_row)
 
     def t_recompute(self, prompt_tokens: int, emitted_tokens: int = 0) -> float:
@@ -379,6 +421,7 @@ class TablePerfModel:
             "kv_bytes_per_pos": self.kv_bytes_per_pos,
             "num_attn_layers": self.num_attn_layers,
             "state_bytes_per_row": self.state_bytes_per_row,
+            "host_kv_bytes_per_pos": self.host_kv_bytes_per_pos,
             "fingerprint": self.fingerprint,
             "profile_grid": self.profile_grid,
         }
@@ -394,21 +437,45 @@ class TablePerfModel:
                    kv_bytes_per_pos=payload["kv_bytes_per_pos"],
                    num_attn_layers=payload["num_attn_layers"],
                    state_bytes_per_row=payload.get("state_bytes_per_row", 0),
+                   host_kv_bytes_per_pos=payload.get("host_kv_bytes_per_pos"),
                    fingerprint=payload.get("fingerprint"),
                    profile_grid=payload.get("profile_grid"))
 
 
-def analytic_model(platform: str, cfg: ModelConfig) -> AnalyticPerfModel:
-    return AnalyticPerfModel(PLATFORMS[platform], ModelCosts.from_config(cfg))
+HOST_KV_EL_BYTES: Dict[str, int] = {"fp32": 4, "int8": 1}
 
 
-def model_fingerprint(cfg: ModelConfig) -> str:
+def host_kv_el_bytes(host_kv_dtype: str) -> Optional[int]:
+    """Stored bytes/element for a host-pool dtype knob, or None for
+    fp32 — None keeps ``ModelCosts`` host fields at the device values
+    (the pre-quantization pricing, preserved exactly)."""
+    if host_kv_dtype in (None, "fp32"):
+        return None
+    return HOST_KV_EL_BYTES[host_kv_dtype]
+
+
+def analytic_model(platform: str, cfg: ModelConfig,
+                   host_kv_dtype: str = "fp32") -> AnalyticPerfModel:
+    return AnalyticPerfModel(
+        PLATFORMS[platform],
+        ModelCosts.from_config(
+            cfg, host_kv_bytes_per_el=host_kv_el_bytes(host_kv_dtype)))
+
+
+def model_fingerprint(cfg: ModelConfig, host_kv_dtype: str = "fp32") -> str:
     """Identity of the *model shape* a measured profile belongs to
     (deliberately host-independent: the same model profiled on another
-    machine is a legitimate reuse; another model's tables are not)."""
+    machine is a legitimate reuse; another model's tables are not).
+    Quantized host tiers get a suffix — their catt tables are measured
+    at the stored dtype and must not be reused across precisions; the
+    fp32 default renders the historical string so existing caches stay
+    valid."""
     costs = ModelCosts.from_config(cfg)
-    return (f"{cfg.name}:d{cfg.d_model}:L{cfg.num_layers}"
+    base = (f"{cfg.name}:d{cfg.d_model}:L{cfg.num_layers}"
             f":attn{costs.num_attn_layers}:kv{costs.kv_bytes_per_pos}")
+    if host_kv_dtype not in (None, "fp32"):
+        base += f":hostkv-{host_kv_dtype}"
+    return base
 
 
 # ---------------------------------------------------------------------------
@@ -446,6 +513,7 @@ class PerfModelProvider:
     platform: str = "a10"
     profile_cache: Optional[str] = None
     profile_grid: Optional[Dict[str, Tuple[int, ...]]] = None
+    host_kv_dtype: str = "fp32"
 
     def resolve(self, spec: str):
         spec = (spec or "analytic").strip()
@@ -458,7 +526,7 @@ class PerfModelProvider:
             if not os.path.exists(path):
                 raise ValueError(f"perf-model profile not found: {path!r}")
             model = TablePerfModel.load(path)
-            want = model_fingerprint(self.cfg)
+            want = model_fingerprint(self.cfg, self.host_kv_dtype)
             if model.fingerprint is not None and model.fingerprint != want:
                 raise ValueError(
                     f"profile {path!r} was measured for "
@@ -467,16 +535,18 @@ class PerfModelProvider:
         if spec == "measured":
             if self.profile_cache and os.path.exists(self.profile_cache):
                 model = TablePerfModel.load(self.profile_cache)
-                if model.fingerprint == model_fingerprint(self.cfg) \
+                if model.fingerprint == model_fingerprint(
+                        self.cfg, self.host_kv_dtype) \
                         and self._grid_matches(model):
                     return model
                 # stale cache (another model's tables, a pre-fingerprint
-                # payload of unknown provenance, or an explicitly
-                # requested grid the cache wasn't measured at):
-                # re-profile below and overwrite
+                # payload of unknown provenance, another host-KV dtype,
+                # or an explicitly requested grid the cache wasn't
+                # measured at): re-profile below and overwrite
             from repro.core.profiler import OfflineProfiler   # cycle-free
             grid = dict(self.profile_grid or STARTUP_PROFILE_GRID)
-            model = OfflineProfiler(self.cfg).run(**grid)
+            model = OfflineProfiler(
+                self.cfg, host_kv_dtype=self.host_kv_dtype).run(**grid)
             if self.profile_cache:
                 model.save(self.profile_cache)
             return model
@@ -488,7 +558,7 @@ class PerfModelProvider:
         if platform not in PLATFORMS:
             raise ValueError(f"unknown platform {platform!r}; "
                              f"have {sorted(PLATFORMS)}")
-        return analytic_model(platform, self.cfg)
+        return analytic_model(platform, self.cfg, self.host_kv_dtype)
 
     def _grid_matches(self, model: TablePerfModel) -> bool:
         """A cache satisfies an *explicitly requested* grid only if it
@@ -504,10 +574,11 @@ class PerfModelProvider:
 def resolve_perf_model(spec: str, cfg: ModelConfig, *, platform: str = "a10",
                        profile_cache: Optional[str] = None,
                        profile_grid: Optional[Dict[str, Tuple[int, ...]]]
-                       = None):
+                       = None, host_kv_dtype: str = "fp32"):
     return PerfModelProvider(cfg, platform=platform,
                              profile_cache=profile_cache,
-                             profile_grid=profile_grid).resolve(spec)
+                             profile_grid=profile_grid,
+                             host_kv_dtype=host_kv_dtype).resolve(spec)
 
 
 # ---------------------------------------------------------------------------

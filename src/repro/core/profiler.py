@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.perf_model import (ModelCosts, TablePerfModel,
-                                   model_fingerprint)
+                                   host_kv_el_bytes, model_fingerprint)
 from repro.kernels.ops import host_paged_attention_numpy
 from repro.models import init_params
 from repro.models.config import ModelConfig
@@ -38,9 +38,12 @@ def _time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 class OfflineProfiler:
     """Profiles one model config on the current backends."""
 
-    def __init__(self, cfg: ModelConfig, seed: int = 0) -> None:
+    def __init__(self, cfg: ModelConfig, seed: int = 0,
+                 host_kv_dtype: str = "fp32") -> None:
         self.cfg = cfg
-        self.costs = ModelCosts.from_config(cfg)
+        self.host_kv_dtype = host_kv_dtype
+        self.costs = ModelCosts.from_config(
+            cfg, host_kv_bytes_per_el=host_kv_el_bytes(host_kv_dtype))
         key = jax.random.PRNGKey(seed)
         # one layer's worth of linear weights is enough — scale by depth
         from repro.models.transformer import entry_init
@@ -99,8 +102,11 @@ class OfflineProfiler:
     def profile_catt(self, kv_positions: Sequence[int], context: int = 1024,
                      page_size: int = 64) -> List[Tuple[float, float]]:
         """Host paged attention latency vs KV positions (per layer),
-        scaled to all attention layers."""
+        scaled to all attention layers — measured at the pool's real
+        stored dtype (int8 pages + the fused-dequant kernel path when
+        the host tier is quantized)."""
         cfg = self.cfg
+        quant = self.host_kv_dtype == "int8"
         out = []
         for total in kv_positions:
             ctx = min(context, total)
@@ -108,7 +114,10 @@ class OfflineProfiler:
             pages_per = -(-ctx // page_size)
             npages = batch * pages_per
             pages = np.ones((2, npages, page_size, cfg.num_kv_heads,
-                             cfg.resolved_head_dim), np.float32)
+                             cfg.resolved_head_dim),
+                            np.int8 if quant else np.float32)
+            scales = (np.ones((2, npages, page_size), np.float32)
+                      if quant else None)
             pt = np.arange(npages, dtype=np.int32).reshape(batch, pages_per)
             lengths = np.full((batch,), ctx, np.int32)
             q = np.ones((batch, cfg.num_heads, cfg.resolved_head_dim),
@@ -117,7 +126,8 @@ class OfflineProfiler:
             iters = 3
             for _ in range(iters):
                 host_paged_attention_numpy(q, pages, pt, lengths,
-                                           page_size=page_size)
+                                           page_size=page_size,
+                                           scales=scales)
             t = (time.perf_counter() - t0) / iters
             out.append((float(batch * ctx),
                         t * self.costs.num_attn_layers))
@@ -177,7 +187,10 @@ class OfflineProfiler:
                               kv_bytes_per_pos=self.costs.kv_bytes_per_pos,
                               num_attn_layers=self.costs.num_attn_layers,
                               state_bytes_per_row=self.costs.state_bytes_per_row,
-                              fingerprint=model_fingerprint(self.cfg),
+                              host_kv_bytes_per_pos=self.costs
+                              .host_kv_bytes_per_pos,
+                              fingerprint=model_fingerprint(
+                                  self.cfg, self.host_kv_dtype),
                               profile_grid=dict(
                                   token_counts=list(token_counts),
                                   kv_positions=list(kv_positions),

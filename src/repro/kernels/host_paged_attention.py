@@ -16,6 +16,13 @@ the host CPU.  Two implementations live here:
 Layout: pages (2, P, page_size, KV, D) — index 0 keys, 1 values — with
 page tables (B, max_pages) and per-row lengths, matching
 ``repro.models.kv_cache.PagedKVPool``.
+
+Both kernels take an optional ``scales`` operand, (2, P, page_size)
+fp32: when given, ``pages`` holds symmetric int8 and each slot's row
+is dequantized *inside* the kernel during the per-request page gather
+(``k = q_int8 * scale`` fused into the existing ``astype`` step) — a
+full-precision copy of the pool is never materialized.  ``scales=None``
+is the legacy full-precision path, bit-identical to before.
 """
 from __future__ import annotations
 
@@ -37,24 +44,13 @@ def _cpu_device():
     return _CPU
 
 
-@functools.partial(jax.jit, static_argnames=("page_size",), backend="cpu")
-def _paged_attention_impl(q, pages, page_table, lengths, *, page_size: int):
-    """q: (B, H, D); pages: (2, P, page_size, KV, D);
-    page_table: (B, MP) int32; lengths: (B,).  Returns (B, H, D) f32."""
+def _attention_core(q, k, v, lengths, s):
+    """Shared blocked-softmax core.  k, v: (B, S, KV, D) f32."""
     b, h, d = q.shape
-    kv = pages.shape[3]
+    kv = k.shape[2]
     g = h // kv
-    mp = page_table.shape[1]
     scale = 1.0 / math.sqrt(d)
-
-    # gather this batch's pages: (B, MP, page_size, KV, D)
-    k = pages[0][page_table]
-    v = pages[1][page_table]
-    s = mp * page_size
-    k = k.reshape(b, s, kv, d).astype(jnp.float32)
-    v = v.reshape(b, s, kv, d).astype(jnp.float32)
     qg = q.reshape(b, kv, g, d).astype(jnp.float32)
-
     scores = jnp.einsum("bkgd,bskd->bkgs", qg, k) * scale
     idx = jnp.arange(s)[None, None, None, :]
     scores = jnp.where(idx < lengths[:, None, None, None], scores, -1e30)
@@ -65,23 +61,65 @@ def _paged_attention_impl(q, pages, page_table, lengths, *, page_size: int):
     return out.reshape(b, h, d)
 
 
-def host_paged_attention(q, pages, page_table, lengths, *, page_size: int):
+@functools.partial(jax.jit, static_argnames=("page_size",), backend="cpu")
+def _paged_attention_impl(q, pages, page_table, lengths, *, page_size: int):
+    """q: (B, H, D); pages: (2, P, page_size, KV, D);
+    page_table: (B, MP) int32; lengths: (B,).  Returns (B, H, D) f32."""
+    b = q.shape[0]
+    d = q.shape[2]
+    kv = pages.shape[3]
+    mp = page_table.shape[1]
+    s = mp * page_size
+
+    # gather this batch's pages: (B, MP, page_size, KV, D)
+    k = pages[0][page_table].reshape(b, s, kv, d).astype(jnp.float32)
+    v = pages[1][page_table].reshape(b, s, kv, d).astype(jnp.float32)
+    return _attention_core(q, k, v, lengths, s)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",), backend="cpu")
+def _paged_attention_quant_impl(q, pages, scales, page_table, lengths, *,
+                                page_size: int):
+    """Quantized variant: pages int8, scales (2, P, page_size) fp32 —
+    dequant is fused into the page gather (no fp32 pool copy)."""
+    b = q.shape[0]
+    d = q.shape[2]
+    kv = pages.shape[3]
+    mp = page_table.shape[1]
+    s = mp * page_size
+
+    sk = scales[0][page_table].reshape(b, s, 1, 1)
+    sv = scales[1][page_table].reshape(b, s, 1, 1)
+    k = pages[0][page_table].reshape(b, s, kv, d).astype(jnp.float32) * sk
+    v = pages[1][page_table].reshape(b, s, kv, d).astype(jnp.float32) * sv
+    return _attention_core(q, k, v, lengths, s)
+
+
+def host_paged_attention(q, pages, page_table, lengths, *, page_size: int,
+                         scales=None):
     """Host (CPU-tier) paged attention.  Always executes on the CPU
-    backend regardless of the default device."""
+    backend regardless of the default device.  ``scales`` selects the
+    fused-dequant int8 path (see module docstring)."""
     cpu = _cpu_device()
-    args = jax.device_put((q, pages, page_table, lengths), cpu)
-    return _paged_attention_impl(*args, page_size=page_size)
+    if scales is None:
+        args = jax.device_put((q, pages, page_table, lengths), cpu)
+        return _paged_attention_impl(*args, page_size=page_size)
+    args = jax.device_put((q, pages, scales, page_table, lengths), cpu)
+    return _paged_attention_quant_impl(*args, page_size=page_size)
 
 
 def host_paged_attention_numpy(q: np.ndarray, pages: np.ndarray,
                                page_table: np.ndarray, lengths: np.ndarray,
                                *, page_size: int,
+                               scales: Optional[np.ndarray] = None,
                                out: Optional[np.ndarray] = None) -> np.ndarray:
     """Blocked numpy implementation (GIL released inside BLAS calls).
 
     ``out`` (B, H, D) float32, written in place when given — lets the
     threaded executor shard rows of one job across workers into
-    disjoint views of a preallocated per-job buffer.
+    disjoint views of a preallocated per-job buffer.  ``scales``
+    enables the fused-dequant int8 path: only each request's own chain
+    is dequantized, inside the existing per-row ``astype`` gather.
     """
     b, h, d = q.shape
     kv = pages.shape[3]
@@ -95,6 +133,9 @@ def host_paged_attention_numpy(q: np.ndarray, pages: np.ndarray,
         chain = page_table[i, :npages]
         k = pages[0, chain].reshape(-1, kv, d)[:n].astype(np.float32)
         v = pages[1, chain].reshape(-1, kv, d)[:n].astype(np.float32)
+        if scales is not None:
+            k *= scales[0, chain].reshape(-1)[:n, None, None]
+            v *= scales[1, chain].reshape(-1)[:n, None, None]
         qi = q[i].reshape(kv, g, d).astype(np.float32)
         scores = np.einsum("kgd,skd->kgs", qi, k) * scale
         m = scores.max(-1, keepdims=True)

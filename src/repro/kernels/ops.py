@@ -51,10 +51,12 @@ def prefill_attention(q, k, v, prefix_len=None, *, causal: bool = True,
     return _ref.prefill_attention_ref(q, k, v, prefix_len, causal=causal)
 
 
-def host_paged_attention(q, pages, page_table, lengths, *, page_size: int):
-    """Host-tier paged attention (always CPU backend)."""
+def host_paged_attention(q, pages, page_table, lengths, *, page_size: int,
+                         scales=None):
+    """Host-tier paged attention (always CPU backend).  ``scales``
+    selects the fused-dequant int8 path."""
     return _host.host_paged_attention(q, pages, page_table, lengths,
-                                      page_size=page_size)
+                                      page_size=page_size, scales=scales)
 
 
 host_paged_attention_numpy = _host.host_paged_attention_numpy

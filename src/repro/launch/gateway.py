@@ -59,6 +59,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="default max_new_tokens when a request omits it")
     ap.add_argument("--chunk-tokens", type=int, default=64)
     ap.add_argument("--host-workers", type=int, default=0)
+    ap.add_argument("--host-kv-dtype", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="host KV pool precision per replica (int8 = "
+                         "quantized pages + fused-dequant host attention)")
+    ap.add_argument("--cold-page-compress-after", type=float, default=0.0,
+                    help="compress idle host KV pages after this many "
+                         "seconds (0 = off)")
     ap.add_argument("--platform", default="a10")
     ap.add_argument("--perf-model", default="analytic",
                     help="perf-model spec per replica: analytic | "
@@ -100,6 +107,8 @@ def build_pool(args: argparse.Namespace) -> EngineReplicaPool:
         device_slots=args.device_slots, host_slots=args.host_slots,
         cache_len=args.cache_len, enable_offload=not args.no_offload,
         host_workers=args.host_workers, chunk_tokens=args.chunk_tokens,
+        host_kv_dtype=args.host_kv_dtype,
+        cold_page_compress_after=args.cold_page_compress_after,
         platform=args.platform, perf_model=args.perf_model,
         profile_cache=args.profile_cache, deadline=args.deadline,
         prefix_cache=not args.no_prefix_cache,

@@ -60,6 +60,18 @@ def main() -> None:
                          "(0 = auto: cpu_count - 1)")
     ap.add_argument("--no-bucketed-prefill", action="store_true",
                     help="disable the bucketed/batched prefill fast path")
+    ap.add_argument("--host-kv-dtype", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="host KV pool storage precision; int8 stores "
+                         "quantized pages with per-token scales and "
+                         "dequantizes inside the host attention kernel "
+                         "(docs/serving_api.md 'Host KV precision and "
+                         "compression')")
+    ap.add_argument("--cold-page-compress-after", type=float, default=0.0,
+                    help="compress host KV pages of requests idle this "
+                         "many seconds, freeing physical pages "
+                         "(0 = off); pages decompress transparently "
+                         "on touch")
     ap.add_argument("--chunk-tokens", type=int, default=64,
                     help="chunked-prefill budget per iteration while "
                          "decode is active (0 = whole-prompt prefill "
@@ -110,6 +122,8 @@ def main() -> None:
         cache_len=args.cache_len, enable_offload=not args.no_offload,
         host_workers=args.host_workers,
         bucketed_prefill=not args.no_bucketed_prefill,
+        host_kv_dtype=args.host_kv_dtype,
+        cold_page_compress_after=args.cold_page_compress_after,
         chunk_tokens=args.chunk_tokens,
         prefix_cache=not args.no_prefix_cache,
         prefix_cache_slots=args.prefix_cache_slots,

@@ -18,11 +18,17 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.distributed.compression import (compress_page_bytes,
+                                           decompress_page_bytes,
+                                           dequantize_kv_rows,
+                                           quantize_kv_rows)
 
 
 class AttnKV(NamedTuple):
@@ -103,14 +109,59 @@ class PagedKVPool:
     live requests) form an LRU: ``allocate``/``extend``/COW reclaim
     them automatically under memory pressure, notifying ``on_evict`` so
     the cache index can drop the entry.
+
+    **Precision.** With ``host_kv_dtype="int8"`` pages store symmetric
+    int8 with one fp32 scale per (K|V, page, slot) — i.e. per token row
+    — in a side table indexed by physical page, so COW copies and
+    ``fork`` aliases carry their scales by page identity automatically.
+    ``gather`` and the host attention kernel dequantize on the fly; the
+    pool never materializes a full-precision copy of itself.  Per-row
+    scaling also makes requantizing a dequantized row reproduce the
+    identical int8 codes (the max-magnitude element maps back to ±127),
+    so gather → write_prompt chains are stable.
+
+    **Cold pages.** With ``cold_page_compress_after > 0`` pages whose
+    owner has been idle past that many seconds are losslessly
+    compressed (zstd, or zlib when unavailable): the raw page bytes
+    (and scale rows) move into a side blob dict keyed by a negative
+    sentinel id spliced into the page chains, and the physical page
+    returns to the free list — that is the capacity win, since the pool
+    array is preallocated.  Any touch (write, gather, ``ensure_hot``)
+    transparently rehydrates.  Allocation pressure prefers compressing
+    evictable owners' pages over evicting them (the degradation
+    ladder's cheaper rung).
     """
 
     def __init__(self, num_pages: int, page_size: int, num_layers: int,
-                 kv_heads: int, head_dim: int, dtype=np.float32) -> None:
+                 kv_heads: int, head_dim: int, dtype=np.float32,
+                 host_kv_dtype: str = "fp32",
+                 cold_page_compress_after: float = 0.0) -> None:
+        if host_kv_dtype not in ("fp32", "int8"):
+            raise ValueError(f"host_kv_dtype must be fp32|int8, "
+                             f"got {host_kv_dtype!r}")
         self.page_size = page_size
         self.num_layers = num_layers
+        self.host_kv_dtype = host_kv_dtype
+        self.quantized = host_kv_dtype == "int8"
+        # dtype handed back by ``gather`` (and the empty-chain path) —
+        # stored dtype is int8 when quantized, but readers see this.
+        self.logical_dtype = np.dtype(dtype)
+        stored = np.int8 if self.quantized else dtype
         self.pages = np.zeros((2, num_pages, page_size, kv_heads, head_dim),
-                              dtype=dtype)
+                              dtype=stored)
+        # per-slot symmetric-quantization scales (K|V, page, slot);
+        # indexed by physical page so COW/fork carry them for free
+        self.scales: Optional[np.ndarray] = (
+            np.ones((2, num_pages, page_size), np.float32)
+            if self.quantized else None)
+        # cold-page compression: sentinel id (< 0) -> compressed blob
+        self.cold_page_compress_after = float(cold_page_compress_after)
+        self._compressed: Dict[int, bytes] = {}
+        self._next_blob_id = -1
+        self._last_touch: Dict[int, float] = {}
+        self.pages_compressed = 0
+        self.pages_decompressed = 0
+        self.compressed_ratio_ewma: Optional[float] = None
         self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
         # (request_id, layer) -> list of page indices
         self.page_tables: Dict[Tuple[int, int], List[int]] = {}
@@ -151,7 +202,7 @@ class PagedKVPool:
             for layer in range(self.num_layers):
                 total += sum(1 for p in self.page_tables.get((owner, layer),
                                                              [])
-                             if self.page_refs.get(p, 1) <= 1)
+                             if p >= 0 and self.page_refs.get(p, 1) <= 1)
         return total
 
     def can_admit(self, tokens: int) -> bool:
@@ -166,18 +217,91 @@ class PagedKVPool:
                 r = self.page_refs.get(p, 1) - 1
                 if r <= 0:
                     self.page_refs.pop(p, None)
-                    self.free_pages.append(p)
+                    if p < 0:
+                        self._compressed.pop(p, None)
+                    else:
+                        self.free_pages.append(p)
                 else:
                     self.page_refs[p] = r
         self.lengths.pop(owner, None)
         self._evictable.pop(owner, None)
+        self._last_touch.pop(owner, None)
+
+    def _compress_page_locked(self, phys: int) -> int:
+        """Move physical page ``phys`` into a compressed blob behind a
+        fresh negative sentinel id, splice the sentinel into every
+        chain referencing it, and return the page to the free list."""
+        raw = self.pages[:, phys].tobytes()
+        if self.scales is not None:
+            raw += self.scales[:, phys].tobytes()
+        blob = compress_page_bytes(raw)
+        sid = self._next_blob_id
+        self._next_blob_id -= 1
+        self._compressed[sid] = blob
+        self.page_refs[sid] = self.page_refs.pop(phys, 1)
+        for chain in self.page_tables.values():
+            for i, p in enumerate(chain):
+                if p == phys:
+                    chain[i] = sid
+        self.free_pages.append(phys)
+        self.pages_compressed += 1
+        ratio = len(blob) / max(len(raw), 1)
+        self.compressed_ratio_ewma = (
+            ratio if self.compressed_ratio_ewma is None
+            else 0.8 * self.compressed_ratio_ewma + 0.2 * ratio)
+        return sid
+
+    def _fill_from_blob_locked(self, sid: int, phys: int) -> None:
+        raw = decompress_page_bytes(self._compressed[sid])
+        kv_nbytes = self.pages[:, phys].nbytes
+        self.pages[:, phys] = np.frombuffer(
+            raw[:kv_nbytes],
+            self.pages.dtype).reshape(self.pages[:, phys].shape)
+        if self.scales is not None:
+            self.scales[:, phys] = np.frombuffer(
+                raw[kv_nbytes:], np.float32).reshape(2, self.page_size)
+
+    def _decompress_page_locked(self, sid: int,
+                                evicted: List[int]) -> int:
+        """Rehydrate sentinel ``sid`` into a fresh physical page,
+        splicing it back into every chain (refcount transfers whole:
+        sharers keep sharing the hot page)."""
+        evicted += self._reclaim_locked(1)
+        if not self.free_pages:
+            raise MemoryError("paged pool exhausted rehydrating "
+                              "compressed page")
+        fresh = self.free_pages.pop()
+        self._fill_from_blob_locked(sid, fresh)
+        del self._compressed[sid]
+        self.page_refs[fresh] = self.page_refs.pop(sid, 1)
+        for chain in self.page_tables.values():
+            for i, p in enumerate(chain):
+                if p == sid:
+                    chain[i] = fresh
+        self.pages_decompressed += 1
+        return fresh
 
     def _reclaim_locked(self, need: int) -> List[int]:
-        """Evict least-recently-used evictable owners until ``need``
-        free pages exist (or none are left).  Returns the evicted
-        owners; the caller fires ``on_evict`` after releasing the
-        lock."""
+        """Free pages until ``need`` exist: first compress evictable
+        owners' exclusively-owned pages in place (when cold-page
+        compression is enabled — the entry survives, only colder),
+        then LRU-evict whole owners.  Returns the evicted owners; the
+        caller fires ``on_evict`` after releasing the lock."""
         evicted: List[int] = []
+        if self.cold_page_compress_after > 0 \
+                and len(self.free_pages) < need:
+            for owner in sorted(self._evictable,
+                                key=self._evictable.get):
+                if len(self.free_pages) >= need:
+                    break
+                for layer in range(self.num_layers):
+                    for p in list(self.page_tables.get((owner, layer), [])):
+                        if p >= 0 and self.page_refs.get(p, 1) <= 1:
+                            self._compress_page_locked(p)
+                            if len(self.free_pages) >= need:
+                                break
+                    if len(self.free_pages) >= need:
+                        break
         while len(self.free_pages) < need and self._evictable:
             owner = min(self._evictable, key=self._evictable.get)
             self._free_locked(owner)
@@ -208,6 +332,7 @@ class PagedKVPool:
                         self.page_refs[p] = 1
                     self.page_tables[(request_id, layer)] = chain
                 self.lengths[request_id] = 0
+                self._touch_owner(request_id)
         finally:
             self._notify(evicted)
 
@@ -246,6 +371,8 @@ class PagedKVPool:
                 for p in shared:
                     self.page_refs[p] = self.page_refs.get(p, 1) + 1
             self.lengths[dst_id] = tokens
+            if self.cold_page_compress_after > 0:
+                self._last_touch[dst_id] = time.monotonic()
 
     def mark_evictable(self, owner: int) -> None:
         """Register ``owner`` with the LRU — the pool may reclaim its
@@ -268,31 +395,114 @@ class PagedKVPool:
 
     @property
     def page_bytes(self) -> int:
-        """Bytes of one physical page (K + V)."""
-        return int(self.pages[0, 0].nbytes) * 2
+        """Bytes of one physical page as stored (K + V at the stored
+        element size, plus the page's scale rows when quantized) — the
+        byte cost capacity predicates and byte gauges should charge."""
+        per = int(self.pages[0, 0].nbytes) * 2
+        if self.scales is not None:
+            per += int(self.scales[:, 0].nbytes)
+        return per
+
+    @property
+    def kv_dtype_bytes(self) -> int:
+        """Stored bytes per KV element (1 for int8, 4 for fp32)."""
+        return int(self.pages.dtype.itemsize)
+
+    @property
+    def has_compressed(self) -> bool:
+        """Advisory lock-free check for any cold compressed page."""
+        return bool(self._compressed)
+
+    def byte_stats(self) -> Dict[str, int]:
+        """Host-pool byte accounting: hot (occupied physical pages),
+        compressed (cold blob bytes), free (unoccupied physical)."""
+        num_pages = self.pages.shape[1]
+        pb = self.page_bytes
+        free = len(self.free_pages)
+        comp = sum(len(b) for b in self._compressed.values())
+        return {"hot": (num_pages - free) * pb, "compressed": comp,
+                "free": free * pb}
+
+    def ensure_hot(self, owner: int) -> None:
+        """Rehydrate every compressed page in ``owner``'s chains so
+        readers (host attention, gather) see physical page ids."""
+        if not self._compressed:
+            return
+        evicted: List[int] = []
+        try:
+            with self._alloc_lock:
+                for layer in range(self.num_layers):
+                    chain = self.page_tables.get((owner, layer), [])
+                    for p in list(chain):
+                        if p < 0:
+                            self._decompress_page_locked(p, evicted)
+        finally:
+            self._notify(evicted)
+
+    def maybe_compress_cold(self, now: Optional[float] = None) -> int:
+        """Compress exclusively-owned pages of owners idle past
+        ``cold_page_compress_after`` seconds.  Called periodically by
+        the engine; returns the number of pages compressed."""
+        if self.cold_page_compress_after <= 0:
+            return 0
+        now = time.monotonic() if now is None else now
+        count = 0
+        with self._alloc_lock:
+            for owner, ts in list(self._last_touch.items()):
+                if now - ts < self.cold_page_compress_after:
+                    continue
+                for layer in range(self.num_layers):
+                    for p in list(self.page_tables.get((owner, layer), [])):
+                        if p >= 0 and self.page_refs.get(p, 1) <= 1:
+                            self._compress_page_locked(p)
+                            count += 1
+        return count
+
+    def _touch_owner(self, owner: int) -> None:
+        if self.cold_page_compress_after > 0:
+            self._last_touch[owner] = time.monotonic()
 
     def _writable_page(self, request_id: int, layer: int,
                        page_idx: int) -> int:
         """The physical page backing ``chain[page_idx]``, copied to a
-        fresh exclusively-owned page first when shared (copy-on-write).
-        Every write path funnels through here so refcount-shared pages
-        are never mutated in place."""
+        fresh exclusively-owned page first when shared (copy-on-write)
+        and rehydrated first when compressed.  Every write path funnels
+        through here so refcount-shared pages are never mutated in
+        place."""
         chain = self.page_tables[(request_id, layer)]
         page = chain[page_idx]
-        if self.page_refs.get(page, 1) <= 1:
+        if page >= 0 and self.page_refs.get(page, 1) <= 1:
             return page
         evicted: List[int] = []
         try:
             with self._alloc_lock:
+                page = chain[page_idx]   # may have changed before lock
+                if page < 0:
+                    if self.page_refs.get(page, 1) <= 1:
+                        return self._decompress_page_locked(page, evicted)
+                    # shared compressed page: private hot copy for this
+                    # chain, blob stays for the other sharers
+                    evicted += self._reclaim_locked(1)
+                    if not self.free_pages:
+                        raise MemoryError(
+                            "paged pool exhausted on copy-on-write")
+                    fresh = self.free_pages.pop()
+                    self._fill_from_blob_locked(page, fresh)
+                    self.page_refs[fresh] = 1
+                    self.page_refs[page] -= 1
+                    chain[page_idx] = fresh
+                    return fresh
                 if self.page_refs.get(page, 1) <= 1:
                     return page           # lost the race: now exclusive
-                evicted = self._reclaim_locked(1)
+                evicted += self._reclaim_locked(1)
                 if not self.free_pages:
                     raise MemoryError("paged pool exhausted on copy-on-write")
                 if self.page_refs.get(page, 1) <= 1:
                     return page           # reclaim released the sharer
                 fresh = self.free_pages.pop()
                 self.pages[:, fresh] = self.pages[:, page]
+                if self.scales is not None:
+                    self.scales[:, fresh] = self.scales[:, page]
                 self.page_refs[fresh] = 1
                 self.page_refs[page] -= 1
                 chain[page_idx] = fresh
@@ -314,8 +524,17 @@ class PagedKVPool:
             self.extend(request_id, 1)
         page = self._writable_page(request_id, layer, page_idx)
         slot = pos % self.page_size
-        self.pages[0, page, slot] = k
-        self.pages[1, page, slot] = v
+        if self.quantized:
+            qk, sk = quantize_kv_rows(np.asarray(k, np.float32)[None])
+            qv, sv = quantize_kv_rows(np.asarray(v, np.float32)[None])
+            self.pages[0, page, slot] = qk[0]
+            self.pages[1, page, slot] = qv[0]
+            self.scales[0, page, slot] = sk[0]
+            self.scales[1, page, slot] = sv[0]
+        else:
+            self.pages[0, page, slot] = k
+            self.pages[1, page, slot] = v
+        self._touch_owner(request_id)
         if advance:
             self.lengths[request_id] = pos + 1
 
@@ -328,6 +547,10 @@ class PagedKVPool:
         chain = self.page_tables[(request_id, layer)]
         if self.pages_short(start + t, len(chain)):
             self.extend(request_id, t)
+        sk = sv = None
+        if self.quantized:
+            k, sk = quantize_kv_rows(np.asarray(k, np.float32))
+            v, sv = quantize_kv_rows(np.asarray(v, np.float32))
         off = 0
         while off < t:
             pos = start + off
@@ -337,7 +560,11 @@ class PagedKVPool:
             span = min(self.page_size - slot, t - off)
             self.pages[0, page, slot:slot + span] = k[off:off + span]
             self.pages[1, page, slot:slot + span] = v[off:off + span]
+            if self.quantized:
+                self.scales[0, page, slot:slot + span] = sk[off:off + span]
+                self.scales[1, page, slot:slot + span] = sv[off:off + span]
             off += span
+        self._touch_owner(request_id)
         if advance:
             self.lengths[request_id] = start + t
 
@@ -361,31 +588,44 @@ class PagedKVPool:
             if page_idx >= len(chain):
                 self.extend(rid, int(positions[i]) + 1 - self.lengths[rid])
             pages[i] = self._writable_page(rid, layer, page_idx)
+        if self.quantized:
+            k, sk = quantize_kv_rows(np.asarray(k, np.float32))
+            v, sv = quantize_kv_rows(np.asarray(v, np.float32))
+            self.scales[0, pages, positions % ps] = sk
+            self.scales[1, pages, positions % ps] = sv
         self.pages[0, pages, positions % ps] = k
         self.pages[1, pages, positions % ps] = v
+        if self.cold_page_compress_after > 0:
+            now = time.monotonic()
+            for rid in request_ids:
+                self._last_touch[rid] = now
 
     def gather(self, request_id: int, layer: int,
                n: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
-        """Materialize (K, V) of shape (len, kv_heads, head_dim) —
+        """Materialize (K, V) of shape (len, kv_heads, head_dim) in the
+        *logical* dtype (dequantized when the pool stores int8) —
         optionally only the first ``n`` positions (a truncated
-        prefix-cache hit)."""
+        prefix-cache hit).  Compressed pages rehydrate transparently."""
         total = self.lengths[request_id]
         n = total if n is None else min(n, total)
         chain = self.page_tables[(request_id, layer)]
-        full = n // self.page_size
-        parts_k, parts_v = [], []
-        for i in range(full):
-            parts_k.append(self.pages[0, chain[i]])
-            parts_v.append(self.pages[1, chain[i]])
-        rem = n % self.page_size
-        if rem:
-            parts_k.append(self.pages[0, chain[full], :rem])
-            parts_v.append(self.pages[1, chain[full], :rem])
-        if not parts_k:
+        npages = -(-n // self.page_size)
+        if any(p < 0 for p in chain[:npages]):
+            self.ensure_hot(request_id)
+            chain = self.page_tables[(request_id, layer)]
+        self._touch_owner(request_id)
+        if n == 0:
             kv_heads, head_dim = self.pages.shape[-2:]
-            empty = np.zeros((0, kv_heads, head_dim), self.pages.dtype)
+            empty = np.zeros((0, kv_heads, head_dim), self.logical_dtype)
             return empty, empty.copy()
-        return np.concatenate(parts_k, 0), np.concatenate(parts_v, 0)
+        idx = np.asarray(chain[:npages], np.int64)
+        kv_heads, head_dim = self.pages.shape[-2:]
+        k = self.pages[0, idx].reshape(-1, kv_heads, head_dim)[:n]
+        v = self.pages[1, idx].reshape(-1, kv_heads, head_dim)[:n]
+        if self.scales is not None:
+            k = dequantize_kv_rows(k, self.scales[0, idx].reshape(-1)[:n])
+            v = dequantize_kv_rows(v, self.scales[1, idx].reshape(-1)[:n])
+        return k, v
 
     def free(self, request_id: int) -> None:
         """Drop an owner: refcounts decrement, exclusively-owned pages

@@ -57,6 +57,11 @@ class ServerConfig:
     # EngineConfig; docs/serving_api.md "Performance")
     host_workers: int = 0
     bucketed_prefill: bool = True
+    # host KV tier precision ("fp32" | "int8") and cold-page
+    # compression idle threshold in seconds (0 = off); see
+    # docs/serving_api.md "Host KV precision and compression"
+    host_kv_dtype: str = "fp32"
+    cold_page_compress_after: float = 0.0
     # chunked prefill co-scheduled with decode: per-iteration prompt
     # token budget while decode is active (the scheduler may grant
     # less, sizing the chunk to the host-attention window, or the
@@ -380,6 +385,7 @@ class InferenceServer:
                 self.engine._executor.busy_time
             self.engine.stats.host_transfer_time = \
                 self.engine._executor.transfer_time
+        self.engine._refresh_host_pool_gauges()
         return self.engine.stats
 
     @property

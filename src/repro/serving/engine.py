@@ -101,7 +101,8 @@ class Engine:
             base = resolve_perf_model(
                 self.e.perf_model, cfg, platform=self.e.platform,
                 profile_cache=self.e.profile_cache,
-                profile_grid=self.e.profile_grid)
+                profile_grid=self.e.profile_grid,
+                host_kv_dtype=self.e.host_kv_dtype)
             self._calibrator = OnlineCalibrator(base)
             self.stats.perf_model_spec = self.e.perf_model
             self.scheduler = ApexScheduler(
@@ -164,9 +165,12 @@ class Engine:
         self._executor = None
         if self.e.enable_offload:
             self._overlap = OverlapController(cfg)
-            pool = PagedKVPool(self.e.host_pool_pages, self.e.page_size,
-                               cfg.num_attn_layers, cfg.num_kv_heads,
-                               cfg.resolved_head_dim)
+            pool = PagedKVPool(
+                self.e.host_pool_pages, self.e.page_size,
+                cfg.num_attn_layers, cfg.num_kv_heads,
+                cfg.resolved_head_dim,
+                host_kv_dtype=self.e.host_kv_dtype,
+                cold_page_compress_after=self.e.cold_page_compress_after)
             pool.fault_hook = (self._faults.on_pool_alloc
                                if self._faults is not None else None)
             self._executor = HostExecutor(cfg, pool,
@@ -595,6 +599,22 @@ class Engine:
         self.stats.prefix_device_bytes = self._prefix.device_bytes(self)
         self.stats.prefix_host_bytes = self._prefix.host_bytes(self)
 
+    def _refresh_host_pool_gauges(self) -> None:
+        """Host-pool byte accounting (hot / compressed / free at the
+        pool's *stored* dtype) plus the cold-page compression counters,
+        copied onto the stats surface for snapshot()//metrics."""
+        if self._executor is None:
+            return
+        pool = self._executor.pool
+        b = pool.byte_stats()
+        self.stats.host_pool_hot_bytes = b["hot"]
+        self.stats.host_pool_compressed_bytes = b["compressed"]
+        self.stats.host_pool_free_bytes = b["free"]
+        self.stats.host_kv_dtype_bytes = pool.kv_dtype_bytes
+        self.stats.host_pages_compressed = pool.pages_compressed
+        self.stats.host_pages_decompressed = pool.pages_decompressed
+        self.stats.host_compressed_ratio_ewma = pool.compressed_ratio_ewma
+
     # --- cohort management ------------------------------------------------
     def _ensure_cohort(self) -> Optional[Cohort]:
         """(Re)build the host cohort — ONLY at token boundaries
@@ -670,6 +690,10 @@ class Engine:
 
     # --- one engine iteration ------------------------------------------------
     def step(self) -> None:
+        if self._executor is not None and self.e.cold_page_compress_after > 0:
+            # outside the timed section: compression is pool maintenance,
+            # not iteration work the calibrator should learn from
+            self._executor.pool.maybe_compress_cold()
         t0 = time.perf_counter()
         if self._faults is not None:
             spike = self._faults.on_engine_step()
@@ -992,6 +1016,7 @@ class Engine:
         if self._executor is not None:
             self.stats.host_busy_time = self._executor.busy_time
             self.stats.host_transfer_time = self._executor.transfer_time
+        self._refresh_host_pool_gauges()
         return self.stats
 
     def shutdown(self) -> None:

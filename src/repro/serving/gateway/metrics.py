@@ -82,6 +82,27 @@ _ENGINE_METRICS: Dict[str, Tuple[str, str, str, Dict[str, str]]] = {
     "prefix_host_bytes": ("prefix_cache_resident_bytes", "gauge",
                           "Cached prefix KV bytes resident per tier",
                           {"tier": "host"}),
+    "host_pool_hot_bytes": ("host_pool_bytes", "gauge",
+                            "Host KV pool bytes by state at the stored "
+                            "dtype", {"state": "hot"}),
+    "host_pool_compressed_bytes": ("host_pool_bytes", "gauge",
+                                   "Host KV pool bytes by state at the "
+                                   "stored dtype", {"state": "compressed"}),
+    "host_pool_free_bytes": ("host_pool_bytes", "gauge",
+                             "Host KV pool bytes by state at the stored "
+                             "dtype", {"state": "free"}),
+    "host_kv_dtype_bytes": ("host_kv_dtype_bytes", "gauge",
+                            "Bytes per stored host-KV element (4=fp32, "
+                            "1=int8)", {}),
+    "host_pages_compressed": ("host_pages_compressed_total", "counter",
+                              "Cold host KV pages compressed in place",
+                              {}),
+    "host_pages_decompressed": ("host_pages_decompressed_total", "counter",
+                                "Compressed host KV pages rehydrated on "
+                                "touch", {}),
+    "host_compressed_ratio_ewma": ("host_compressed_ratio_ewma", "gauge",
+                                   "EWMA of compressed/raw page size "
+                                   "ratio", {}),
     "ttft_p50_seconds": ("ttft_seconds", "gauge",
                          "Time to first token", {"quantile": "0.5"}),
     "ttft_p95_seconds": ("ttft_seconds", "gauge",

@@ -157,6 +157,20 @@ class EngineConfig:
     # sliding window (seconds) over pressure events for the
     # graceful-degradation ladder level reported on /health
     degradation_window: float = 5.0
+    # --- host-KV precision and cold-page compression -----------------
+    # stored dtype of the paged host pool: "fp32" (exact, the device
+    # dtype) or "int8" (symmetric per-token quantization with fp32
+    # scales; ~4x more resident tokens per byte of host RAM,
+    # proportionally cheaper migrations, and the perf model prices
+    # t_catt/t_migrate at the stored size).  int8 keeps tokens
+    # identical on the pinned tier-1 workloads; logits drift within
+    # the bounded-drift test's envelope.
+    host_kv_dtype: str = "fp32"
+    # seconds a host-pool owner may sit untouched before its pages are
+    # zstd-compressed in place (transparently decompressed on next
+    # touch; the reclaim path also prefers compressing evictable
+    # owners' pages over evicting them).  0 disables compression.
+    cold_page_compress_after: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +282,21 @@ class EngineStats:
     prefix_demotions: int = 0
     prefix_device_bytes: int = 0
     prefix_host_bytes: int = 0
+    # --- host-pool byte accounting (quantized KV tier) ---------------
+    # stored bytes resident in the paged host pool by state (hot =
+    # occupied physical pages, compressed = cold zstd blobs, free =
+    # unoccupied physical pages), the pool's stored bytes per KV
+    # element (1 = int8, 4 = fp32), and cold-page compression activity
+    # (counters + lossless-codec ratio EWMA, None until the first
+    # compression).  The engine refreshes these from
+    # ``PagedKVPool.byte_stats()`` each stats sync.
+    host_pool_hot_bytes: int = 0
+    host_pool_compressed_bytes: int = 0
+    host_pool_free_bytes: int = 0
+    host_kv_dtype_bytes: int = 0
+    host_pages_compressed: int = 0
+    host_pages_decompressed: int = 0
+    host_compressed_ratio_ewma: Optional[float] = None
     # latency distributions over retired requests: time-to-first-token
     # and per-request mean inter-token latency (seconds)
     ttft_samples: List[float] = dataclasses.field(default_factory=list)
@@ -376,6 +405,14 @@ class EngineStats:
             "prefix_demotions": float(self.prefix_demotions),
             "prefix_device_bytes": float(self.prefix_device_bytes),
             "prefix_host_bytes": float(self.prefix_host_bytes),
+            "host_pool_hot_bytes": float(self.host_pool_hot_bytes),
+            "host_pool_compressed_bytes": float(
+                self.host_pool_compressed_bytes),
+            "host_pool_free_bytes": float(self.host_pool_free_bytes),
+            "host_kv_dtype_bytes": float(self.host_kv_dtype_bytes),
+            "host_pages_compressed": float(self.host_pages_compressed),
+            "host_pages_decompressed": float(self.host_pages_decompressed),
+            "host_compressed_ratio_ewma": self.host_compressed_ratio_ewma,
             "ttft_p50_seconds": self.ttft_p50,
             "ttft_p95_seconds": self.ttft_p95,
             "itl_p50_seconds": self.itl_p50,

@@ -27,7 +27,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import analytical, placement
-from repro.core.perf_model import AnalyticPerfModel, ModelCosts, PLATFORMS
+from repro.core.perf_model import (AnalyticPerfModel, ModelCosts, PLATFORMS,
+                                   host_kv_el_bytes)
 from repro.models.config import ModelConfig
 from repro.serving.request import Phase, Request
 
@@ -68,6 +69,10 @@ class SimConfig:
     # the SAME repro.core.placement predicate the engine prices with
     prefix_cache: bool = True
     prefix_cache_entries: int = 32
+    # host-tier stored KV precision (mirrors EngineConfig.host_kv_dtype):
+    # int8 quadruples host-resident token capacity and prices t_catt /
+    # t_migrate / prompt-offload transfers at the stored element size
+    host_kv_dtype: str = "fp32"
 
 
 class ServingSimulator:
@@ -76,15 +81,20 @@ class ServingSimulator:
         self.cfg = cfg
         self.sim = sim or SimConfig()
         self.platform = PLATFORMS[platform]
-        self.costs = ModelCosts.from_config(cfg)
+        self.costs = ModelCosts.from_config(
+            cfg, host_kv_bytes_per_el=host_kv_el_bytes(
+                self.sim.host_kv_dtype))
         self.pm = AnalyticPerfModel(self.platform, self.costs)
         param_bytes = cfg.param_count() * 2
         device_free = max(self.platform.device_mem * self.sim.kv_headroom
                           - param_bytes, 0.0)
         self.device_kv_tokens = int(device_free
                                     / max(self.costs.kv_bytes_per_pos, 1))
-        self.host_kv_tokens = int(self.platform.host_mem * 0.8
-                                  / max(self.costs.kv_bytes_per_pos, 1))
+        # host capacity at the *stored* element size: the same DRAM
+        # budget holds ~4x the tokens when the pool is int8
+        self.host_kv_tokens = int(
+            self.platform.host_mem * 0.8
+            / max(self.costs.host_kv_bytes_per_pos, 1))
         if self.device_kv_tokens <= 0:
             raise ValueError(
                 f"{cfg.name} does not fit {platform} device memory")
@@ -92,8 +102,9 @@ class ServingSimulator:
 
     # ------------------------------------------------------------------
     def _host_rate_per_layer(self) -> float:
-        """Host KV positions/s counting ONE attention layer."""
-        return self.platform.host_bw / self.costs.kv_bytes_per_pos_layer
+        """Host KV positions/s counting ONE attention layer, at the
+        stored (possibly quantized) element size."""
+        return self.platform.host_bw / self.costs.host_kv_bytes_per_pos_layer
 
     def _io_bytes_per_req_layer(self) -> float:
         return (self.costs.qkv_transfer_bytes_per_req_layer
@@ -292,8 +303,9 @@ class ServingSimulator:
                 prefill_q.pop(0)
                 if getattr(r, "_host", False):
                     # offloaded (uncached) prompt KV crosses the link
+                    # in its host-stored (possibly quantized) form
                     iter_time += self.pm.t_transfer(
-                        charge * self.costs.kv_bytes_per_pos)
+                        charge * self.costs.host_kv_bytes_per_pos)
             if prefill_tokens:
                 iter_time += self.pm.t_prefill(prefill_tokens, prefill_tokens)
 

@@ -36,9 +36,10 @@ def _check_invariants(pool):
     assert len(pool.free_pages) + len(occ) == num_pages
 
 
-def _pool(num_pages=32, page_size=4, num_layers=2):
+def _pool(num_pages=32, page_size=4, num_layers=2, host_kv_dtype="fp32"):
     return PagedKVPool(num_pages=num_pages, page_size=page_size,
-                       num_layers=num_layers, kv_heads=1, head_dim=2)
+                       num_layers=num_layers, kv_heads=1, head_dim=2,
+                       host_kv_dtype=host_kv_dtype)
 
 
 def _fill(pool, rid, tokens, rng):
@@ -132,14 +133,18 @@ def test_lru_reclaims_oldest_evictable_and_notifies():
 
 # --- property test: random op interleavings ------------------------------
 
-def _random_op_sequence(seed, steps=120):
+def _random_op_sequence(seed, steps=120, host_kv_dtype="fp32"):
     """Drive a small pool through a random interleaving of the ops the
     serving engine performs — admit, decode-append, publish (fork to a
     cache owner), hit (fork from a cache owner), retire, drop — and
     assert after every step that page accounting balances and that no
-    cached prefix is ever mutated in place."""
+    cached prefix is ever mutated in place.  The immutability check is
+    exact equality even on the int8 pool: a cached prefix's codes and
+    scale rows must never be requantized in place, so gather (codes x
+    scales) reproduces the published snapshot bit for bit."""
     rng = np.random.default_rng(seed)
-    pool = _pool(num_pages=24, page_size=4, num_layers=2)
+    pool = _pool(num_pages=24, page_size=4, num_layers=2,
+                 host_kv_dtype=host_kv_dtype)
     evicted = []
     pool.on_evict = evicted.append
     live, snapshots = [], {}
@@ -202,11 +207,18 @@ def test_pool_invariants_property(seed):
     _random_op_sequence(seed)
 
 
-def test_pool_invariants_seeded():
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pool_invariants_property_quantized(seed):
+    _random_op_sequence(seed, host_kv_dtype="int8")
+
+
+@pytest.mark.parametrize("host_kv_dtype", ["fp32", "int8"])
+def test_pool_invariants_seeded(host_kv_dtype):
     """The same property on fixed seeds — runs even where hypothesis
     is unavailable (conftest stubs ``@given`` into a skip)."""
     for seed in range(8):
-        _random_op_sequence(seed)
+        _random_op_sequence(seed, host_kv_dtype=host_kv_dtype)
 
 
 # --- the shared pricing predicate ----------------------------------------
